@@ -1,0 +1,26 @@
+"""Shared helpers for the benchmark suite (one module per paper figure)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3):
+    """Median wall time of a jit'd call in microseconds (CPU timings are
+    functional only — TPU numbers come from the dry-run roofline)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.2f},{derived}")

@@ -1,0 +1,35 @@
+"""Fig. 1: runtime breakdown (linear vs element-wise vs other) vs seq len.
+
+Reproduced on the modeled Mamba-GPU baseline (the paper's profiling
+platform).  Checks the headline claim: element-wise share exceeds 60% by
+L = 2048.
+"""
+from __future__ import annotations
+
+from repro import configs
+from repro.core import marca_model as mm, op_graph
+from benchmarks.common import emit
+
+
+def run():
+    cfg = configs.get_config("mamba-2.8b")
+    rows = []
+    for L in [64, 128, 256, 512, 1024, 2048, 4096]:
+        ops = op_graph.mamba_model_ops(cfg, L)
+        t = mm.model_time(ops, mm.GPU)
+        tot = t["seconds"]
+        ew = (t["by_group"].get("element-wise", 0)
+              + t["by_group"].get("nonlinear", 0)) / tot
+        lin = t["by_group"].get("linear", 0) / tot
+        rows.append((L, lin, ew))
+        emit(f"fig1.breakdown.L{L}", tot * 1e6,
+             f"linear={lin:.2f};elementwise={ew:.2f}")
+    ew_2048 = dict((r[0], r[2]) for r in rows)[2048]
+    ok = ew_2048 > 0.60
+    emit("fig1.claim.ew_gt_60pct_at_2048", 0.0,
+         f"ew_share={ew_2048:.2f};paper>0.60;{'OK' if ok else 'MISS'}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

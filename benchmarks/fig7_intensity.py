@@ -1,0 +1,52 @@
+"""Fig. 7: compute intensity & read/write ratio spread across op classes.
+
+Checks the paper's claims: ~3 orders of magnitude compute-intensity
+variance and >3 orders of read/write-ratio variance between linear and
+element-wise ops.
+"""
+from __future__ import annotations
+
+import math
+
+from repro import configs
+from repro.core import op_graph
+from benchmarks.common import emit
+
+
+def run():
+    cfg = configs.get_config("mamba-2.8b")
+    spreads = []
+    for L in [1, 128, 2048]:
+        ops = op_graph.mamba_block_ops(cfg, L)
+        by_cls: dict = {}
+        for op in ops:
+            by_cls.setdefault(op.cls, []).append(op)
+        intens = {}
+        rw = {}
+        for cls, lst in by_cls.items():
+            fl = sum(o.flops for o in lst)
+            rd = sum(o.read for o in lst)
+            wr = sum(o.write for o in lst)
+            intens[cls] = fl / max(rd + wr, 1)
+            rw[cls] = rd / max(wr, 1)
+            emit(f"fig7.L{L}.{cls}", 0.0,
+                 f"intensity={intens[cls]:.3f};rw_ratio={rw[cls]:.3f}")
+        i_spread = math.log10(max(intens.values()) /
+                              max(min(intens.values()), 1e-12))
+        r_spread = math.log10(max(rw.values()) /
+                              max(min(rw.values()), 1e-12))
+        spreads.append((L, i_spread, r_spread))
+        emit(f"fig7.L{L}.spread", 0.0,
+             f"intensity_decades={i_spread:.1f};rw_decades={r_spread:.1f}")
+    # paper: ~3 decades of intensity variance, >3 decades of r/w variance
+    # (the r/w extreme is the decode/GEMV regime, L=1)
+    ok = (max(s[1] for s in spreads) >= 2.5
+          and max(s[2] for s in spreads) >= 3.0)
+    emit("fig7.claim.spreads", 0.0,
+         f"max_intensity_decades={max(s[1] for s in spreads):.1f};"
+         f"max_rw_decades={max(s[2] for s in spreads):.1f};paper~3/3;"
+         f"{'OK' if ok else 'MISS'}")
+
+
+if __name__ == "__main__":
+    run()

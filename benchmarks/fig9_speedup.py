@@ -1,0 +1,52 @@
+"""Fig. 9: MARCA speedup & energy efficiency vs Mamba-CPU / Mamba-GPU,
+across the Mamba family x sequence lengths (cycle-approximate models,
+constants documented in core/marca_model.py + EXPERIMENTS.md).
+
+Paper targets: speedup up to 463.22x / 11.66x (CPU / GPU), average
+194.26x / 4.93x; energy up to 9761.42x / 242.52x, average 3415.55x /
+42.49x.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro import configs
+from repro.configs.zoo import MAMBA_FAMILY
+from repro.core import marca_model as mm, op_graph
+from benchmarks.common import emit
+
+SEQ_LENS = [64, 256, 1024, 2048, 4096]
+
+
+def run():
+    s_cpu, s_gpu, e_cpu, e_gpu = [], [], [], []
+    for name in MAMBA_FAMILY:
+        cfg = configs.get_config(name)
+        for L in SEQ_LENS:
+            ops = op_graph.mamba_model_ops(cfg, L)
+            t_marca = mm.model_time(ops, mm.MARCA)["seconds"]
+            sc = mm.speedup(ops, mm.CPU)
+            sg = mm.speedup(ops, mm.GPU)
+            ec = mm.energy_ratio(ops, mm.CPU)
+            eg = mm.energy_ratio(ops, mm.GPU)
+            s_cpu.append(sc); s_gpu.append(sg)
+            e_cpu.append(ec); e_gpu.append(eg)
+            emit(f"fig9.{name}.L{L}", t_marca * 1e6,
+                 f"speedup_cpu={sc:.1f};speedup_gpu={sg:.2f};"
+                 f"energy_cpu={ec:.0f};energy_gpu={eg:.1f}")
+    emit("fig9.summary.speedup_cpu", 0.0,
+         f"max={max(s_cpu):.1f};avg={np.mean(s_cpu):.1f};"
+         f"paper_max=463.22;paper_avg=194.26")
+    emit("fig9.summary.speedup_gpu", 0.0,
+         f"max={max(s_gpu):.2f};avg={np.mean(s_gpu):.2f};"
+         f"paper_max=11.66;paper_avg=4.93")
+    emit("fig9.summary.energy_cpu", 0.0,
+         f"max={max(e_cpu):.0f};avg={np.mean(e_cpu):.0f};"
+         f"paper_max=9761;paper_avg=3416")
+    emit("fig9.summary.energy_gpu", 0.0,
+         f"max={max(e_gpu):.1f};avg={np.mean(e_gpu):.1f};"
+         f"paper_max=242.5;paper_avg=42.5")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Microbenchmarks of the JAX/Pallas layers (functional timings on CPU;
+TPU perf comes from the dry-run roofline, EXPERIMENTS.md §Roofline).
+
+Compares the scan implementations (the MARCA fusion story at XLA level):
+assoc (unfused baseline, O(L*d*n) traffic) vs chunked (state-resident)
+vs the Pallas kernel (interpret mode — correctness/lowering path only).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import selective_scan as css
+from repro.kernels import ops as kops
+from benchmarks.common import emit, timed
+
+
+def _inputs(b=2, L=512, d=256, n=16):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(b, L, d)).astype(np.float32))
+    dt = jax.nn.softplus(jnp.asarray(
+        rng.normal(size=(b, L, d)).astype(np.float32)))
+    A = -jnp.exp(jnp.asarray(rng.normal(size=(d, n)).astype(np.float32))
+                 * 0.5)
+    B = jnp.asarray(rng.normal(size=(b, L, n)).astype(np.float32))
+    C = jnp.asarray(rng.normal(size=(b, L, n)).astype(np.float32))
+    D = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+    z = jnp.asarray(rng.normal(size=(b, L, d)).astype(np.float32))
+    return x, dt, A, B, C, D, z
+
+
+def run():
+    args = _inputs()
+
+    for impl in ["seq", "assoc", "chunked"]:
+        fn = jax.jit(lambda *a, _i=impl: css.get_scan(_i)(*a))
+        us = timed(fn, *args)
+        emit(f"kernels.scan.{impl}", us, "b2xL512xd256xn16,f32,xla-cpu")
+
+    # element-wise approx kernels vs exact
+    x = jnp.asarray(np.random.default_rng(1).normal(
+        size=(1024, 1024)).astype(np.float32))
+    for name, fn in [
+            ("exp.exact", jax.jit(jnp.exp)),
+            ("exp.ours_jnp", jax.jit(lambda v: kops.exp(v, "ours"))),
+            ("silu.exact", jax.jit(jax.nn.silu)),
+            ("silu.ours_jnp", jax.jit(lambda v: kops.silu(v, "ours")))]:
+        emit(f"kernels.{name}", timed(fn, x), "1Melem,f32,xla-cpu")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,106 @@
+"""Roofline report (deliverable g): reads experiments/dryrun/*.json and
+renders the per-(arch x shape x mesh) three-term table + dominant
+bottleneck + what-would-move-it-down, in markdown (EXPERIMENTS.md §Roofline)
+and as CSV rows for benchmarks.run.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+_FIX_HINTS = {
+    ("memory", "train"): ("bf16 score/softmax tensors + flash-attention "
+                          "kernel (kills fusion-boundary spills)"),
+    ("memory", "prefill"): ("flash/fused attention + bf16 intermediates; "
+                            "avoid f32 logits materialization"),
+    ("memory", "decode"): ("weight-stationary sharding (drop FSDP gathers "
+                           "at decode); fuse the per-token EW chain"),
+    ("compute", "train"): "less remat recompute; larger per-chip batch",
+    ("compute", "prefill"): "MXU-aligned tiles; bf16 everywhere",
+    ("compute", "decode"): "batch more requests per step",
+    ("collective", "train"): ("reduce-scatter+all-gather instead of "
+                              "all-reduce; overlap FSDP gathers with scan"),
+    ("collective", "prefill"): "TP-block collectives in bf16",
+    ("collective", "decode"): "replicate small weights; kill per-token AG",
+}
+
+
+def load_cells(tag: str = "") -> list[dict]:
+    cells = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(p) as f:
+            d = json.load(f)
+        if d.get("tag", "") != tag:
+            continue
+        cells.append(d)
+    return cells
+
+
+def _fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def markdown_table(cells, mesh="single") -> str:
+    from repro.configs import shapes as shp
+    rows = ["| arch | shape | status | compute | memory | collective | "
+            "dominant | useful/HLO | roofline frac | mem/chip | fix |",
+            "|---|---|---|---|---|---|---|---|---|---|---|"]
+    kind_of = {k: v.kind for k, v in shp.SHAPES.items()}
+    for c in cells:
+        if c["mesh"] != mesh:
+            continue
+        if c["status"] == "skipped":
+            rows.append(f"| {c['arch']} | {c['shape']} | SKIP "
+                        f"({c['reason'][:40]}...) | — | — | — | — | — | — "
+                        f"| — |")
+            continue
+        if c["status"] != "ok":
+            rows.append(f"| {c['arch']} | {c['shape']} | ERROR | — | — | — "
+                        f"| — | — | — | — | {c.get('error', '')[:60]} |")
+            continue
+        r = c["roofline"]
+        kind = kind_of[c["shape"]]
+        fix = _FIX_HINTS.get((r["dominant"], kind), "")
+        frac = (r["roofline_fraction"] if kind != "decode"
+                else c.get("memory_fraction", 0.0))
+        frac_s = (f"{frac:.3f}" if kind != "decode"
+                  else f"{frac:.3f} (mem)")
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | ok "
+            f"| {_fmt_s(r['compute_s'])} | {_fmt_s(r['memory_s'])} "
+            f"| {_fmt_s(r['collective_s'])} | **{r['dominant']}** "
+            f"| {r['useful_flops_ratio']:.2f} | {frac_s} "
+            f"| {c.get('mem_per_device_gb', '?')}GB | {fix} |")
+    return "\n".join(rows)
+
+
+def run():
+    from benchmarks.common import emit
+    cells = load_cells()
+    for c in cells:
+        if c["status"] != "ok":
+            emit(f"roofline.{c['arch']}.{c['shape']}.{c['mesh']}", 0.0,
+                 f"status={c['status']}")
+            continue
+        r = c["roofline"]
+        emit(f"roofline.{c['arch']}.{c['shape']}.{c['mesh']}",
+             r["compute_s"] * 1e6 if r else 0.0,
+             f"dominant={r['dominant']};compute_s={r['compute_s']:.4f};"
+             f"memory_s={r['memory_s']:.4f};"
+             f"collective_s={r['collective_s']:.4f};"
+             f"useful_ratio={r['useful_flops_ratio']:.3f};"
+             f"frac={r['roofline_fraction']:.4f}")
+
+
+if __name__ == "__main__":
+    import sys
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    print(markdown_table(load_cells(), mesh))

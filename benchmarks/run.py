@@ -1,0 +1,36 @@
+"""Benchmark runner (deliverable d): one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  fig1  runtime breakdown vs seq len          (paper Fig. 1)
+  fig7  compute intensity / r-w ratio spread  (paper Fig. 7)
+  fig9  speedup + energy vs CPU/GPU           (paper Fig. 9)
+  fig10 RCU-vs-TC + buffer-management ablation(paper Fig. 10)
+  tab3  approximation accuracy                (paper Table 3)
+  kernels  scan/exp/silu microbenchmarks      (functional, CPU)
+  roofline per-(arch x shape x mesh) terms    (from experiments/dryrun)
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    from benchmarks import (fig1_breakdown, fig7_intensity, fig9_speedup,
+                            fig10_ablation, kernel_bench, roofline,
+                            tab3_accuracy)
+    mods = {
+        "fig1": fig1_breakdown, "fig7": fig7_intensity,
+        "fig9": fig9_speedup, "fig10": fig10_ablation,
+        "tab3": tab3_accuracy, "kernels": kernel_bench,
+        "roofline": roofline,
+    }
+    for name, mod in mods.items():
+        if only and name != only:
+            continue
+        mod.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""Table 3: accuracy under the approximation algorithms.
+
+The paper evaluates WikiText/Lambada ppl + 4 zero-shot suites on released
+Mamba checkpoints (no network access here).  Same protocol, two in-repo
+surrogates (DESIGN.md §7):
+
+  (a) function-level error on the paper's stated input distributions
+      (density set x=-7/n for exp; [-5, 4] for SiLU);
+  (b) end-to-end: train a tiny Mamba on the synthetic corpus with exact
+      nonlinearities, then evaluate held-out ppl with each approximation
+      swapped in (fast_exp / our_exp / our_silu / ours-full) — mirroring
+      Table 3's rows.  Claim checked: our_exp degrades ppl far less than
+      plain fast_exp, and the full approx stack stays within a few percent.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import approx
+from repro.data import SyntheticLM
+from repro.models import registry
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.parallel import sharding
+from benchmarks.common import emit
+
+
+def _function_level():
+    xs = jnp.asarray(approx.exp_density_set())
+    t = np.exp(np.asarray(xs, np.float64))
+    for name, fn in [("fast_exp", approx.fast_exp),
+                     ("our_exp", approx.our_exp)]:
+        y = np.asarray(fn(xs), np.float64)
+        emit(f"tab3.fn.{name}", 0.0,
+             f"mean_rel_err={np.mean(np.abs(y - t) / t):.4f};"
+             f"max_rel_err={np.max(np.abs(y - t) / t):.4f}")
+    x = jnp.linspace(-5, 4, 30001)
+    for name, fn in [("silu_paper_eq3", approx.piecewise_silu_paper),
+                     ("silu_ours", approx.piecewise_silu)]:
+        err = np.asarray(jnp.abs(fn(x) - jax.nn.silu(x)))
+        emit(f"tab3.fn.{name}", 0.0,
+             f"max_abs_err={err.max():.4f};mean_abs_err={err.mean():.5f}")
+
+
+def _train_tiny_mamba(steps=220):
+    cfg = configs.smoke_variant(configs.get_config("mamba-130m"))
+    cfg = dataclasses.replace(cfg, vocab=128, n_layers=2, d_model=64,
+                              dt_rank=8, dtype="float32")
+    params = sharding.tree_values(registry.init_params(cfg,
+                                                       jax.random.key(0)))
+    ocfg = AdamWConfig(lr=3e-3, weight_decay=0.01)
+    state = adamw_init(params, ocfg)
+    ds = SyntheticLM(vocab=cfg.vocab, seq_len=64, seed=0)
+
+    @jax.jit
+    def step(p, s, b):
+        (_, m), g = jax.value_and_grad(
+            lambda q: registry.loss_fn(cfg, q, b), has_aux=True)(p)
+        p, s, _ = adamw_update(g, s, p, ocfg)
+        return p, s, m
+
+    for i in range(steps):
+        b = ds.batch_at(i, 0, 1, 16)
+        b = {k: jnp.asarray(v) for k, v in b.items()}
+        params, state, m = step(params, state, b)
+    return cfg, params, ds
+
+
+def _eval_ppl(cfg, params, ds, exp_impl, silu_impl, n_batches=8):
+    cfg2 = dataclasses.replace(cfg, exp_impl=exp_impl, silu_impl=silu_impl)
+
+    @jax.jit
+    def nll(p, b):
+        return registry.loss_fn(cfg2, p, b)[1]["nll"]
+
+    tot = 0.0
+    for i in range(n_batches):
+        b = ds.batch_at(10_000 + i, 0, 1, 16)     # held-out steps
+        b = {k: jnp.asarray(v) for k, v in b.items()}
+        tot += float(nll(params, b))
+    return float(np.exp(tot / n_batches))
+
+
+def _scan_fidelity(L=512, d=64, n=16):
+    """Long-memory probe: h decay error compounds over L steps.  exact
+    exp(~0)=1 preserves state; Schraudolph variants decay it — the
+    mechanism behind the paper's fast_exp Lambada blow-up (300 vs 8.1)."""
+    from repro.kernels import ref as kref
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1, L, d)).astype(np.float32))
+    # realistic selective-scan stats: small dt (long memory), A ~ -[1, n]
+    dt = jax.nn.softplus(jnp.asarray(
+        rng.normal(loc=-4.0, size=(1, L, d)).astype(np.float32)))
+    A = -jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None], (d, 1)) / n
+    B = jnp.asarray(rng.normal(size=(1, L, n)).astype(np.float32))
+    C = jnp.asarray(rng.normal(size=(1, L, n)).astype(np.float32))
+    y0, h0 = kref.selective_scan(x, dt, A, B, C, exp_impl="exact")
+    out = {}
+    for name in ["fast", "ours"]:
+        y1, h1 = kref.selective_scan(x, dt, A, B, C, exp_impl=name)
+        out[name] = float(jnp.linalg.norm(h1 - h0) /
+                          jnp.maximum(jnp.linalg.norm(h0), 1e-9))
+        emit(f"tab3.scan_fidelity.{name}", 0.0,
+             f"h_rel_err_after_{L}_steps={out[name]:.4f}")
+    ok = out["ours"] < out["fast"]
+    emit("tab3.scan_fidelity.claim", 0.0,
+         f"ours_better_than_fast={'OK' if ok else 'MISS'};"
+         f"ratio={out['fast'] / max(out['ours'], 1e-12):.2f}x")
+    return ok
+
+
+def run(steps=220):
+    _function_level()
+    _scan_fidelity()
+    cfg, params, ds = _train_tiny_mamba(steps)
+    rows = [
+        ("exact", "exact", "exact"),
+        ("fast_exp", "fast", "exact"),
+        ("our_exp", "ours", "exact"),
+        ("our_silu", "exact", "ours"),
+        ("ours_full", "ours", "ours"),
+        ("paper_silu_eq3", "ours", "paper"),
+    ]
+    ppl = {}
+    for name, e, s in rows:
+        ppl[name] = _eval_ppl(cfg, params, ds, e, s)
+        emit(f"tab3.e2e.{name}", 0.0, f"ppl={ppl[name]:.4f}")
+    base = ppl["exact"]
+    ours_delta = (ppl["ours_full"] - base) / base
+    fast_delta = (ppl["fast_exp"] - base) / base
+    our_exp_delta = (ppl["our_exp"] - base) / base
+    # on the short-memory synthetic corpus the deltas are expected ~0
+    # (no long-range state to corrupt); the claim is carried by the
+    # scan-fidelity probe + function-level errors above.
+    ok = abs(ours_delta) < 0.05
+    emit("tab3.claim.e2e_ppl", 0.0,
+         f"fast_exp_ppl_delta={fast_delta:+.4f};"
+         f"our_exp_ppl_delta={our_exp_delta:+.4f};"
+         f"ours_full_ppl_delta={ours_delta:+.4f};"
+         f"paper:approx_loss_small;{'OK' if ok else 'MISS'}")
+    return ppl
+
+
+if __name__ == "__main__":
+    run()

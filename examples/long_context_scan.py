@@ -1,0 +1,70 @@
+"""Long-context streaming with O(1) state (deliverable b, SSM story).
+
+Processes a 64k-token stream through a Mamba block in chunks: the (h, conv)
+state is carried between chunks (the same mechanism that makes the
+long_500k decode cell O(1) in context), and the result is verified
+identical to one full-sequence pass.  Also demonstrates the
+sequence-parallel scan entry point.
+
+  PYTHONPATH=src python examples/long_context_scan.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def main():
+    rng = np.random.default_rng(0)
+    b, L, d, n = 1, 65536, 64, 16
+    chunk = 8192
+    print(f"[long] streaming scan: L={L} in {L // chunk} chunks of {chunk}")
+
+    x = jnp.asarray(rng.normal(size=(b, L, d)).astype(np.float32))
+    dt = jax.nn.softplus(jnp.asarray(
+        rng.normal(size=(b, L, d)).astype(np.float32)) - 2.0)
+    A = -jnp.exp(jnp.asarray(rng.normal(size=(d, n)).astype(np.float32))
+                 * 0.5)
+    B = jnp.asarray(rng.normal(size=(b, L, n)).astype(np.float32))
+    C = jnp.asarray(rng.normal(size=(b, L, n)).astype(np.float32))
+
+    scan = jax.jit(lambda *a, h0=None: ops.selective_scan(
+        *a, h0=h0, impl="chunked_seq", chunk=512))
+
+    # full pass
+    t0 = time.perf_counter()
+    y_full, h_full = scan(x, dt, A, B, C)
+    jax.block_until_ready(y_full)
+    t_full = time.perf_counter() - t0
+
+    # streaming: state carried between chunks, peak memory ~ chunk-sized
+    h = None
+    ys = []
+    t0 = time.perf_counter()
+    for i in range(0, L, chunk):
+        sl = slice(i, i + chunk)
+        y_c, h = scan(x[:, sl], dt[:, sl], A, B[:, sl], C[:, sl], h0=h)
+        ys.append(y_c)
+    y_stream = jnp.concatenate(ys, axis=1)
+    jax.block_until_ready(y_stream)
+    t_stream = time.perf_counter() - t0
+
+    err = float(jnp.max(jnp.abs(y_stream - y_full)))
+    print(f"[long] full pass {t_full:.2f}s, streaming {t_stream:.2f}s, "
+          f"max|dy| = {err:.2e} (state size: {d * n * 4} bytes, "
+          f"independent of context)")
+    assert err < 1e-3
+
+    # one decode step at position 64k: O(1) work
+    y_t, h_t = ref.selective_state_step(
+        h, x[:, -1], dt[:, -1], A, B[:, -1], C[:, -1])
+    print(f"[long] single-token step at pos {L}: output {y_t.shape}, "
+          f"state {h_t.shape} — O(1) per token (cf. 500k-token decode "
+          f"cell in EXPERIMENTS.md §Dry-run)")
+
+
+if __name__ == "__main__":
+    main()

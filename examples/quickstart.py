@@ -1,0 +1,77 @@
+"""Quickstart: MARCA's three ideas in five minutes, on CPU.
+
+  1. fast biased exponential + piecewise SiLU (the reusable nonlinear unit)
+  2. the fused selective-scan (element-wise engine) vs the unfused baseline
+  3. a tiny Mamba LM forward with the approximations swapped in
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import approx
+from repro.kernels import ops, ref
+from repro.kernels import selective_scan as scan_kernel
+from repro.models import registry
+from repro.parallel import sharding
+
+
+def main():
+    print("=== 1. MARCA nonlinear approximations (paper §5) ===")
+    xs = jnp.asarray(approx.exp_density_set())
+    exact = np.exp(np.asarray(xs, np.float64))
+    for name, fn in [("fast_exp (Schraudolph)", approx.fast_exp),
+                     ("our_exp (biased)", approx.our_exp)]:
+        err = np.abs(np.asarray(fn(xs), np.float64) - exact) / exact
+        print(f"  {name:<24} mean rel err on dt*A distribution: "
+              f"{err.mean():.4%}")
+    x = jnp.linspace(-5, 4, 10001)
+    for name, fn in [("SiLU eq.(3) paper", approx.piecewise_silu_paper),
+                     ("SiLU refit (ours)", approx.piecewise_silu)]:
+        err = jnp.max(jnp.abs(fn(x) - jax.nn.silu(x)))
+        print(f"  {name:<24} max abs err on [-5,4]: {float(err):.4f}")
+
+    print("\n=== 2. Fused selective scan (paper §4+§6) ===")
+    rng = np.random.default_rng(0)
+    b, L, d, n = 2, 256, 128, 16
+    args = (
+        jnp.asarray(rng.normal(size=(b, L, d)).astype(np.float32)),
+        jax.nn.softplus(jnp.asarray(
+            rng.normal(size=(b, L, d)).astype(np.float32))),
+        -jnp.exp(jnp.asarray(rng.normal(size=(d, n)).astype(np.float32))
+                 * 0.5),
+        jnp.asarray(rng.normal(size=(b, L, n)).astype(np.float32)),
+        jnp.asarray(rng.normal(size=(b, L, n)).astype(np.float32)),
+    )
+    y_ref, h_ref = ref.selective_scan(*args)
+    y_ker, h_ker = scan_kernel.selective_scan(*args)   # Pallas, interpret
+    print(f"  Pallas fused kernel vs reference: max|dy| = "
+          f"{float(jnp.max(jnp.abs(y_ker - y_ref))):.2e}")
+    y_apx, _ = ops.selective_scan(*args, impl="chunked_seq",
+                                  exp_impl="ours", silu_impl="ours")
+    print(f"  with MARCA approximations:        max|dy| = "
+          f"{float(jnp.max(jnp.abs(y_apx - y_ref))):.3f} "
+          f"(bounded by the ~1% exp error)")
+
+    print("\n=== 3. Tiny Mamba LM forward (exact vs approx) ===")
+    cfg = configs.smoke_variant(configs.get_config("mamba-130m"))
+    cfg = dataclasses.replace(cfg, vocab=128, dtype="float32")
+    params = sharding.tree_values(registry.init_params(cfg,
+                                                       jax.random.key(0)))
+    batch = registry.make_batch(cfg, 2, 32, key=jax.random.key(1))
+    logits, _ = registry.forward(cfg, params, batch)
+    cfg_apx = dataclasses.replace(cfg, exp_impl="ours", silu_impl="ours")
+    logits_apx, _ = registry.forward(cfg_apx, params, batch)
+    drift = float(jnp.mean(jnp.abs(logits - logits_apx)))
+    print(f"  logits shape {logits.shape}; mean |logit drift| under "
+          f"MARCA approx: {drift:.4f}")
+    print("\nNext: examples/train_mamba.py (end-to-end training), "
+          "examples/serve_batched.py, examples/long_context_scan.py")
+
+
+if __name__ == "__main__":
+    main()

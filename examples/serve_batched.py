@@ -1,0 +1,56 @@
+"""Batched serving example (deliverable b): train briefly, then serve
+batched generation requests through the prefill+decode Server.
+
+  PYTHONPATH=src python examples/serve_batched.py --arch mamba-130m
+  PYTHONPATH=src python examples/serve_batched.py --arch olmo-1b
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.data import SyntheticLM
+from repro.models import registry
+from repro.parallel import sharding
+from repro.runtime.serve import ServeConfig, Server
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba-130m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = configs.smoke_variant(configs.get_config(args.arch))
+    cfg = dataclasses.replace(cfg, vocab=256, dtype="float32")
+    params = sharding.tree_values(
+        registry.init_params(cfg, jax.random.key(0)))
+
+    ds = SyntheticLM(vocab=cfg.vocab, seq_len=args.prompt_len, seed=7)
+    prompts = ds.batch_at(0, 0, 1, args.batch)["tokens"]
+
+    srv = Server(cfg, params, ServeConfig(
+        batch_slots=args.batch,
+        max_seq=args.prompt_len + args.max_new + 8,
+        temperature=args.temperature))
+
+    t0 = time.perf_counter()
+    out = srv.generate(prompts, max_new=args.max_new)
+    dt = time.perf_counter() - t0
+    toks = out.size
+    print(f"[serve] arch={args.arch} batch={args.batch} "
+          f"prompt={args.prompt_len} new={args.max_new}")
+    print(f"[serve] generated {toks} tokens in {dt:.2f}s "
+          f"({toks / dt:.1f} tok/s on CPU, prefill+decode path)")
+    for i, row in enumerate(out):
+        print(f"  req{i}: {prompts[i].tolist()} -> {row.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

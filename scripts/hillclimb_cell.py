@@ -1,0 +1,107 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Hillclimb driver: lower one (arch x shape) cell with config/rule
+overrides, print the three roofline terms + top byte contributors.
+
+Usage: PYTHONPATH=src python scripts/hillclimb_cell.py <arch> <shape> \
+         [k=v ...]   (k=v are ModelConfig overrides; rule:k=v for rules)
+"""
+import json
+import sys
+import time
+
+import jax
+
+from repro import configs
+from repro.configs import shapes as shp
+from repro.launch import hlo_cost
+from repro.launch.dryrun import build_cell, rules_for, optimizer_for
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+from repro.parallel import sharding
+
+
+def parse_overrides(args):
+    cfg_kw, rule_kw = {}, {}
+    for a in args:
+        k, v = a.split("=", 1)
+        target = cfg_kw
+        if k.startswith("rule:"):
+            k = k[5:]
+            target = rule_kw
+        if v in ("True", "False"):
+            v = v == "True"
+        elif v == "None":
+            v = None
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                try:
+                    v = float(v)
+                except ValueError:
+                    pass
+        target[k] = v
+    return cfg_kw, rule_kw
+
+
+def main():
+    arch, shape_name = sys.argv[1], sys.argv[2]
+    cfg_kw, rule_kw = parse_overrides(sys.argv[3:])
+    import dataclasses
+    cfg = configs.get_config(arch)
+    if cfg_kw:
+        cfg = dataclasses.replace(cfg, **cfg_kw)
+    shape = shp.SHAPES[shape_name]
+    mesh = make_production_mesh()
+    rules = rules_for(cfg, shape, rule_kw or None)
+    t0 = time.time()
+    with sharding.use_mesh(mesh, rules):
+        fn, args = build_cell(cfg, shape, mesh, rules)
+        compiled = fn.lower(*args).compile()
+    hlo = compiled.as_text()
+    cost = hlo_cost.analyze(hlo)
+    chips = mesh.devices.size
+    n_act = registry.count_params(cfg, active_only=True)
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind != "decode" else 1)
+    mult = 6 if shape.kind == "train" else 2
+    model_flops = mult * n_act * tokens
+    from repro.launch.hlo_analysis import roofline_terms
+    r = roofline_terms(cost.flops * chips, cost.bytes * chips,
+                       cost.collective_bytes * chips, chips, model_flops)
+    try:
+        mem = compiled.memory_analysis()
+        mem_gb = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                  + mem.output_size_in_bytes
+                  - mem.alias_size_in_bytes) / 1e9
+    except Exception:
+        mem_gb = float("nan")
+    print(json.dumps({
+        "cfg": cfg_kw, "rules": rule_kw,
+        "compute_s": round(r.compute_s, 3),
+        "memory_s": round(r.memory_s, 3),
+        "collective_s": round(r.collective_s, 3),
+        "dominant": r.dominant,
+        "useful_ratio": round(r.useful_flops_ratio, 3),
+        "frac": round(r.roofline_fraction, 4),
+        "mem_gb": round(mem_gb, 1),
+        "compile_s": round(time.time() - t0, 1),
+    }))
+    gb = 1e9
+    print("bytes_by_op (GB/chip):",
+          {k: round(v / gb, 1) for k, v in sorted(
+              cost.bytes_by_op.items(), key=lambda kv: -kv[1])[:8]})
+    print("coll_by_kind (GB/chip):",
+          {k: round(v / gb, 2) for k, v in sorted(
+              cost.coll_by_kind.items(), key=lambda kv: -kv[1])})
+    print("flops_by_op (Tflop/chip):",
+          {k: round(v / 1e12, 2) for k, v in sorted(
+              cost.flops_by_op.items(), key=lambda kv: -kv[1])[:8]},
+          "| total %.2f Tflop/chip, dot share %.2f" % (
+              cost.flops / 1e12,
+              cost.flops_by_op.get("dot", 0) / max(cost.flops, 1)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro: MARCA (ICCAD '24) reproduced as a multi-pod JAX/TPU framework.
+
+Entry points: repro.configs.get_config, repro.models.registry,
+repro.runtime.train_loop.Trainer, repro.runtime.serve.Server,
+repro.launch.{train,serve,dryrun}.  See README.md / DESIGN.md.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+"""Fault-tolerant checkpointing: async, atomic, keep-k, elastic reshard."""
+from repro.checkpoint.manager import CheckpointManager

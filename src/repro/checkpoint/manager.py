@@ -1,0 +1,170 @@
+"""Checkpoint manager: async save, atomic publish, keep-last-k, and
+mesh-independent restore (elastic scaling).
+
+Format: one directory per step containing
+  * ``meta.json``   — step, leaf paths, shapes, dtypes
+  * ``arrays.npz``  — full (unsharded) leaf arrays keyed by flattened path
+
+The on-disk format is intentionally *mesh-independent*: restore takes an
+optional pytree of target shardings and uses ``jax.device_put`` against the
+new mesh, so a checkpoint written on the 256-chip mesh restores onto 512
+chips (or 1 CPU) unchanged — the elasticity story of DESIGN.md §4.  In a
+true multi-host deployment each process would write its addressable shards
+(same directory layout, one npz per process); this container is
+single-process so the degenerate single-writer path is exercised.
+
+Atomicity: writes go to ``<dir>/tmp.<step>`` and are ``os.rename``d into
+place (rename is atomic on POSIX); readers only ever see complete
+checkpoints.  Async: the serialization runs on a worker thread; ``wait()``
+blocks (called before exit and by tests).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out[key] = leaf
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+_NATIVE_KINDS = set("biufc?")
+
+
+def _encode_np(v: np.ndarray) -> tuple[np.ndarray, str]:
+    """ml_dtypes (bf16 etc.) are not npz-serializable: store raw bytes."""
+    if v.dtype.kind in _NATIVE_KINDS:
+        return v, str(v.dtype)
+    return np.frombuffer(v.tobytes(), np.uint8), str(v.dtype)
+
+
+def _decode_np(raw: np.ndarray, dtype_str: str, shape) -> np.ndarray:
+    import ml_dtypes  # noqa: F401  (registers bf16 etc. with numpy)
+    if raw.dtype != np.uint8 or np.dtype(dtype_str).kind in _NATIVE_KINDS:
+        return raw
+    return np.frombuffer(raw.tobytes(),
+                         np.dtype(dtype_str)).reshape(shape)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._pending: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------ save
+
+    def save(self, step: int, tree: Any, blocking: bool = False):
+        """Snapshot to host memory synchronously, write asynchronously."""
+        flat = _flatten_with_paths(tree)
+        host = {k: np.asarray(v) for k, v in flat.items()}  # device->host now
+        self.wait()                                          # one in flight
+        if self.async_save and not blocking:
+            self._pending = threading.Thread(
+                target=self._write, args=(step, host), daemon=True)
+            self._pending.start()
+        else:
+            self._write(step, host)
+
+    def _write(self, step: int, host: dict):
+        tmp = os.path.join(self.dir, f"tmp.{step}")
+        final = os.path.join(self.dir, f"step_{step:012d}")
+        os.makedirs(tmp, exist_ok=True)
+        enc = {k: _encode_np(v) for k, v in host.items()}
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{k: v[0] for k, v in enc.items()})
+        meta = {"step": step,
+                "leaves": {k: {"shape": list(host[k].shape),
+                               "dtype": enc[k][1]}
+                           for k, v in host.items()}}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:012d}"),
+                          ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", d)
+            if m and os.path.exists(os.path.join(self.dir, d, "meta.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None) -> tuple[Any, int]:
+        """Restore into the structure of ``template``.
+
+        ``shardings``: optional pytree (matching template) of
+        jax.sharding.Sharding — enables elastic reshard-on-load.  Returns
+        (tree, step)."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:012d}")
+        data = np.load(os.path.join(path, "arrays.npz"))
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+        if shardings is None:
+            flat_s = [None] * len(flat_t)
+        else:
+            flat_s = jax.tree_util.tree_structure(template).flatten_up_to(
+                shardings)
+        leaves = []
+        for (kpath, tmpl), shd in zip(flat_t, flat_s):
+            key = "/".join(_path_str(p) for p in kpath)
+            info = meta["leaves"][key]
+            arr = _decode_np(data[key], info["dtype"], tuple(info["shape"]))
+            want = np.dtype(getattr(tmpl, "dtype", arr.dtype))
+            if arr.dtype != want:
+                arr = arr.astype(want)
+            if shd is not None:
+                leaves.append(jax.device_put(arr, shd))
+            else:
+                leaves.append(jax.numpy.asarray(arr))
+        return treedef.unflatten(leaves), step

@@ -1,0 +1,12 @@
+"""Architecture configs: the 10 assigned archs + the paper's Mamba family.
+
+``get_config(name)`` resolves ``--arch`` ids (dashes) to config objects;
+``list_archs()`` enumerates them.  Input-shape sets live in ``shapes.py``.
+"""
+from repro.configs.base import (ModelConfig, get_config, list_archs,
+                                register, smoke_variant)
+from repro.configs import shapes  # noqa: F401
+from repro.configs import zoo  # noqa: F401  (registers everything)
+
+__all__ = ["ModelConfig", "get_config", "list_archs", "register",
+           "smoke_variant", "shapes"]

@@ -1,0 +1,10 @@
+"""MARCA's primary contributions, realized in JAX (see DESIGN.md §2):
+
+  * ``approx``          — fast biased exp + piecewise SiLU/sigmoid (§5).
+  * ``selective_scan``  — seq/assoc/chunked scan algorithms (§4 + §6).
+  * ``buffer_manager``  — intra-/inter-op buffer policy simulator (§6).
+  * ``op_graph``        — Mamba op-graph (op class, FLOPs, bytes) (§2/Fig. 7).
+  * ``marca_model``     — cycle-approximate MARCA/CPU/GPU perf-energy models
+                          (§7, Figs. 1/9/10).
+"""
+from repro.core import approx  # noqa: F401

@@ -1,0 +1,143 @@
+"""Selective-SSM scan algorithms (the compute core MARCA accelerates).
+
+Three implementations with identical semantics (tests assert equivalence):
+
+  * ``selective_scan_seq``     — lax.scan over time; the semantic reference.
+  * ``selective_scan_assoc``   — jax.lax.associative_scan over the (a, b)
+    affine monoid; O(log L) depth but materializes (B, L, D, N) — the
+    "unfused XLA" baseline whose HBM traffic MARCA's fusion removes.
+  * ``selective_scan_chunked`` — lax.scan over chunks of length `chunk`,
+    associative scan inside a chunk, state carried across chunks.  This is
+    the framework-level realization of MARCA's *inter-operation buffer
+    management*: the recurrent state (and the chunk's dA/dBx intermediates)
+    stay in registers/VMEM instead of round-tripping HBM per operation.
+    With ``remat=True`` the inner chunk is wrapped in jax.checkpoint so
+    training saves only chunk-boundary states (the paper's "cache h in the
+    buffer" applied to the backward pass).
+
+The Pallas kernel (repro.kernels.selective_scan) implements the fully fused
+single-pass version for TPU and is validated against ``selective_scan_seq``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import approx
+from repro.kernels import ref as kref
+
+selective_scan_seq = kref.selective_scan
+selective_state_step = kref.selective_state_step
+
+
+def _affine_combine(left, right):
+    """Monoid for h_t = a_t h_{t-1} + b_t (left = older, right = newer)."""
+    a1, b1 = left
+    a2, b2 = right
+    return a2 * a1, a2 * b1 + b2
+
+
+def _scan_inner(xf, dtf, Bf, Cf, Af, h_in, exp):
+    """Associative scan over one chunk.  xf/dtf (b,ck,d); Bf/Cf (b,ck,n)."""
+    dA = exp(dtf[..., None] * Af)                       # (b,ck,d,n)
+    dBx = (dtf * xf)[..., None] * Bf[:, :, None, :]     # (b,ck,d,n)
+    Acum, Bcum = jax.lax.associative_scan(
+        _affine_combine, (dA, dBx), axis=1)
+    h_all = Acum * h_in[:, None] + Bcum                 # (b,ck,d,n)
+    y = jnp.einsum("bldn,bln->bld", h_all, Cf)
+    return y, h_all[:, -1]
+
+
+def _scan_inner_seq(xf, dtf, Bf, Cf, Af, h_in, exp):
+    """Sequential scan over one chunk: per-step (b,d,n) intermediates fuse
+    into the loop body — no (b,ck,d,n) materialization.  With the chunk
+    wrapped in jax.checkpoint this is the MARCA dataflow at XLA level:
+    state resident, inputs streamed (in their storage dtype — cast to f32
+    per step so the streamed tensors stay bf16), residuals only at chunk
+    boundaries."""
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp
+        dA = exp(dt_t[..., None] * Af)
+        h = dA * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+        return h, jnp.einsum("bdn,bn->bd", h, C_t)
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xf, dtf, Bf, Cf))
+    h_last, ys = jax.lax.scan(step, h_in, xs)
+    return jnp.moveaxis(ys, 0, 1), h_last
+
+
+def selective_scan_assoc(x, dt, A, B, C, D=None, z=None, h0=None,
+                         exp_impl: str = "exact", silu_impl: str = "exact"):
+    """Single associative scan over the full length (XLA baseline)."""
+    return selective_scan_chunked(x, dt, A, B, C, D=D, z=z, h0=h0,
+                                  chunk=x.shape[1], remat=False,
+                                  exp_impl=exp_impl, silu_impl=silu_impl)
+
+
+def selective_scan_chunked(x, dt, A, B, C, D=None, z=None, h0=None,
+                           chunk: int = 64, remat: bool = True,
+                           exp_impl: str = "exact",
+                           silu_impl: str = "exact",
+                           inner: str = "assoc"):
+    """Chunked scan: state carried across chunks (inter-op buffer mgmt).
+
+    Same signature/semantics as kernels.ref.selective_scan.
+    """
+    exp = approx.get_exp(exp_impl)
+    silu = approx.get_silu(silu_impl)
+    bsz, L, d = x.shape
+    n = A.shape[1]
+    chunk = min(chunk, L)
+    pad = (-L) % chunk
+    nc = (L + pad) // chunk
+
+    def _pad(t):
+        return jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+
+    xf = _pad(x.astype(jnp.float32))
+    dtf = _pad(dt.astype(jnp.float32))
+    Bf = _pad(B.astype(jnp.float32))
+    Cf = _pad(C.astype(jnp.float32))
+    Af = A.astype(jnp.float32)
+    h_init = (jnp.zeros((bsz, d, n), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+
+    def _resh(t):
+        return t.reshape(bsz, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    inner_fn = _scan_inner if inner == "assoc" else _scan_inner_seq
+    if remat:
+        inner_fn = jax.checkpoint(inner_fn, static_argnums=(6,))
+
+    def chunk_step(h, inp):
+        xc, dtc, Bc, Cc = inp
+        y, h_new = inner_fn(xc, dtc, Bc, Cc, Af, h, exp)
+        return h_new, y
+
+    h_last, ys = jax.lax.scan(
+        chunk_step, h_init, (_resh(xf), _resh(dtf), _resh(Bf), _resh(Cf)))
+    y = ys.swapaxes(0, 1).reshape(bsz, nc * chunk, d)[:, :L]
+    if D is not None:
+        y = y + D.astype(jnp.float32)[None, None, :] * x.astype(jnp.float32)
+    if z is not None:
+        y = y * silu(z.astype(jnp.float32))
+    return y.astype(x.dtype), h_last
+
+
+IMPLS = {
+    "seq": selective_scan_seq,
+    "assoc": selective_scan_assoc,
+    "chunked": selective_scan_chunked,
+}
+
+
+def get_scan(name: str):
+    if name in IMPLS:
+        return IMPLS[name]
+    if name == "pallas":    # resolved lazily to avoid import cycle
+        from repro.kernels import selective_scan as ssk
+        return ssk.selective_scan
+    raise KeyError(f"unknown scan impl {name!r}")

@@ -1,0 +1,5 @@
+"""Data pipeline: synthetic structured LM corpus + deterministic sharded
+loader with background prefetch (stateless indexing -> free fault-tolerant
+resume)."""
+from repro.data.pipeline import (SyntheticLM, ShardedLoader, Prefetcher,
+                                 make_train_iterator)

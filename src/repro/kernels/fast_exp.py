@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: fast biased exponential (MARCA EXP-RCU mode).
+
+The paper's EXP-RCU reconfigures the PE array so each PE does one FP
+multiply, one FP add, then routes through the "exponential shift unit"
+(Fig. 6).  On TPU the same decomposition maps onto the VPU: the multiply-add
+is a vector FMA and the shift unit is an f32->i32 convert + bitcast, all
+8x128-lane element-wise ops.  No transcendental unit is involved.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.core import approx
+
+_LANES = 128
+_DEFAULT_COLS = 1024
+_DEFAULT_ROWS = 256
+
+
+def _fast_exp_kernel(x_ref, o_ref, *, b_shift: float, c: float):
+    x = x_ref[...].astype(jnp.float32)
+    x = jnp.clip(x, -approx._EXP_CLAMP, approx._EXP_CLAMP)
+    i = (x * np.float32(approx._S23 / approx.LN2)
+         + np.float32((127.0 + b_shift) * approx._S23)).astype(jnp.int32)
+    y = jax.lax.bitcast_convert_type(i, jnp.float32) + np.float32(c)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("b_shift", "c", "block_rows",
+                                             "cols", "interpret"))
+def fast_exp_2d(x, b_shift=approx.OUR_EXP_B_SHIFT, c=approx.OUR_EXP_C,
+                block_rows=_DEFAULT_ROWS, cols=_DEFAULT_COLS,
+                interpret=True):
+    """Element-wise biased exp over a 2D array (rows, cols)."""
+    rows = x.shape[0]
+    grid = (pl.cdiv(rows, block_rows),)
+    return pl.pallas_call(
+        functools.partial(_fast_exp_kernel, b_shift=b_shift, c=c),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, cols), lambda r: (r, 0))],
+        out_specs=pl.BlockSpec((block_rows, cols), lambda r: (r, 0)),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+        name="marca_fast_exp",
+    )(x)
+
+
+def fast_exp(x, b_shift=approx.OUR_EXP_B_SHIFT, c=approx.OUR_EXP_C,
+             interpret=True):
+    """Shape-polymorphic wrapper: flatten -> pad -> tile -> kernel -> unpad."""
+    n = x.size
+    cols = _DEFAULT_COLS if n >= _DEFAULT_COLS else _LANES
+    rows = -(-n // cols)
+    pad = rows * cols - n
+    flat = jnp.pad(x.reshape(-1), (0, pad))
+    block_rows = min(_DEFAULT_ROWS, rows)
+    y = fast_exp_2d(flat.reshape(rows, cols), b_shift=float(b_shift),
+                    c=float(c), block_rows=block_rows, cols=cols,
+                    interpret=interpret)
+    return y.reshape(-1)[:n].reshape(x.shape)

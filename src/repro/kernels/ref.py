@@ -1,0 +1,152 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's tests sweep shapes/dtypes and assert allclose against the
+function here.  These are also the implementations XLA runs when a model is
+configured with ``kernel_impl="xla"``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import approx
+
+
+# ---------------------------------------------------------------------------
+# Element-wise nonlinearities (MARCA §5): the oracle IS the jnp algorithm.
+# ---------------------------------------------------------------------------
+
+def fast_exp(x, b_shift=approx.FAST_EXP_B_SHIFT, c=0.0):
+    return approx.fast_exp(x, b_shift, c)
+
+
+def our_exp(x):
+    return approx.our_exp(x)
+
+
+def piecewise_silu(x):
+    return approx.piecewise_silu(x)
+
+
+def piecewise_silu_paper(x):
+    return approx.piecewise_silu_paper(x)
+
+
+# ---------------------------------------------------------------------------
+# Selective scan (Mamba S6 recurrence) — the reference semantics.
+# ---------------------------------------------------------------------------
+
+def selective_scan(x, dt, A, B, C, D=None, z=None, h0=None,
+                   exp_impl: str = "exact", silu_impl: str = "exact"):
+    """Sequential reference of the selective-SSM recurrence.
+
+    Shapes:
+      x, dt:  (batch, L, d)      -- dt already softplus'd
+      A:      (d, n)             -- negative real
+      B, C:   (batch, L, n)
+      D:      (d,) or None       -- skip connection
+      z:      (batch, L, d) or None -- SiLU gate
+      h0:     (batch, d, n) or None -- initial state
+    Returns (y, h_last): y (batch, L, d) in x.dtype, h_last (batch, d, n) f32.
+
+      h_t = exp(dt_t * A) * h_{t-1} + (dt_t * x_t) B_t^T
+      y_t = h_t C_t + D * x_t ;  out_t = y_t * silu(z_t)
+    """
+    exp = approx.get_exp(exp_impl)
+    silu = approx.get_silu(silu_impl)
+    bsz, L, d = x.shape
+    n = A.shape[1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    h_init = (jnp.zeros((bsz, d, n), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp          # (b,d) (b,d) (b,n) (b,n)
+        dA = exp(dt_t[..., None] * Af)     # (b,d,n)
+        dBx = (dt_t * x_t)[..., None] * B_t[:, None, :]
+        h = dA * h + dBx
+        y_t = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y_t
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    h_last, ys = jax.lax.scan(step, h_init, xs)
+    y = jnp.moveaxis(ys, 0, 1)             # (b, L, d)
+    if D is not None:
+        y = y + D.astype(jnp.float32)[None, None, :] * xf
+    if z is not None:
+        y = y * silu(z.astype(jnp.float32))
+    return y.astype(x.dtype), h_last
+
+
+def selective_state_step(h, x_t, dt_t, A, B_t, C_t, D=None, z_t=None,
+                         exp_impl: str = "exact", silu_impl: str = "exact"):
+    """Single decode step.  h (b,d,n) f32; x_t/dt_t (b,d); B_t/C_t (b,n)."""
+    exp = approx.get_exp(exp_impl)
+    silu = approx.get_silu(silu_impl)
+    xf = x_t.astype(jnp.float32)
+    dtf = dt_t.astype(jnp.float32)
+    dA = exp(dtf[..., None] * A.astype(jnp.float32))
+    dBx = (dtf * xf)[..., None] * B_t.astype(jnp.float32)[:, None, :]
+    h = dA * h + dBx
+    y = jnp.einsum("bdn,bn->bd", h, C_t.astype(jnp.float32))
+    if D is not None:
+        y = y + D.astype(jnp.float32)[None, :] * xf
+    if z_t is not None:
+        y = y * silu(z_t.astype(jnp.float32))
+    return y.astype(x_t.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d (Mamba short conv).
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x, w, b=None, x_prev=None):
+    """x (batch, L, d), w (k, d) depthwise causal, optional bias (d,).
+
+    x_prev (batch, k-1, d) supplies state for chunked/streaming use.
+    Returns (y, new_state) with y same shape as x.
+    """
+    bsz, L, d = x.shape
+    k = w.shape[0]
+    if x_prev is None:
+        x_prev = jnp.zeros((bsz, k - 1, d), x.dtype)
+    xp = jnp.concatenate([x_prev, x], axis=1)        # (b, L+k-1, d)
+    y = jnp.zeros((bsz, L, d), jnp.float32)
+    for i in range(k):
+        y = y + xp[:, i:i + L, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    new_state = xp[:, L:, :]
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Attention (causal, GQA) — oracle for the flash kernel.
+# ---------------------------------------------------------------------------
+
+def attention(q, k, v, causal=True, scale=None, kv_seg=None):
+    """q (b, lq, hq, dh); k/v (b, lk, hkv, dh); GQA by head repetition.
+
+    Returns (b, lq, hq, dh).  Computed in f32 with full materialization --
+    only usable for small L (that is the point of the flash kernel).
+    """
+    b, lq, hq, dh = q.shape
+    hkv = k.shape[2]
+    rep = hq // hkv
+    if scale is None:
+        scale = dh ** -0.5
+    kf = jnp.repeat(k.astype(jnp.float32), rep, axis=2)
+    vf = jnp.repeat(v.astype(jnp.float32), rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kf) * scale
+    if causal:
+        lk = k.shape[1]
+        mask = jnp.tril(jnp.ones((lq, lk), bool), k=lk - lq)
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    return o.astype(q.dtype)

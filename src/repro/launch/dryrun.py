@@ -1,0 +1,349 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST be the first two lines: jax locks the device count on first init.
+# The dry-run (and ONLY the dry-run) fakes 512 host devices so the
+# production meshes (16x16 single-pod, 2x16x16 multi-pod) can be built.
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input-shape x mesh) cell:
+  1. build the production mesh,
+  2. construct abstract params / optimizer state / caches
+     (ShapeDtypeStructs with NamedShardings — zero allocation),
+  3. ``jax.jit(step, in_shardings=..., out_shardings=...).lower(...)``
+     then ``.compile()``,
+  4. record memory_analysis, cost_analysis, and the collective schedule
+     (parsed from the post-SPMD HLO) into a JSON cache that
+     benchmarks/roofline.py and EXPERIMENTS.md read.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--skip-existing]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs import shapes as shp
+from repro.configs.zoo import ASSIGNED
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.parallel import sharding
+from repro.parallel.sharding import ShardingRules
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def rules_for(cfg, shape: shp.ShapeSpec, overrides=None) -> ShardingRules:
+    """Shape-dependent rules (DESIGN.md §4):
+      * train/prefill: activations additionally sharded over `model` on
+        d_model (scan-carry residency; required to fit 16 GB at
+        65k tokens/device),
+      * long-context batch=1: shard along sequence instead of batch."""
+    kw = {}
+    if shape.kind in ("train", "prefill"):
+        kw["act_embed"] = "model"
+    if shape.name == "long_500k":
+        kw.update(sharding.LONG_CONTEXT_OVERRIDES)
+    if overrides:
+        kw.update(overrides)
+    return ShardingRules(**kw)
+
+
+def config_for(cfg, shape) -> "configs.ModelConfig":
+    """Production defaults per shape kind: int8 KV cache for transformer
+    decode (halves+ cache HBM; fits the MHA decode_32k cells — see
+    EXPERIMENTS.md §Perf KV iteration)."""
+    if shape.kind == "decode" and cfg.family == "transformer" \
+            and cfg.kv_cache_dtype == "model":
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    return cfg
+
+
+def optimizer_for(cfg) -> AdamWConfig:
+    """arctic-480b needs sub-f32 moments to fit (DESIGN.md §4)."""
+    if cfg.name.startswith("arctic"):
+        return AdamWConfig(moment_dtype="bfloat16")
+    return AdamWConfig()
+
+
+def _qtensor_sharding(mesh, q):
+    """Flat-block int8 moments: shard dim0 over (data, model) if divisible."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    axes = [a for a in ("data", "model") if a in mesh.axis_names]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    if q.shape[0] % n == 0:
+        return NamedSharding(mesh, P(tuple(axes)))
+    return NamedSharding(mesh, P())
+
+
+def opt_shardings(mesh, rules, params_p, opt_abstract):
+    """Moments follow param sharding; QTensor blocks shard flat."""
+    from repro.optim import quantized_state as qs
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    p_sh = sharding.tree_shardings(params_p, mesh, rules)
+
+    def per_moment(tree):
+        def one(ps, leaf):
+            if qs.is_qtensor(leaf):
+                return qs.QTensor(_qtensor_sharding(mesh, leaf.q),
+                                  NamedSharding(mesh, P()), leaf.shape)
+            return ps
+        return jax.tree.map(one, p_sh, tree,
+                            is_leaf=lambda x: qs.is_qtensor(x) or hasattr(
+                                x, "spec"))
+
+    return type(opt_abstract)(
+        NamedSharding(mesh, P()),
+        per_moment(opt_abstract.mu), per_moment(opt_abstract.nu))
+
+
+def build_cell(cfg, shape: shp.ShapeSpec, mesh, rules):
+    """Returns (jitted_fn, example_args_abstract) for the cell."""
+    from jax.sharding import NamedSharding
+
+    params_p = registry.abstract_params(cfg)
+    params = sharding.tree_values(params_p)
+    p_sh = sharding.tree_shardings(params_p, mesh, rules)
+    ocfg = optimizer_for(cfg)
+
+    def to_sharding(axes_tree, struct_tree):
+        return jax.tree.map(
+            lambda ax, s: NamedSharding(
+                mesh, sharding.spec_for_shape(s.shape, ax, mesh, rules)),
+            axes_tree, struct_tree,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+
+    if shape.kind == "train":
+        batch = registry.batch_struct(cfg, shape.global_batch, shape.seq_len)
+        b_sh = to_sharding(registry.batch_axes(cfg, batch), batch)
+        opt_abs = jax.eval_shape(lambda p: adamw_init(p, ocfg), params)
+        o_sh = opt_shardings(mesh, rules, params_p, opt_abs)
+
+        def train_step(p, opt, b):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda q: registry.loss_fn(cfg, q, b), has_aux=True)(p)
+            p, opt, om = adamw_update(grads, opt, p, ocfg)
+            metrics.update(om)
+            return p, opt, metrics
+
+        fn = jax.jit(train_step,
+                     in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, None),
+                     donate_argnums=(0, 1))
+        return fn, (params, opt_abs, batch)
+
+    cache_len = shape.seq_len + cfg.img_tokens    # vlm: image prefix in cache
+    if shape.kind == "prefill":
+        batch = registry.batch_struct(cfg, shape.global_batch,
+                                      shape.seq_len, with_labels=False)
+        b_sh = to_sharding(registry.batch_axes(cfg, batch), batch)
+        cache_p = registry.abstract_cache(cfg, shape.global_batch,
+                                          cache_len)
+        cache = sharding.tree_values(cache_p)
+        c_sh = sharding.tree_shardings(cache_p, mesh, rules)
+
+        def prefill_step(p, c, b):
+            return registry.prefill(cfg, p, c, b)
+
+        fn = jax.jit(prefill_step, in_shardings=(p_sh, c_sh, b_sh),
+                     out_shardings=(None, c_sh), donate_argnums=(1,))
+        return fn, (params, cache, batch)
+
+    # decode
+    batch = registry.decode_batch_struct(cfg, shape.global_batch)
+    b_sh = to_sharding(registry.batch_axes(cfg, batch), batch)
+    cache_p = registry.abstract_cache(cfg, shape.global_batch, cache_len)
+    cache = sharding.tree_values(cache_p)
+    c_sh = sharding.tree_shardings(cache_p, mesh, rules)
+
+    def serve_step(p, c, b):
+        logits, new_c = registry.decode_step(cfg, p, c, b)
+        return jnp.argmax(logits[:, -1], axis=-1), new_c
+
+    fn = jax.jit(serve_step, in_shardings=(p_sh, c_sh, b_sh),
+                 out_shardings=(None, c_sh), donate_argnums=(1,))
+    return fn, (params, cache, batch)
+
+
+def analyze(compiled, lowered, cfg, shape, mesh) -> dict:
+    from repro.launch import hlo_cost
+    chips = mesh.devices.size
+    out: dict = {"chips": int(chips)}
+    # XLA's own numbers (while bodies counted once) kept for reference
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        out["xla_flops_raw"] = float(ca.get("flops", 0.0) or 0.0)
+        out["xla_bytes_raw"] = float(ca.get("bytes accessed", 0.0) or 0.0)
+    except Exception:
+        pass
+
+    try:
+        mem = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                out[f"mem_{k}"] = int(v)
+        out["mem_per_device_gb"] = round(
+            (out.get("mem_argument_size_in_bytes", 0)
+             + out.get("mem_temp_size_in_bytes", 0)
+             + out.get("mem_output_size_in_bytes", 0)
+             - out.get("mem_alias_size_in_bytes", 0)) / 1e9, 3)
+    except Exception as e:
+        out["mem_error"] = repr(e)
+
+    hlo = compiled.as_text()
+    # static analysis with loop trip counts (per-partition numbers)
+    cost = hlo_cost.analyze(hlo)
+    out["hlo_flops"] = cost.flops * chips          # totals across chips
+    out["hlo_bytes"] = cost.bytes * chips
+    out["hlo_transcendentals"] = cost.transcendentals * chips
+    out["collective_bytes"] = cost.collective_bytes * chips
+    out["collective_by_kind"] = {k: float(v * chips)
+                                 for k, v in cost.coll_by_kind.items()}
+    out["collective_counts"] = {k: int(v)
+                                for k, v in cost.coll_count.items()}
+    out["unknown_trip_whiles"] = cost.unknown_trip_whiles
+    out["op_census"] = hlo_analysis.op_census(hlo)
+    out["hlo_size_chars"] = len(hlo)
+
+    n = registry.count_params(cfg)
+    n_act = registry.count_params(cfg, active_only=True)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6 if shape.kind == "train" else 2
+    out["n_params"] = int(n)
+    out["n_params_active"] = int(n_act)
+    out["model_flops"] = float(mult * n_act * tokens)
+    # memory-side floor: one pass over params (+cache for decode) per step
+    bytes_per_param = 2.0
+    min_bytes = n * bytes_per_param
+    if shape.kind == "decode":
+        hkv, dh = cfg.n_kv_heads, cfg.head_dim
+        kv_bytes = (2 * cfg.n_layers * hkv * dh * shape.seq_len
+                    * shape.global_batch * 2.0)
+        min_bytes += kv_bytes if cfg.family == "transformer" else 0
+    out["min_bytes_floor"] = float(min_bytes)
+    out["memory_fraction"] = (min_bytes / out["hlo_bytes"]
+                              if out["hlo_bytes"] else 0.0)
+    rf = hlo_analysis.roofline_terms(
+        out["hlo_flops"], out["hlo_bytes"], out["collective_bytes"], chips,
+        out["model_flops"])
+    out["roofline"] = {
+        "compute_s": rf.compute_s, "memory_s": rf.memory_s,
+        "collective_s": rf.collective_s, "dominant": rf.dominant,
+        "useful_flops_ratio": rf.useful_flops_ratio,
+        "roofline_fraction": rf.roofline_fraction,
+    }
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             out_dir: str = OUT_DIR, overrides=None, tag: str = "",
+             cfg_overrides=None) -> dict:
+    cfg = configs.get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = shp.SHAPES[shape_name]
+    cfg = config_for(cfg, shape)
+    reason = shp.skip_reason(cfg, shape_name)
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "tag": tag}
+    if reason:
+        result["status"] = "skipped"
+        result["reason"] = reason
+        return result
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rules = rules_for(cfg, shape, overrides)
+    t0 = time.time()
+    try:
+        with sharding.use_mesh(mesh, rules):
+            fn, args = build_cell(cfg, shape, mesh, rules)
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            result.update(analyze(compiled, lowered, cfg, shape, mesh))
+            result["status"] = "ok"
+            result["t_lower_s"] = round(t_lower, 1)
+            result["t_compile_s"] = round(t_compile, 1)
+    except Exception as e:
+        result["status"] = "error"
+        result["error"] = repr(e)[:2000]
+        result["traceback"] = traceback.format_exc()[-4000:]
+    return result
+
+
+def cell_path(out_dir, arch, shape_name, mesh_kind, tag=""):
+    suffix = f"__{tag}" if tag else ""
+    return os.path.join(
+        out_dir, f"{arch}__{shape_name}__{mesh_kind}{suffix}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(shp.SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out-dir", default=OUT_DIR)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    archs = ASSIGNED if (args.all or not args.arch) else [args.arch]
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+
+    for arch in archs:
+        cfg = configs.get_config(arch)
+        shape_names = ([args.shape] if args.shape
+                       else shp.applicable_shapes(cfg) + [
+                           s for s in shp.SHAPES
+                           if shp.skip_reason(cfg, s)])
+        for shape_name in shape_names:
+            for mesh_kind in meshes:
+                path = cell_path(args.out_dir, arch, shape_name, mesh_kind,
+                                 args.tag)
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[dryrun] skip existing {path}")
+                    continue
+                print(f"[dryrun] {arch} x {shape_name} x {mesh_kind} ...",
+                      flush=True)
+                res = run_cell(arch, shape_name, mesh_kind, args.out_dir,
+                               tag=args.tag)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                status = res["status"]
+                extra = ""
+                if status == "ok":
+                    r = res["roofline"]
+                    extra = (f" dominant={r['dominant']} "
+                             f"frac={r['roofline_fraction']:.3f} "
+                             f"compile={res['t_compile_s']}s")
+                elif status == "error":
+                    extra = " " + res["error"][:200]
+                print(f"[dryrun]   -> {status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""HLO text analysis: collective operand bytes, op census, roofline terms.
+
+``collective_stats(hlo_text)`` parses the post-SPMD HLO, builds a symbol
+table of instruction shapes, and sums *operand* sizes of every collective
+(all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute)
+— exactly the quantity the roofline collective term needs (cost_analysis
+does not report it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# "%name = bf16[1,2,3]{...} opcode(" or tuple "( ... )"
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^=]*?\)|[\w]+\[[\d,]*\]\S*)\s+"
+    r"([\w\-]+)\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[8,128]' or tuple '(f32[2], s32[])' -> total bytes."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    count_by_kind: dict
+    total_bytes: int
+
+    def __str__(self):
+        rows = [f"  {k:<20} n={self.count_by_kind[k]:<5} "
+                f"{self.bytes_by_kind[k] / 1e9:.3f} GB"
+                for k in sorted(self.bytes_by_kind)]
+        return "\n".join(rows + [f"  {'TOTAL':<20} "
+                                 f"{self.total_bytes / 1e9:.3f} GB"])
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    shapes: dict[str, str] = {}
+    collect_lines: list[tuple[str, str]] = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, shape_str, opcode = m.groups()
+        shapes[name] = shape_str
+        base = opcode.rstrip(".0123456789")
+        if base.endswith("-start"):
+            base = base[:-6]
+        if base in COLLECTIVES:
+            collect_lines.append((base, line))
+
+    bytes_by_kind: dict = defaultdict(int)
+    count_by_kind: dict = defaultdict(int)
+    for kind, line in collect_lines:
+        # operands: %name tokens inside the call parens
+        call = line.split("(", 1)[1]
+        ops = re.findall(r"%([\w.\-]+)", call)
+        ob = 0
+        for o in ops:
+            if o in shapes:
+                ob += _shape_bytes(shapes[o])
+        if ob == 0:
+            # fallback: use the op's own (output) shape
+            m = _DEF_RE.match(line)
+            ob = _shape_bytes(m.group(2))
+        bytes_by_kind[kind] += ob
+        count_by_kind[kind] += 1
+    return CollectiveStats(dict(bytes_by_kind), dict(count_by_kind),
+                           sum(bytes_by_kind.values()))
+
+
+def op_census(hlo_text: str, top: int = 15) -> dict:
+    """Histogram of HLO opcodes (fusion-level, post-optimization)."""
+    census: dict = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            census[m.group(3).rstrip(".0123456789")] += 1
+    return dict(sorted(census.items(), key=lambda kv: -kv[1])[:top])
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms (TPU v5e targets; see EXPERIMENTS.md §Roofline)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    chips: int
+    model_flops: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def bound_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time / bound time: how close the step is to the
+        compute roofline on useful FLOPs."""
+        if self.bound_time_s == 0:
+            return 0.0
+        useful_s = self.model_flops / (self.chips * PEAK_FLOPS)
+        return useful_s / self.bound_time_s
+
+
+def roofline_terms(hlo_flops: float, hlo_bytes: float,
+                   collective_bytes: float, chips: int,
+                   model_flops: float = 0.0) -> Roofline:
+    """The three terms in seconds.  flops/bytes are totals across the
+    program (cost_analysis convention); collective bytes likewise."""
+    return Roofline(
+        compute_s=hlo_flops / (chips * PEAK_FLOPS),
+        memory_s=hlo_bytes / (chips * HBM_BW),
+        collective_s=collective_bytes / (chips * ICI_BW),
+        hlo_flops=hlo_flops, hlo_bytes=hlo_bytes,
+        collective_bytes=collective_bytes, chips=chips,
+        model_flops=model_flops)

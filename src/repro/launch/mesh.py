@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the "pod" axis maps to
+DCN, so the sharding rules keep parameters off it (DESIGN.md §4).
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devices)}; "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "(launch/dryrun.py does this automatically)")
+    return jax.make_mesh(shape, axes, devices=devices[:need])
+
+
+def make_local_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over however many devices exist (tests)."""
+    need = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(f"need {need} devices, have {len(devices)}")
+    return jax.make_mesh(shape, axes, devices=devices[:need])

@@ -1,0 +1,2 @@
+"""Model zoo: pure-JAX functional models (params = pytrees of
+``parallel.sharding.Param``), scan-over-layers, logical-axis sharding."""

@@ -1,0 +1,222 @@
+"""Jamba (arXiv:2403.19887): Mamba + attention interleaved 1:7, MoE every
+other layer.  28/32 layers are Mamba blocks -> MARCA's technique is on the
+hot path (see DESIGN.md §5).
+
+Layer stack = lax.scan over groups of ``attn_every`` layers (the repeating
+pattern), params stacked on a leading "layers" (=group) dim: small HLO and
+FSDP per-group weight gathers.  Pattern within a group (attn_every=8,
+moe_every=2, moe_offset=1, attn_offset=4):
+
+  pos: 0      1        2      3        4       5        6      7
+       mamba  mamba    mamba  mamba    attn    mamba    mamba  mamba
+       dense  MoE      dense  MoE      dense   MoE      dense  MoE
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks, mamba, moe
+from repro.parallel.sharding import Param, constrain, tree_values
+
+
+def _pos_kind(cfg, pos):
+    is_attn = (cfg.attn_every > 0
+               and pos % cfg.attn_every == cfg.attn_offset % cfg.attn_every)
+    is_moe = (cfg.is_moe and cfg.moe_every > 0
+              and pos % cfg.moe_every == cfg.moe_offset % cfg.moe_every)
+    return is_attn, is_moe
+
+
+def _sublayer_init(cfg, key, pos):
+    is_attn, is_moe = _pos_kind(cfg, pos)
+    ks = jax.random.split(key, 4)
+    p = {"norm1": blocks.norm_init(cfg, ks[0]),
+         "norm2": blocks.norm_init(cfg, ks[1])}
+    if is_attn:
+        p["attn"] = blocks.attention_init(cfg, ks[2])
+    else:
+        p["mamba"] = mamba.mamba_block_init(cfg, ks[2])
+    if is_moe:
+        p["moe"] = moe.moe_init(cfg, ks[3])
+    else:
+        p["mlp"] = blocks.mlp_init(cfg, ks[3])
+    return p
+
+
+def _sublayer_apply(cfg, p, pos, x, positions, state=None, dpos=None):
+    """state: mamba state dict or kv-cache dict for this sublayer."""
+    is_attn, is_moe = _pos_kind(cfg, pos)
+    xn = blocks.apply_norm(cfg, p["norm1"], x)
+    new_state = None
+    if is_attn:
+        h, new_state = blocks.attention_apply(cfg, p["attn"], xn, positions,
+                                              cache=state, pos=dpos)
+    else:
+        h, new_state = mamba.mamba_block_apply(cfg, p["mamba"], xn,
+                                               state=state) \
+            if dpos is None else mamba.mamba_block_step(
+                cfg, p["mamba"], xn, state)
+    x = x + h
+    xn = blocks.apply_norm(cfg, p["norm2"], x)
+    aux = {"moe_lb": jnp.float32(0), "moe_z": jnp.float32(0)}
+    if is_moe:
+        hm, aux = moe.moe_apply(cfg, p["moe"], xn)
+    else:
+        hm = blocks.mlp_apply(cfg, p["mlp"], xn)
+    x = x + hm
+    return constrain(x, "act_batch", "act_seq", "act_embed"), new_state, aux
+
+
+def init(cfg, key):
+    period = cfg.attn_every or 8
+    assert cfg.n_layers % period == 0
+    n_groups = cfg.n_layers // period
+    ks = jax.random.split(key, 3)
+    group_keys = jax.random.split(ks[0], n_groups)
+    positions_p = {}
+    for pos in range(period):
+        def one(k, _pos=pos):
+            return _sublayer_init(cfg, jax.random.fold_in(k, _pos), _pos)
+        stacked = jax.vmap(one)(group_keys)
+        positions_p[f"pos{pos}"] = jax.tree.map(
+            lambda q: Param(q.value, ("layers",) + q.axes), stacked,
+            is_leaf=lambda q: isinstance(q, Param))
+    return {
+        "embed": blocks.embed_init(cfg, ks[1]),
+        "groups": positions_p,
+        "norm_f": blocks.norm_init(cfg, key),
+        "unembed": blocks.unembed_init(cfg, ks[2]),
+    }
+
+
+def forward(cfg, p, batch):
+    dtype = jnp.dtype(cfg.dtype)
+    period = cfg.attn_every or 8
+    h = blocks.embed_apply(cfg, p["embed"], batch["tokens"], dtype)
+    h = constrain(h, "act_batch", "act_seq", "act_embed")
+    b, l = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(l)[None], (b, l))
+    stacked = {k: v for k, v in p["groups"].items()}
+
+    def body(x, group_params):
+        aux = {"moe_lb": jnp.float32(0), "moe_z": jnp.float32(0)}
+        for pos in range(period):
+            x, _, a = _sublayer_apply(cfg, group_params[f"pos{pos}"], pos,
+                                      x, positions)
+            aux = jax.tree.map(jnp.add, aux, a)
+        return x, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    h, auxs = jax.lax.scan(body, h, stacked)
+    h = blocks.apply_norm(cfg, p["norm_f"], h)
+    logits = blocks.unembed_apply(cfg, p.get("unembed", {}), p["embed"], h)
+    return logits, jax.tree.map(jnp.sum, auxs)
+
+
+def init_cache(cfg, batch, max_seq, dtype):
+    """Per-position stacked-over-group caches: kv for attn positions,
+    (h, conv) mamba state otherwise."""
+    period = cfg.attn_every or 8
+    n_groups = cfg.n_layers // period
+    caches = {}
+    for pos in range(period):
+        is_attn, _ = _pos_kind(cfg, pos)
+        if is_attn:
+            hkv, dh = cfg.n_kv_heads, cfg.head_dim
+            shape = (n_groups, batch, max_seq, hkv * dh)
+            axes = ("layers", "act_batch", "act_seq", "act_ffn")
+            caches[f"pos{pos}"] = {
+                "k": Param(jnp.zeros(shape, dtype), axes),
+                "v": Param(jnp.zeros(shape, dtype), axes)}
+        else:
+            di, n, k = cfg.d_inner, cfg.d_state, cfg.d_conv
+            caches[f"pos{pos}"] = {
+                "h": Param(jnp.zeros((n_groups, batch, di, n), jnp.float32),
+                           ("layers", "act_batch", "act_ffn", None)),
+                "conv": Param(jnp.zeros((n_groups, batch, k - 1, di), dtype),
+                              ("layers", "act_batch", None, "act_ffn"))}
+    return {"layers": caches,
+            "pos": Param(jnp.zeros((batch,), jnp.int32), ("act_batch",))}
+
+
+def decode_step(cfg, p, cache, batch):
+    dtype = jnp.dtype(cfg.dtype)
+    period = cfg.attn_every or 8
+    dpos = cache["pos"]
+    h = blocks.embed_apply(cfg, p["embed"], batch["tokens"], dtype)
+    positions = dpos[:, None]
+    stacked = {k: v for k, v in p["groups"].items()}
+
+    def body(x, inp):
+        group_params, group_cache = inp
+        new_cache = {}
+        for pos in range(period):
+            x, ns, _ = _sublayer_apply(cfg, group_params[f"pos{pos}"], pos,
+                                       x, positions,
+                                       state=group_cache[f"pos{pos}"],
+                                       dpos=dpos)
+            new_cache[f"pos{pos}"] = ns
+        return x, new_cache
+
+    h, new_layer_cache = jax.lax.scan(body, h, (stacked, cache["layers"]))
+    h = blocks.apply_norm(cfg, p["norm_f"], h)
+    logits = blocks.unembed_apply(cfg, p.get("unembed", {}), p["embed"], h)
+    return logits, {"layers": new_layer_cache, "pos": dpos + 1}
+
+
+def prefill(cfg, p, cache, batch):
+    """Full-sequence forward filling kv caches (attn positions) and mamba
+    states (others).  cache supplies max_seq capacity."""
+    dtype = jnp.dtype(cfg.dtype)
+    period = cfg.attn_every or 8
+    h = blocks.embed_apply(cfg, p["embed"], batch["tokens"], dtype)
+    h = constrain(h, "act_batch", "act_seq", "act_embed")
+    b, l = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(l)[None], (b, l))
+    S = None
+    for pos in range(period):
+        is_attn, _ = _pos_kind(cfg, pos)
+        if is_attn:
+            S = cache["layers"][f"pos{pos}"]["k"].shape[2]
+
+    def body(x, group_params):
+        new_cache = {}
+        for pos in range(period):
+            is_attn, _ = _pos_kind(cfg, pos)
+            xn = blocks.apply_norm(
+                cfg, group_params[f"pos{pos}"]["norm1"], x)
+            if is_attn:
+                hh, kv = blocks.attention_apply(
+                    cfg, group_params[f"pos{pos}"]["attn"], xn, positions,
+                    return_kv=True)
+                pad = S - l
+                new_cache[f"pos{pos}"] = {
+                    "k": jnp.pad(kv["k"], ((0, 0), (0, pad), (0, 0))),
+                    "v": jnp.pad(kv["v"], ((0, 0), (0, pad), (0, 0)))}
+            else:
+                hh, ns = mamba.mamba_block_apply(
+                    cfg, group_params[f"pos{pos}"]["mamba"], xn)
+                new_cache[f"pos{pos}"] = {
+                    "h": ns["h"], "conv": ns["conv"].astype(dtype)}
+            x = x + hh
+            xn = blocks.apply_norm(
+                cfg, group_params[f"pos{pos}"]["norm2"], x)
+            _, is_moe = _pos_kind(cfg, pos)
+            if is_moe:
+                hm, _ = moe.moe_apply(cfg, group_params[f"pos{pos}"]["moe"],
+                                      xn)
+            else:
+                hm = blocks.mlp_apply(cfg, group_params[f"pos{pos}"]["mlp"],
+                                      xn)
+            x = x + hm
+            x = constrain(x, "act_batch", "act_seq", "act_embed")
+        return x, new_cache
+
+    stacked = {k: v for k, v in p["groups"].items()}
+    h, new_layer_cache = jax.lax.scan(body, h, stacked)
+    h = blocks.apply_norm(cfg, p["norm_f"], h)
+    logits = blocks.unembed_apply(cfg, p.get("unembed", {}), p["embed"], h)
+    return logits, {"layers": new_layer_cache,
+                    "pos": jnp.full((b,), l, jnp.int32)}

@@ -1,0 +1,121 @@
+"""Mamba block (Gu & Dao 2023) — the architecture MARCA accelerates.
+
+Computational flow per block (paper Fig. 3): LN -> in_proj -> [x | z] ->
+causal depthwise conv -> SiLU -> x_proj -> (dt, B, C) -> softplus(dt_proj) ->
+selective scan (the element-wise chain MARCA fuses) -> gate by SiLU(z) ->
+out_proj -> residual.
+
+The MARCA knobs: cfg.scan_impl selects seq/assoc/chunked/pallas,
+cfg.exp_impl/silu_impl select exact vs the paper's approximations, and
+cfg.conv_impl selects the Pallas conv kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import approx
+from repro.kernels import ops
+from repro.models import blocks
+from repro.parallel.sharding import Param, constrain
+
+
+def mamba_block_init(cfg, key):
+    d, di, n, k, r = (cfg.d_model, cfg.d_inner, cfg.d_state, cfg.d_conv,
+                      cfg.dt_rank)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A; dt bias init for softplus range
+    a_init = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :],
+                      (di, 1))
+    dt_init = jnp.exp(
+        jax.random.uniform(ks[0], (di,)) * (jnp.log(0.1) - jnp.log(0.001))
+        + jnp.log(0.001))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inverse softplus
+    return {
+        "in_proj": blocks.dense_init(ks[1], d, 2 * di, ("embed", "ffn")),
+        "conv_w": Param(
+            jax.random.normal(ks[2], (k, di), jnp.float32) * (1.0 / k),
+            ("conv", "ffn")),
+        "conv_b": Param(jnp.zeros((di,), jnp.float32), ("ffn",)),
+        "x_proj": blocks.dense_init(ks[3], di, r + 2 * n, ("ffn", None)),
+        "dt_proj": blocks.dense_init(ks[4], r, di, (None, "ffn"),
+                                     scale=r ** -0.5),
+        "dt_bias": Param(dt_bias, ("ffn",)),
+        "A_log": Param(jnp.log(a_init), ("ffn", "state")),
+        "D": Param(jnp.ones((di,), jnp.float32), ("ffn",)),
+        "out_proj": blocks.dense_init(ks[5], di, d, ("ffn", "embed")),
+    }
+
+
+def _project(cfg, p, x):
+    """Shared pre-scan computation: returns x_conv_in, z."""
+    cdt = x.dtype
+    xz = blocks.dense(p["in_proj"], x, cdt)
+    xz = constrain(xz, "act_batch", "act_seq", "act_ffn")
+    return jnp.split(xz, 2, axis=-1)
+
+
+def _ssm_inputs(cfg, p, x_a):
+    """x_a (b, l, di) -> dt (b,l,di), B (b,l,n), C (b,l,n)."""
+    n, r = cfg.d_state, cfg.dt_rank
+    cdt = x_a.dtype
+    dbc = blocks.dense(p["x_proj"], x_a, cdt)
+    dt_low, B, C = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = blocks.dense(p["dt_proj"], dt_low, cdt)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"]).astype(cdt)
+    return dt, B, C
+
+
+def mamba_block_apply(cfg, p, x, state=None):
+    """Full-sequence path.  state (decode continuation) is a dict with
+    'h' (b, di, n) f32 and 'conv' (b, k-1, di); returns (y, new_state)."""
+    silu = approx.get_silu(cfg.silu_impl)
+    x_in, z = _project(cfg, p, x)
+    conv_state = None if state is None else state["conv"]
+    x_c, new_conv = ops.causal_conv1d(
+        x_in, p["conv_w"], p["conv_b"], x_prev=conv_state,
+        impl=cfg.conv_impl)
+    x_a = silu(x_c)
+    dt, B, C = _ssm_inputs(cfg, p, x_a)
+    A = -jnp.exp(p["A_log"])
+    h0 = None if state is None else state["h"]
+    y, h_last = ops.selective_scan(
+        x_a, dt, A, B, C, D=p["D"], z=z, h0=h0,
+        impl=cfg.scan_impl, chunk=cfg.scan_chunk,
+        exp_impl=cfg.exp_impl, silu_impl=cfg.silu_impl)
+    y = constrain(y, "act_batch", "act_seq", "act_ffn")
+    out = blocks.dense(p["out_proj"], y, x.dtype)
+    return out, {"h": h_last, "conv": new_conv}
+
+
+def mamba_block_step(cfg, p, x_t, state):
+    """Single-token decode.  x_t (b, 1, d); state dict as above."""
+    silu = approx.get_silu(cfg.silu_impl)
+    x_in, z = _project(cfg, p, x_t)             # (b,1,di)
+    # conv state update: shift window, apply depthwise filter at last tap
+    conv = state["conv"]                        # (b, k-1, di)
+    window = jnp.concatenate([conv, x_in], axis=1)      # (b, k, di)
+    w = p["conv_w"].astype(jnp.float32)
+    x_c = jnp.sum(window.astype(jnp.float32) * w[None], axis=1,
+                  keepdims=True) + p["conv_b"]
+    x_c = x_c.astype(x_t.dtype)
+    new_conv = window[:, 1:]
+    x_a = silu(x_c)
+    dt, B, C = _ssm_inputs(cfg, p, x_a)
+    A = -jnp.exp(p["A_log"])
+    y, h = ops.selective_scan(
+        x_a, dt, A, B, C, D=p["D"], z=z, h0=state["h"],
+        impl="seq", exp_impl=cfg.exp_impl, silu_impl=cfg.silu_impl)
+    out = blocks.dense(p["out_proj"], y, x_t.dtype)
+    return out, {"h": h, "conv": new_conv}
+
+
+def mamba_state_init(cfg, batch, dtype):
+    di, n, k = cfg.d_inner, cfg.d_state, cfg.d_conv
+    return {
+        "h": Param(jnp.zeros((batch, di, n), jnp.float32),
+                   ("act_batch", "act_ffn", None)),
+        "conv": Param(jnp.zeros((batch, k - 1, di), dtype),
+                      ("act_batch", None, "act_ffn")),
+    }

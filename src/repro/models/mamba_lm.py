@@ -1,0 +1,107 @@
+"""Pure Mamba LM (the paper's evaluation models, Table 1: 130M..2.8B).
+
+Homogeneous stack of Mamba blocks (residual, pre-norm), lax.scan over
+stacked layer params, tied embeddings (as in the released Mamba family).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks, mamba
+from repro.parallel.sharding import Param, constrain
+
+
+def _layer_init(cfg, key):
+    ks = jax.random.split(key, 2)
+    return {"norm": blocks.norm_init(cfg, ks[0]),
+            "mixer": mamba.mamba_block_init(cfg, ks[1])}
+
+
+def _layer_apply(cfg, p, x, state=None, step=False):
+    xn = blocks.apply_norm(cfg, p["norm"], x)
+    if step:
+        y, new_state = mamba.mamba_block_step(cfg, p["mixer"], xn, state)
+    else:
+        y, new_state = mamba.mamba_block_apply(cfg, p["mixer"], xn,
+                                               state=state)
+    x = x + y
+    return constrain(x, "act_batch", "act_seq", "act_embed"), new_state
+
+
+def init(cfg, key):
+    ks = jax.random.split(key, 3)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    stacked = jax.vmap(lambda k: _layer_init(cfg, k))(layer_keys)
+    stacked = jax.tree.map(
+        lambda q: Param(q.value, ("layers",) + q.axes), stacked,
+        is_leaf=lambda q: isinstance(q, Param))
+    return {"embed": blocks.embed_init(cfg, ks[1]),
+            "layers": stacked,
+            "norm_f": blocks.norm_init(cfg, ks[2]),
+            "unembed": blocks.unembed_init(cfg, ks[2])}
+
+
+def forward(cfg, p, batch):
+    dtype = jnp.dtype(cfg.dtype)
+    h = blocks.embed_apply(cfg, p["embed"], batch["tokens"], dtype)
+    h = constrain(h, "act_batch", "act_seq", "act_embed")
+
+    def body(x, lp):
+        y, _ = _layer_apply(cfg, lp, x)
+        return y, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, p["layers"])
+    h = blocks.apply_norm(cfg, p["norm_f"], h)
+    logits = blocks.unembed_apply(cfg, p.get("unembed", {}), p["embed"], h)
+    return logits, {}
+
+
+def init_cache(cfg, batch, max_seq, dtype):
+    L = cfg.n_layers
+    di, n, k = cfg.d_inner, cfg.d_state, cfg.d_conv
+    return {
+        "h": Param(jnp.zeros((L, batch, di, n), jnp.float32),
+                   ("layers", "act_batch", "act_ffn", None)),
+        "conv": Param(jnp.zeros((L, batch, k - 1, di), dtype),
+                      ("layers", "act_batch", None, "act_ffn")),
+        "pos": Param(jnp.zeros((batch,), jnp.int32), ("act_batch",)),
+    }
+
+
+def decode_step(cfg, p, cache, batch):
+    dtype = jnp.dtype(cfg.dtype)
+    h = blocks.embed_apply(cfg, p["embed"], batch["tokens"], dtype)
+    h = constrain(h, "act_batch", None, "act_embed")
+
+    def body(x, lp_state):
+        lp, hs, cs = lp_state
+        y, ns = _layer_apply(cfg, lp, x, state={"h": hs, "conv": cs},
+                             step=True)
+        return y, (ns["h"], ns["conv"])
+
+    h, (nh, nc) = jax.lax.scan(body, h, (p["layers"], cache["h"],
+                                         cache["conv"]))
+    h = blocks.apply_norm(cfg, p["norm_f"], h)
+    logits = blocks.unembed_apply(cfg, p.get("unembed", {}), p["embed"], h)
+    return logits, {"h": nh, "conv": nc, "pos": cache["pos"] + 1}
+
+
+def prefill(cfg, p, cache, batch):
+    """Full-sequence forward that also returns the decode cache."""
+    dtype = jnp.dtype(cfg.dtype)
+    h = blocks.embed_apply(cfg, p["embed"], batch["tokens"], dtype)
+    h = constrain(h, "act_batch", "act_seq", "act_embed")
+
+    def body(x, lp):
+        y, ns = _layer_apply(cfg, lp, x)
+        return y, (ns["h"], ns["conv"])
+
+    h, (hs, cs) = jax.lax.scan(body, h, p["layers"])
+    h = blocks.apply_norm(cfg, p["norm_f"], h)
+    logits = blocks.unembed_apply(cfg, p.get("unembed", {}), p["embed"], h)
+    b = h.shape[0]
+    pos = jnp.full((b,), batch["tokens"].shape[1], jnp.int32)
+    return logits, {"h": hs, "conv": cs, "pos": pos}

@@ -1,0 +1,245 @@
+"""Mixture-of-Experts FFN: top-k router with capacity, sort-free scatter
+dispatch, shared experts (qwen2-moe) and dense residual (arctic).
+
+Expert weights are sharded over the "expert" logical axis (EP over the mesh
+"model" axis) and over "embed" (FSDP over "data"); dispatch/combine are
+scatter/gather einsums whose cross-device movement GSPMD lowers to
+all-to-all/all-gather — visible in the dry-run collective table.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import approx
+from repro.models import blocks
+from repro.parallel.sharding import Param, constrain
+
+
+def _e_padded(cfg):
+    return max(cfg.expert_pad_to, cfg.n_experts)
+
+
+def moe_init(cfg, key, d_ff=None):
+    d, E = cfg.d_model, _e_padded(cfg)
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    sc = d ** -0.5
+
+    def ew(k, shape, axes):
+        return Param(jax.random.normal(k, shape, jnp.float32) * sc, axes)
+
+    p = {
+        "router": blocks.dense_init(ks[0], d, E, ("embed", None)),  # E = padded
+        "w1": ew(ks[1], (E, d, f), ("expert", "embed", None)),
+        "w3": ew(ks[2], (E, d, f), ("expert", "embed", None)),
+        "w2": ew(ks[3], (E, f, d), ("expert", None, "embed")),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = blocks.mlp_init(cfg, ks[4],
+                                      d_ff=cfg.n_shared_experts * f)
+    return p
+
+
+def _capacity(cfg, n_tokens):
+    cap = int(n_tokens * cfg.top_k * cfg.capacity_factor
+              // max(cfg.n_experts, 1))
+    return max(cap, cfg.top_k, 1)
+
+
+def moe_apply(cfg, p, x):
+    """x (b, s, d) -> (y (b, s, d), aux dict with load-balance/z losses).
+
+    Dispatch implementation per cfg.moe_impl: "dense" = pjit-auto
+    scatter/gather; "ep" = explicit shard_map all-to-all (requires an
+    active mesh with a model axis; §Perf Q5); "auto" = ep when available.
+    """
+    if cfg.moe_impl in ("auto", "ep"):
+        mesh = _ep_available(cfg, x.shape[1])
+        if mesh is not None:
+            return moe_apply_ep(cfg, p, x, mesh)
+        if cfg.moe_impl == "ep":
+            raise RuntimeError("moe_impl='ep' needs a mesh with a 'model' "
+                               "axis and divisible seq/experts")
+    silu = approx.get_silu(cfg.silu_impl)
+    b, s, d = x.shape
+    E, k = _e_padded(cfg), cfg.top_k
+    T = b * s
+    cap = _capacity(cfg, T)
+    xf = x.reshape(T, d)
+
+    logits = blocks.dense(p["router"], xf.astype(jnp.float32),
+                          jnp.float32)                    # (T, E_pad)
+    if E > cfg.n_experts:
+        # padded experts are inert: forced out of the top-k
+        pad_mask = jnp.arange(E) >= cfg.n_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                   # (T, k)
+    if cfg.norm_topk:
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # --- aux losses (GShard/Switch load balance + router z-loss) ---
+    me = probs.mean(0)                                    # (E,)
+    assign = jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32).mean(0)
+    aux_lb = cfg.n_experts * jnp.sum(me * assign)
+    aux_z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = {"moe_lb": aux_lb * cfg.router_aux_coef,
+           "moe_z": aux_z * cfg.router_z_coef}
+
+    # --- capacity-based dispatch (position = rank within expert) ---
+    e_flat = idx.reshape(-1)                              # (T*k,)
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)   # (T*k, E)
+    pos_all = jnp.cumsum(onehot, axis=0) - 1              # (T*k, E)
+    pos = jnp.take_along_axis(pos_all, e_flat[:, None], 1)[:, 0]
+    keep = pos < cap                                      # (T*k,)
+    # overflow assignments scatter zeros into slot 0 / gather from slot 0
+    # and are masked by `keep` — no dump row, no whole-tensor concatenate
+    # (the concat was replicated: ~1 TB/chip; EXPERIMENTS.md §Perf Q2)
+    slot = jnp.where(keep, e_flat * cap + pos, 0)
+
+    xrep = jnp.repeat(xf, k, axis=0)                      # (T*k, d)
+    buckets = jnp.zeros((E * cap, d), x.dtype).at[slot].add(
+        jnp.where(keep[:, None], xrep, 0))
+    buckets = buckets.reshape(E, cap, d)
+    # EP x DP: experts over "model", capacity slots over ("pod","data") —
+    # without the capacity sharding every data-shard chip computes the SAME
+    # expert at full capacity (16x redundant FLOPs; caught by the roofline
+    # useful/HLO ratio, see EXPERIMENTS.md §Perf iteration J2).
+    buckets = constrain(buckets, "act_expert", "act_batch", None)
+
+    # --- expert computation (batched swiglu) ---
+    cdt = x.dtype
+    h = jnp.einsum("ecd,edf->ecf", buckets,
+                   p["w1"].astype(cdt))
+    h = silu(h) * jnp.einsum("ecd,edf->ecf", buckets,
+                             p["w3"].astype(cdt))
+    h = constrain(h, "act_expert", "act_batch", None)
+    y_b = jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(cdt))
+    y_flat = y_b.reshape(E * cap, d)
+
+    # --- combine: gather back, weight by gate, sum over k ---
+    y_tok = y_flat[slot]                                  # (T*k, d)
+    gflat = (gate.reshape(-1) * keep).astype(cdt)         # (T*k,)
+    y = (y_tok * gflat[:, None]).reshape(T, k, d).sum(1)
+
+    y = y.reshape(b, s, d)
+    if cfg.n_shared_experts:
+        y = y + blocks.mlp_apply(cfg, p["shared"], x)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Explicit expert-parallel dispatch (shard_map all-to-all), §Perf Q5.
+#
+# The pjit-auto dispatch above lets GSPMD resolve the computed-index
+# gather/scatter between token-sharded and expert-sharded layouts; it does
+# so with masked (T*k, d) all-reduces over the model axis per MoE layer
+# (~740 GB/chip on qwen2-moe train_4k).  The production pattern moves each
+# token row exactly once: tokens are sequence-sharded over `model` inside
+# the layer, each chip dispatches its local tokens into per-expert capacity
+# buckets, one tiled all_to_all over `model` routes buckets to their expert
+# owners, expert GEMMs run local, and the reverse all_to_all brings results
+# home.  Capacity becomes per-(data-shard, expert) — standard EP semantics
+# (dropping pattern differs from the global-capacity dense path; tests
+# compare at no-drop capacity).
+# ---------------------------------------------------------------------------
+
+def _ep_available(cfg, s):
+    from repro.parallel import sharding as shd
+    mesh = shd._CTX["mesh"]
+    if mesh is None or "model" not in mesh.axis_names:
+        return None
+    P_model = mesh.shape["model"]
+    E = _e_padded(cfg)
+    if E % P_model or s % P_model:
+        return None
+    return mesh
+
+
+def _moe_local(cfg, w1, w3, w2, router, xloc, *, axis: str,
+               stat_axes: tuple):
+    """Runs inside shard_map.  xloc (tloc, d) local tokens; router (d, E);
+    w1/w3 (e_loc, d, f); w2 (e_loc, f, d).  stat_axes: all mesh axes (aux
+    statistics are reduced globally so they replicate)."""
+    silu = approx.get_silu(cfg.silu_impl)
+    E, k = _e_padded(cfg), cfg.top_k
+    P = jax.lax.psum(1, axis)
+    tloc, d = xloc.shape
+    cap = max(int(tloc * k * cfg.capacity_factor // E), 1)
+
+    logits = (xloc.astype(jnp.float32) @ router)          # (tloc, E)
+    if E > cfg.n_experts:
+        pad_mask = jnp.arange(E) >= cfg.n_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)
+    if cfg.norm_topk:
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    e_flat = idx.reshape(-1)
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)
+    pos = jnp.take_along_axis(jnp.cumsum(onehot, 0) - 1,
+                              e_flat[:, None], 1)[:, 0]
+    keep = pos < cap
+    slot = jnp.where(keep, e_flat * cap + pos, 0)
+    xrep = jnp.repeat(xloc, k, axis=0)
+    buckets = jnp.zeros((E * cap, d), xloc.dtype).at[slot].add(
+        jnp.where(keep[:, None], xrep, 0)).reshape(E, cap, d)
+
+    # route buckets to expert owners: (E, cap, d) -> (E/P, P*cap, d)
+    routed = jax.lax.all_to_all(buckets, axis, split_axis=0,
+                                concat_axis=1, tiled=True)
+    cdt = xloc.dtype
+    h = jnp.einsum("ecd,edf->ecf", routed, w1.astype(cdt))
+    h = silu(h) * jnp.einsum("ecd,edf->ecf", routed, w3.astype(cdt))
+    y_r = jnp.einsum("ecf,efd->ecd", h, w2.astype(cdt))
+    # route results home: (E/P, P*cap, d) -> (E, cap, d)
+    y_b = jax.lax.all_to_all(y_r, axis, split_axis=1, concat_axis=0,
+                             tiled=True).reshape(E * cap, d)
+
+    y_tok = y_b[slot] * (gate.reshape(-1) * keep).astype(cdt)[:, None]
+    y = y_tok.reshape(tloc, k, d).sum(1)
+
+    # aux losses: token statistics reduced over the WHOLE mesh (replicated)
+    n_tok = jax.lax.psum(jnp.float32(tloc), stat_axes)
+    me = jax.lax.psum(probs.sum(0), stat_axes) / n_tok
+    assign = jax.lax.psum(
+        jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32).sum(0),
+        stat_axes) / n_tok
+    aux_lb = cfg.n_experts * jnp.sum(me * assign)
+    aux_z = jax.lax.psum(
+        (jax.nn.logsumexp(logits, axis=-1) ** 2).sum(), stat_axes) / n_tok
+    return y, aux_lb, aux_z
+
+
+def moe_apply_ep(cfg, p, x, mesh):
+    """Expert-parallel MoE via shard_map (tokens seq-sharded over `model`)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    import functools
+    b, s, d = x.shape
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    xs = P(batch_axes if batch_axes else None, "model", None)
+
+    stat_axes = tuple(mesh.axis_names)
+
+    def wrapped(w1, w3, w2, router, xloc):
+        bl, sl, dl = xloc.shape
+        y, lb, z = _moe_local(cfg, w1, w3, w2, router,
+                              xloc.reshape(bl * sl, dl), axis="model",
+                              stat_axes=stat_axes)
+        return (y.reshape(bl, sl, dl), lb, z)
+
+    fn = shard_map(
+        wrapped, mesh=mesh,
+        in_specs=(P("model", None, None), P("model", None, None),
+                  P("model", None, None), P(None, None), xs),
+        out_specs=(xs, P(), P()),
+    )
+    y, lb, z = fn(p["w1"], p["w3"], p["w2"], p["router"]["w"], x)
+    aux = {"moe_lb": lb * cfg.router_aux_coef,
+           "moe_z": z * cfg.router_z_coef}
+    if cfg.n_shared_experts:
+        y = y + blocks.mlp_apply(cfg, p["shared"], x)
+    return y, aux

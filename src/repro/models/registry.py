@@ -1,0 +1,228 @@
+"""Model registry: family dispatch + step functions + abstract inits.
+
+API surface used by the launcher / trainer / dry-run:
+
+  init_params(cfg, key)        -> Param tree (real arrays)
+  abstract_params(cfg)         -> Param tree (ShapeDtypeStructs)  [no alloc]
+  forward(cfg, params, batch)  -> (logits, aux)     params/batch plain values
+  loss_fn(cfg, params, batch)  -> (loss, metrics)
+  train_step / make_train_step -> jit-able step with optimizer
+  init_cache / abstract_cache  -> decode cache (Param tree)
+  decode_step(cfg, p, cache, batch) -> (logits, new_cache)
+  input_specs(cfg, shape)      -> ShapeDtypeStruct batch stand-ins
+  count_params(cfg)            -> analytical N (for 6ND roofline)
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import jamba, mamba_lm, transformer, xlstm
+from repro.parallel import sharding
+from repro.parallel.sharding import Param
+
+
+_FAMILIES = {
+    "transformer": transformer,
+    "mamba": mamba_lm,
+    "jamba": jamba,
+    "xlstm": xlstm,
+}
+
+
+def family(cfg):
+    return _FAMILIES[cfg.family]
+
+
+# ---------------------------------------------------------------------------
+# Params / caches
+# ---------------------------------------------------------------------------
+
+def init_params(cfg, key):
+    return family(cfg).init(cfg, key)
+
+
+def abstract_params(cfg):
+    """Param tree of ShapeDtypeStructs — Param.axes survive eval_shape."""
+    return jax.eval_shape(
+        lambda k: family(cfg).init(cfg, k), jax.random.key(0))
+
+
+def init_cache(cfg, batch, max_seq, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    return family(cfg).init_cache(cfg, batch, max_seq, dtype)
+
+
+def abstract_cache(cfg, batch, max_seq):
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, max_seq))
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+def forward(cfg, params, batch):
+    return family(cfg).forward(cfg, params, batch)
+
+
+def decode_step(cfg, params, cache, batch):
+    return family(cfg).decode_step(cfg, params, cache, batch)
+
+
+def prefill(cfg, params, cache, batch):
+    """Full-seq forward that fills the decode cache (serving entry)."""
+    return family(cfg).prefill(cfg, params, cache, batch)
+
+
+def loss_fn(cfg, params, batch):
+    """Causal LM loss (multi-codebook aware), fp32 softmax, z-reg metrics."""
+    logits, aux = forward(cfg, params, batch)
+    labels = batch["labels"]
+    if cfg.n_codebooks > 1:                    # (b, l, ncb, V) vs (b, l, ncb)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, labels[..., None],
+                                 axis=-1)[..., 0]
+        nll = (lse - ll).mean()
+    else:
+        if cfg.frontend == "vision_stub":      # image prefix carries no loss
+            logits = logits[:, -labels.shape[1]:]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, labels[..., None],
+                                 axis=-1)[..., 0]
+        nll = (lse - ll).mean()
+    loss = nll
+    metrics = {"nll": nll}
+    for k, v in aux.items():
+        loss = loss + v
+        metrics[k] = v
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins, shardable, no allocation)
+# ---------------------------------------------------------------------------
+
+def batch_struct(cfg, batch_size, seq_len, with_labels=True):
+    """Concrete-shape dict for one step (tokens/embeds per frontend)."""
+    tok = jax.ShapeDtypeStruct((batch_size, seq_len), jnp.int32)
+    out = {}
+    if cfg.frontend == "audio_stub":
+        out["embeds"] = jax.ShapeDtypeStruct(
+            (batch_size, seq_len, cfg.d_model), jnp.dtype(cfg.dtype))
+        if with_labels:
+            out["labels"] = jax.ShapeDtypeStruct(
+                (batch_size, seq_len, cfg.n_codebooks), jnp.int32)
+    elif cfg.frontend == "vision_stub":
+        out["tokens"] = tok
+        out["img_embeds"] = jax.ShapeDtypeStruct(
+            (batch_size, cfg.img_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+        if with_labels:
+            out["labels"] = jax.ShapeDtypeStruct(
+                (batch_size, seq_len), jnp.int32)
+    else:
+        out["tokens"] = tok
+        if with_labels:
+            out["labels"] = jax.ShapeDtypeStruct(
+                (batch_size, seq_len), jnp.int32)
+    return out
+
+
+def batch_axes(cfg, struct):
+    """Logical axes tree matching batch_struct (for in_shardings)."""
+    ax = {}
+    for k, v in struct.items():
+        if v.ndim == 2:
+            ax[k] = ("act_batch", "act_seq")
+        elif k in ("embeds", "img_embeds"):
+            ax[k] = ("act_batch", "act_seq", "act_embed")
+        else:
+            ax[k] = ("act_batch", "act_seq", None)
+    return ax
+
+
+def decode_batch_struct(cfg, batch_size):
+    out = {}
+    if cfg.frontend == "audio_stub":
+        out["embeds"] = jax.ShapeDtypeStruct(
+            (batch_size, 1, cfg.d_model), jnp.dtype(cfg.dtype))
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((batch_size, 1), jnp.int32)
+    return out
+
+
+def make_batch(cfg, batch_size, seq_len, key=None, with_labels=True):
+    """Concrete random batch with the struct above (smoke tests/examples)."""
+    key = key if key is not None else jax.random.key(0)
+    struct = batch_struct(cfg, batch_size, seq_len, with_labels)
+    ks = jax.random.split(key, len(struct))
+    out = {}
+    for (name, s), k in zip(sorted(struct.items()), ks):
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[name] = jax.random.randint(k, s.shape, 0, cfg.vocab,
+                                           dtype=s.dtype)
+        else:
+            out[name] = jax.random.normal(k, s.shape, s.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Analytical parameter counts (roofline MODEL_FLOPS = 6 N D)
+# ---------------------------------------------------------------------------
+
+def count_params(cfg, active_only: bool = False) -> int:
+    d, f, V, L = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.n_layers
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    n = 0
+
+    def attn():
+        return d * hq * dh + 2 * d * hkv * dh + hq * dh * d
+
+    def dense_mlp(ff):
+        return 3 * d * ff if cfg.mlp == "swiglu" else 2 * d * ff
+
+    def moe_mlp():
+        E = cfg.top_k if active_only else cfg.n_experts
+        m = E * 3 * d * f + d * cfg.n_experts  # router always full
+        if cfg.n_shared_experts:
+            m += 3 * d * (cfg.n_shared_experts * f)
+        if cfg.dense_residual:
+            m += dense_mlp(f)
+        return m
+
+    def mamba_blk():
+        di, ns, r, k = cfg.d_inner, cfg.d_state, cfg.dt_rank, cfg.d_conv
+        return (2 * d * di + k * di + di * (r + 2 * ns) + r * di
+                + di * ns + di + di * d)
+
+    def mlstm_blk():
+        di = 2 * d
+        dh2 = di // hq
+        return 2 * d * di + cfg.d_conv * di + 2 * hq * dh2 * dh2 + di + d * di
+
+    def slstm_blk():
+        dh2 = d // hq
+        return 4 * d * d + 4 * hq * dh2 * dh2 + d * d
+
+    if cfg.family == "mamba":
+        n += L * mamba_blk()
+    elif cfg.family == "xlstm":
+        for i in range(L):
+            n += slstm_blk() if xlstm._is_slstm(cfg, i) else mlstm_blk()
+    elif cfg.family == "jamba":
+        for i in range(L):
+            is_attn, is_moe = jamba._pos_kind(cfg, i)
+            n += attn() if is_attn else mamba_blk()
+            n += moe_mlp() if is_moe else dense_mlp(f)
+    else:
+        per = attn() + (moe_mlp() if cfg.is_moe else dense_mlp(f))
+        n += L * per
+    n += V * d                      # embed
+    if not cfg.tie_embeddings:
+        n += d * V * cfg.n_codebooks
+    return int(n)

@@ -1,0 +1,252 @@
+"""Decoder-only transformer LM covering the dense and MoE assigned archs:
+
+  granite-20b (MQA), olmo-1b (non-parametric LN), qwen2-7b / qwen2.5-14b
+  (GQA + QKV bias), musicgen-large (audio_stub frontend, 4 codebook heads),
+  phi-3-vision (vision_stub prefix embeddings), qwen2-moe-a2.7b (shared +
+  routed experts), arctic-480b (MoE + dense residual).
+
+Layer stack is lax.scan over stacked params (small HLO, FSDP-friendly
+per-layer weight gathers) with optional remat.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks, moe
+from repro.parallel.sharding import Param, constrain, tree_values
+
+
+def _layer_init(cfg, key):
+    ks = jax.random.split(key, 4)
+    p = {
+        "norm1": blocks.norm_init(cfg, ks[0]),
+        "attn": blocks.attention_init(cfg, ks[1]),
+        "norm2": blocks.norm_init(cfg, ks[2]),
+    }
+    if cfg.is_moe:
+        p["moe"] = moe.moe_init(cfg, ks[3])
+        if cfg.dense_residual:
+            p["mlp"] = blocks.mlp_init(cfg, jax.random.fold_in(ks[3], 1))
+    else:
+        p["mlp"] = blocks.mlp_init(cfg, ks[3])
+    return p
+
+
+def _layer_apply(cfg, p, x, positions, cache=None, pos=None,
+                 return_kv=False):
+    h, new_cache = blocks.attention_apply(
+        cfg, p["attn"], blocks.apply_norm(cfg, p["norm1"], x),
+        positions, cache=cache, pos=pos, return_kv=return_kv)
+    x = x + h
+    hn = blocks.apply_norm(cfg, p["norm2"], x)
+    aux = {"moe_lb": jnp.float32(0), "moe_z": jnp.float32(0)}
+    if cfg.is_moe:
+        hm, aux = moe.moe_apply(cfg, p["moe"], hn)
+        if cfg.dense_residual:
+            hm = hm + blocks.mlp_apply(cfg, p["mlp"], hn)
+    else:
+        hm = blocks.mlp_apply(cfg, p["mlp"], hn)
+    x = x + hm
+    x = constrain(x, "act_batch", "act_seq", "act_embed")
+    return x, new_cache, aux
+
+
+def init(cfg, key):
+    ks = jax.random.split(key, 4 + cfg.n_layers)
+    p = {"embed": blocks.embed_init(cfg, ks[0]),
+         "norm_f": blocks.norm_init(cfg, ks[1])}
+    if cfg.n_codebooks > 1:
+        p["heads"] = {
+            f"cb{i}": blocks.dense_init(
+                jax.random.fold_in(ks[2], i), cfg.d_model, cfg.vocab,
+                ("embed", "vocab"))
+            for i in range(cfg.n_codebooks)}
+    else:
+        p["unembed"] = blocks.unembed_init(cfg, ks[2])
+    if cfg.scan_layers:
+        layer_keys = jax.random.split(ks[3], cfg.n_layers)
+        p["layers"] = jax.vmap(lambda k: _layer_init(cfg, k))(layer_keys)
+        p["layers"] = jax.tree.map(
+            lambda q: Param(q.value, ("layers",) + q.axes), p["layers"],
+            is_leaf=lambda q: isinstance(q, Param))
+    else:
+        p["layers"] = [_layer_init(cfg, ks[4 + i])
+                       for i in range(cfg.n_layers)]
+    return p
+
+
+def _inputs_to_h(cfg, p, batch, dtype):
+    """Resolve the (stub) frontend to the first hidden state + positions."""
+    if cfg.frontend == "audio_stub":
+        # precomputed EnCodec frame embeddings from input_specs()
+        h = batch["embeds"].astype(dtype)
+        b, l = h.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(l)[None], (b, l))
+    elif cfg.frontend == "vision_stub":
+        # CLIP patch embeddings prepended to token embeddings
+        img = batch["img_embeds"].astype(dtype)        # (b, n_img, d)
+        tok = blocks.embed_apply(cfg, p["embed"], batch["tokens"], dtype)
+        h = jnp.concatenate([img, tok], axis=1)
+        b, l = h.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(l)[None], (b, l))
+    else:
+        h = blocks.embed_apply(cfg, p["embed"], batch["tokens"], dtype)
+        b, l = h.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(l)[None], (b, l))
+    return constrain(h, "act_batch", "act_seq", "act_embed"), positions
+
+
+def forward(cfg, p, batch):
+    """Full-sequence forward -> (logits, aux).  batch per frontend."""
+    dtype = jnp.dtype(cfg.dtype)
+    h, positions = _inputs_to_h(cfg, p, batch, dtype)
+
+    if cfg.scan_layers:
+        stacked = p["layers"]
+
+        def body(x, lp):
+            y, _, aux = _layer_apply(cfg, lp, x, positions)
+            return y, aux
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        h, auxs = jax.lax.scan(body, h, stacked)
+        aux = jax.tree.map(jnp.sum, auxs)
+    else:
+        aux = {"moe_lb": jnp.float32(0), "moe_z": jnp.float32(0)}
+        for lp in p["layers"]:
+            h, _, a = _layer_apply(cfg, lp, h, positions)
+            aux = jax.tree.map(jnp.add, aux, a)
+
+    h = blocks.apply_norm(cfg, p["norm_f"], h)
+    if cfg.n_codebooks > 1:
+        logits = jnp.stack(
+            [blocks.dense(p["heads"][f"cb{i}"], h.astype(jnp.float32))
+             for i in range(cfg.n_codebooks)], axis=2)  # (b, l, ncb, V)
+    else:
+        logits = blocks.unembed_apply(cfg, p.get("unembed", {}),
+                                      p["embed"], h)
+    return logits, aux
+
+
+def init_cache(cfg, batch, max_seq, dtype):
+    """Per-layer KV caches, stacked on a leading 'layers' dim (flat kv).
+    kv_cache_dtype == "int8": int8 payload + per-(layer,b,pos) f32 absmax
+    scales (~2x less decode-cache HBM vs bf16; see EXPERIMENTS.md)."""
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    shape = (cfg.n_layers, batch, max_seq, hkv * dh)
+    axes = ("layers", "act_batch", "act_seq", "act_ffn")
+    out = {"pos": Param(jnp.zeros((batch,), jnp.int32), ("act_batch",))}
+    if cfg.kv_cache_dtype == "int8":
+        sshape = (cfg.n_layers, batch, max_seq, 1)
+        saxes = ("layers", "act_batch", "act_seq", None)
+        out.update({
+            "k": Param(jnp.zeros(shape, jnp.int8), axes),
+            "v": Param(jnp.zeros(shape, jnp.int8), axes),
+            "k_scale": Param(jnp.zeros(sshape, jnp.float32), saxes),
+            "v_scale": Param(jnp.zeros(sshape, jnp.float32), saxes)})
+    else:
+        out.update({"k": Param(jnp.zeros(shape, dtype), axes),
+                    "v": Param(jnp.zeros(shape, dtype), axes)})
+    return out
+
+
+def decode_step(cfg, p, cache, batch):
+    """One-token decode.  batch['tokens'] (b, 1) (or embeds for stubs);
+    cache from init_cache.  Returns (logits (b,1,V...), new_cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    pos = cache["pos"]                                   # (b,)
+    if cfg.frontend == "audio_stub":
+        h = batch["embeds"].astype(dtype)
+    else:
+        h = blocks.embed_apply(cfg, p["embed"], batch["tokens"], dtype)
+    positions = pos[:, None]
+    h = constrain(h, "act_batch", None, "act_embed")
+
+    kv_keys = [k2 for k2 in ("k", "v", "k_scale", "v_scale")
+               if k2 in cache]
+    if cfg.scan_layers:
+        stacked = p["layers"]
+
+        def body(x, lp_kv):
+            lp = lp_kv[0]
+            layer_cache = dict(zip(kv_keys, lp_kv[1:]))
+            y, nc, _ = _layer_apply(cfg, lp, x, positions,
+                                    cache=layer_cache, pos=pos)
+            return y, tuple(nc[k2] for k2 in kv_keys)
+
+        h, outs = jax.lax.scan(
+            body, h, (stacked,) + tuple(cache[k2] for k2 in kv_keys))
+        new_cache = dict(zip(kv_keys, outs))
+        new_cache["pos"] = pos + 1
+    else:
+        accum = {k2: [] for k2 in kv_keys}
+        for i, lp in enumerate(p["layers"]):
+            h, nc, _ = _layer_apply(
+                cfg, lp, h, positions,
+                cache={k2: cache[k2][i] for k2 in kv_keys}, pos=pos)
+            for k2 in kv_keys:
+                accum[k2].append(nc[k2])
+        new_cache = {k2: jnp.stack(v) for k2, v in accum.items()}
+        new_cache["pos"] = pos + 1
+
+    h = blocks.apply_norm(cfg, p["norm_f"], h)
+    if cfg.n_codebooks > 1:
+        logits = jnp.stack(
+            [blocks.dense(p["heads"][f"cb{i}"], h.astype(jnp.float32))
+             for i in range(cfg.n_codebooks)], axis=2)
+    else:
+        logits = blocks.unembed_apply(cfg, p.get("unembed", {}),
+                                      p["embed"], h)
+    return logits, new_cache
+
+
+def prefill(cfg, p, cache, batch):
+    """Full-sequence forward that fills the decode cache (pos = seq_len).
+    cache: zero-initialized init_cache values with max_seq capacity."""
+    dtype = jnp.dtype(cfg.dtype)
+    h, positions = _inputs_to_h(cfg, p, batch, dtype)
+    b, l = h.shape[:2]
+    S = cache["k"].shape[2]
+
+    def body(x, lp):
+        y, kv, _ = _layer_apply(cfg, lp, x, positions, return_kv=True)
+        return y, (kv["k"], kv["v"])
+
+    if cfg.scan_layers:
+        h, (ks_, vs_) = jax.lax.scan(body, h, p["layers"])
+    else:
+        kl, vl = [], []
+        for lp in p["layers"]:
+            h, kv, _ = _layer_apply(cfg, lp, h, positions, return_kv=True)
+            kl.append(kv["k"]); vl.append(kv["v"])
+        ks_, vs_ = jnp.stack(kl), jnp.stack(vl)
+
+    pad = S - l
+    extra = {}
+    if cfg.kv_cache_dtype == "int8":
+        kq, ksc = blocks._kv_quant(ks_)
+        vq, vsc = blocks._kv_quant(vs_)
+        ks_ = jnp.pad(kq, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vs_ = jnp.pad(vq, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        extra = {"k_scale": jnp.pad(ksc, ((0, 0), (0, 0), (0, pad),
+                                          (0, 0))),
+                 "v_scale": jnp.pad(vsc, ((0, 0), (0, 0), (0, pad),
+                                          (0, 0)))}
+    else:
+        ks_ = jnp.pad(ks_, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(
+            cache["k"].dtype)
+        vs_ = jnp.pad(vs_, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(
+            cache["v"].dtype)
+    h = blocks.apply_norm(cfg, p["norm_f"], h)
+    if cfg.n_codebooks > 1:
+        logits = jnp.stack(
+            [blocks.dense(p["heads"][f"cb{i}"], h.astype(jnp.float32))
+             for i in range(cfg.n_codebooks)], axis=2)
+    else:
+        logits = blocks.unembed_apply(cfg, p.get("unembed", {}),
+                                      p["embed"], h)
+    new_cache = {"k": ks_, "v": vs_,
+                 "pos": jnp.full((b,), l, jnp.int32), **extra}
+    return logits, new_cache

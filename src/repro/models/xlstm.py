@@ -1,0 +1,372 @@
+"""xLSTM (Beck et al. 2024, arXiv:2405.04517): mLSTM + sLSTM blocks.
+
+This is the second SSM-family arch MARCA's insights apply to: both
+recurrences are element-wise chains (the Fig. 1 regime), so the same
+chunked-state-residency treatment as selective_scan is used — lax.scan over
+chunks with jax.checkpoint inside, state (C, n, m) carried across chunks.
+
+Simplifications vs the reference implementation (documented per DESIGN.md):
+per-head q/k/v projections are dense (nh, dh, dh) einsums (block-diagonal in
+the original), the mLSTM block uses pf=2 up-projection with a SiLU-gated
+residual path, and sLSTM uses a single round of gate recurrence per step.
+Exp/sigmoid gates run through cfg.exp_impl / MARCA piecewise sigmoid when
+approx mode is on.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import approx
+from repro.models import blocks
+from repro.parallel.sharding import Param, constrain
+
+
+def _gates(cfg):
+    exp = approx.get_exp(cfg.exp_impl)
+    sig = (approx.piecewise_sigmoid if cfg.exp_impl != "exact"
+           else jax.nn.sigmoid)
+    return exp, sig
+
+
+# ---------------------------------------------------------------------------
+# mLSTM: matrix memory C (dh x dh) per head, parallelizable recurrence
+# ---------------------------------------------------------------------------
+
+def mlstm_block_init(cfg, key):
+    d, nh = cfg.d_model, cfg.n_heads
+    di = 2 * d                       # pf = 2 up-projection
+    dh = di // nh
+    ks = jax.random.split(key, 8)
+    sc = dh ** -0.5
+
+    def ph(k, shape, axes):
+        return Param(jax.random.normal(k, shape, jnp.float32) * sc, axes)
+
+    return {
+        "norm": blocks.norm_init(cfg, ks[0]),
+        "up": blocks.dense_init(ks[1], d, 2 * di, ("embed", "ffn")),
+        "conv_w": Param(jax.random.normal(ks[2], (cfg.d_conv, di),
+                                          jnp.float32) / cfg.d_conv,
+                        ("conv", "ffn")),
+        "wq": ph(ks[3], (nh, dh, dh), ("heads", None, None)),
+        "wk": ph(ks[4], (nh, dh, dh), ("heads", None, None)),
+        "wi": ph(ks[5], (nh, dh), ("heads", None)),
+        "wf": ph(ks[6], (nh, dh), ("heads", None)),
+        "bi": Param(jnp.zeros((nh,), jnp.float32), ("heads",)),
+        "bf": Param(jnp.full((nh,), 3.0, jnp.float32), ("heads",)),
+        "gn_scale": Param(jnp.ones((di,), jnp.float32), ("ffn",)),
+        "down": blocks.dense_init(ks[7], di, d, ("ffn", "embed")),
+    }
+
+
+def _mlstm_scan(q, k, v, ig, fg, state, chunk, remat=True):
+    """Stabilized mLSTM recurrence.
+    q/k/v (b, L, nh, dh); ig/fg (b, L, nh) pre-activation gates.
+    state: dict C (b,nh,dh,dh), n (b,nh,dh), m (b,nh).  Chunked lax.scan."""
+    b, L, nh, dh = q.shape
+    chunk = max(1, min(chunk, L))
+    pad = (-L) % chunk
+    nc = (L + pad) // chunk
+
+    def _p(t):
+        return jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+
+    def _r(t):
+        return _p(t).reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    qs, ks_, vs = _r(q.astype(jnp.float32)), _r(k.astype(jnp.float32)), \
+        _r(v.astype(jnp.float32))
+    igs, fgs = _r(ig.astype(jnp.float32)), _r(fg.astype(jnp.float32))
+    # padded steps: fg pre-activation large -> f ~ 1, i -> 0 keeps state
+    if pad:
+        mask = jnp.arange(nc * chunk).reshape(nc, chunk) < L
+        mask = mask[:, None, :, None]                    # (nc,1,chunk,1)
+        igs = jnp.where(mask, igs, -1e30)
+        fgs = jnp.where(mask, fgs, 30.0)
+
+    def step(carry, inp):
+        C, n, m = carry
+        q_t, k_t, v_t, i_t, f_t = inp                    # (b,nh,dh) ...
+        logf = jax.nn.log_sigmoid(f_t)                   # (b,nh)
+        m_new = jnp.maximum(logf + m, i_t)
+        i_p = jnp.exp(i_t - m_new)
+        f_p = jnp.exp(logf + m - m_new)
+        kv = k_t[..., :, None] * v_t[..., None, :]       # (b,nh,dh,dh)
+        C = f_p[..., None, None] * C + i_p[..., None, None] * kv
+        n = f_p[..., None] * n + i_p[..., None] * k_t
+        qn = q_t * (dh ** -0.5)
+        num = jnp.einsum("bhde,bhd->bhe", C, qn)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", n, qn))
+        h_t = num / jnp.maximum(den, 1.0)[..., None]
+        return (C, n, m_new), h_t
+
+    def chunk_body(carry, inp):
+        qc, kc, vc, ic, fc = inp                         # (b,chunk,nh,..)
+        xs = tuple(t.swapaxes(0, 1) for t in (qc, kc, vc, ic, fc))
+
+        def inner(carry):
+            return jax.lax.scan(step, carry, xs)
+
+        if remat:
+            inner = jax.checkpoint(inner)
+        carry, hs = inner(carry)
+        return carry, hs.swapaxes(0, 1)                  # (b,chunk,nh,dh)
+
+    carry0 = (state["C"], state["n"], state["m"])
+    carry, hs = jax.lax.scan(chunk_body, carry0, (qs, ks_, vs, igs, fgs))
+    h = hs.swapaxes(0, 1).reshape(b, nc * chunk, nh, dh)[:, :L]
+    new_state = {"C": carry[0], "n": carry[1], "m": carry[2]}
+    return h, new_state
+
+
+def mlstm_block_apply(cfg, p, x, state=None):
+    d, nh = cfg.d_model, cfg.n_heads
+    di = 2 * d
+    dh = di // nh
+    b, L, _ = x.shape
+    silu = approx.get_silu(cfg.silu_impl)
+    xn = blocks.apply_norm(cfg, p["norm"], x)
+    ug = blocks.dense(p["up"], xn, x.dtype)
+    u, g = jnp.split(ug, 2, axis=-1)                     # (b,L,di) each
+    u = constrain(u, "act_batch", "act_seq", "act_ffn")
+    conv_state = None if state is None else state["conv"]
+    from repro.kernels import ops
+    c, new_conv = ops.causal_conv1d(u, p["conv_w"], None,
+                                    x_prev=conv_state, impl=cfg.conv_impl)
+    c = silu(c)
+    ch = c.reshape(b, L, nh, dh)
+    q = jnp.einsum("blhd,hde->blhe", ch, p["wq"].astype(x.dtype))
+    k = jnp.einsum("blhd,hde->blhe", ch, p["wk"].astype(x.dtype))
+    v = u.reshape(b, L, nh, dh)
+    ig = jnp.einsum("blhd,hd->blh", ch.astype(jnp.float32), p["wi"]) + p["bi"]
+    fg = jnp.einsum("blhd,hd->blh", ch.astype(jnp.float32), p["wf"]) + p["bf"]
+    if state is None:
+        state = {k2: v2 for k2, v2 in _mlstm_state(cfg, b).items()}
+    h, new_rec = _mlstm_scan(q, k, v, ig, fg,
+                             {"C": state["C"], "n": state["n"],
+                              "m": state["m"]},
+                             cfg.scan_chunk, remat=cfg.remat)
+    hf = blocks.group_norm(h.reshape(b, L, di), p["gn_scale"], nh)
+    out = blocks.dense(p["down"], hf * silu(g), x.dtype)
+    new_rec["conv"] = new_conv
+    return out, new_rec
+
+
+def _mlstm_state(cfg, batch):
+    d, nh = cfg.d_model, cfg.n_heads
+    di = 2 * d
+    dh = di // nh
+    return {
+        "C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, nh, dh), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, di), jnp.float32),
+    }
+
+
+def mlstm_state_init(cfg, batch, dtype):
+    s = _mlstm_state(cfg, batch)
+    axes = {"C": ("act_batch", "act_heads", None, None),
+            "n": ("act_batch", "act_heads", None),
+            "m": ("act_batch", "act_heads"),
+            "conv": ("act_batch", None, "act_ffn")}
+    return {k: Param(v, axes[k]) for k, v in s.items()}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM: scalar memory with true hidden-state recurrence (sequential)
+# ---------------------------------------------------------------------------
+
+def slstm_block_init(cfg, key):
+    d, nh = cfg.d_model, cfg.n_heads
+    dh = d // nh
+    ks = jax.random.split(key, 8)
+    sc = d ** -0.5
+
+    def ph(k, shape, axes):
+        return Param(jax.random.normal(k, shape, jnp.float32) * sc, axes)
+
+    return {
+        "norm": blocks.norm_init(cfg, ks[0]),
+        "wx": blocks.dense_init(ks[1], d, 4 * d, ("embed", "ffn")),
+        "r": ph(ks[2], (4, nh, dh, dh), (None, "heads", None, None)),
+        "b": Param(jnp.concatenate([
+            jnp.zeros((2 * d,), jnp.float32),           # z, i
+            jnp.full((d,), 3.0, jnp.float32),           # f
+            jnp.zeros((d,), jnp.float32)]),             # o
+            ("ffn",)),
+        "gn_scale": Param(jnp.ones((d,), jnp.float32), ("ffn",)),
+        "out": blocks.dense_init(ks[3], d, d, ("ffn", "embed")),
+    }
+
+
+def _slstm_scan(gates_x, r, bias, state, nh, dh, chunk, remat=True):
+    """gates_x (b, L, 4d) input contributions; recurrence adds R h_{t-1}.
+    state: c,n,h (b,nh,dh), m (b,nh,dh)."""
+    b, L, d4 = gates_x.shape
+    d = d4 // 4
+    chunk = max(1, min(chunk, L))
+    pad = (-L) % chunk
+    nc = (L + pad) // chunk
+    gx = jnp.pad(gates_x.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    gx = gx.reshape(b, nc, chunk, d4).swapaxes(0, 1)
+    valid = (jnp.arange(nc * chunk).reshape(nc, chunk) < L)
+
+    def step(carry, inp):
+        c, n, h, m = carry                               # (b,nh,dh)
+        g_t, ok = inp                                    # (b,4d), ()
+        rec = jnp.einsum("gher,bhe->bghr", r, h)         # (b,4,nh,dh)
+        g = g_t.reshape(b, 4, nh, dh) + rec + bias.reshape(4, nh, dh)
+        z_t = jnp.tanh(g[:, 0])
+        i_t = g[:, 1]
+        f_t = g[:, 2]
+        o_t = jax.nn.sigmoid(g[:, 3])
+        logf = jax.nn.log_sigmoid(f_t)
+        m_new = jnp.maximum(logf + m, i_t)
+        i_p = jnp.exp(i_t - m_new)
+        f_p = jnp.exp(logf + m - m_new)
+        c_new = f_p * c + i_p * z_t
+        n_new = f_p * n + i_p
+        h_new = o_t * c_new / jnp.maximum(n_new, 1.0)
+        # padded steps: keep state
+        keep = ok.astype(jnp.float32)
+        c_new = keep * c_new + (1 - keep) * c
+        n_new = keep * n_new + (1 - keep) * n
+        h_new = keep * h_new + (1 - keep) * h
+        m_new = keep * m_new + (1 - keep) * m
+        return (c_new, n_new, h_new, m_new), h_new
+
+    def chunk_body(carry, inp):
+        gc, okc = inp
+
+        def inner(carry):
+            return jax.lax.scan(step, carry,
+                                (gc.swapaxes(0, 1), okc))
+
+        if remat:
+            inner = jax.checkpoint(inner)
+        carry, hs = inner(carry)
+        return carry, hs.swapaxes(0, 1)
+
+    carry0 = (state["c"], state["n"], state["h"], state["m"])
+    carry, hs = jax.lax.scan(chunk_body, carry0, (gx, valid))
+    h = hs.swapaxes(0, 1).reshape(b, nc * chunk, nh * dh)[:, :L]
+    return h, {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+
+
+def slstm_block_apply(cfg, p, x, state=None):
+    d, nh = cfg.d_model, cfg.n_heads
+    dh = d // nh
+    b, L, _ = x.shape
+    xn = blocks.apply_norm(cfg, p["norm"], x)
+    gates_x = blocks.dense(p["wx"], xn, x.dtype)
+    if state is None:
+        state = _slstm_state(cfg, b)
+    h, new_state = _slstm_scan(gates_x, p["r"], p["b"], state, nh, dh,
+                               cfg.scan_chunk, remat=cfg.remat)
+    hf = blocks.group_norm(h, p["gn_scale"], nh)
+    out = blocks.dense(p["out"], hf, x.dtype)
+    return out, new_state
+
+
+def _slstm_state(cfg, batch):
+    d, nh = cfg.d_model, cfg.n_heads
+    dh = d // nh
+    z = jnp.zeros((batch, nh, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z,
+            "m": jnp.full((batch, nh, dh), -1e30, jnp.float32)}
+
+
+def slstm_state_init(cfg, batch, dtype):
+    axes = ("act_batch", "act_heads", None)
+    return {k: Param(v, axes) for k, v in _slstm_state(cfg, batch).items()}
+
+
+# ---------------------------------------------------------------------------
+# Full model: interleave mLSTM / sLSTM (7:1 by default)
+# ---------------------------------------------------------------------------
+
+def _is_slstm(cfg, i):
+    return (cfg.slstm_every > 0
+            and i % cfg.slstm_every == cfg.slstm_offset % cfg.slstm_every)
+
+
+def init(cfg, key):
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    layers = []
+    for i in range(cfg.n_layers):
+        if _is_slstm(cfg, i):
+            layers.append({"slstm": slstm_block_init(cfg, ks[i])})
+        else:
+            layers.append({"mlstm": mlstm_block_init(cfg, ks[i])})
+    return {
+        "embed": blocks.embed_init(cfg, ks[-3]),
+        "layers": layers,
+        "norm_f": blocks.norm_init(cfg, ks[-2]),
+        "unembed": blocks.unembed_init(cfg, ks[-1]),
+    }
+
+
+def forward(cfg, p, batch):
+    dtype = jnp.dtype(cfg.dtype)
+    h = blocks.embed_apply(cfg, p["embed"], batch["tokens"], dtype)
+    h = constrain(h, "act_batch", "act_seq", "act_embed")
+    for i, lp in enumerate(p["layers"]):
+        if "slstm" in lp:
+            y, _ = slstm_block_apply(cfg, lp["slstm"], h)
+        else:
+            y, _ = mlstm_block_apply(cfg, lp["mlstm"], h)
+        h = h + y
+        h = constrain(h, "act_batch", "act_seq", "act_embed")
+    h = blocks.apply_norm(cfg, p["norm_f"], h)
+    logits = blocks.unembed_apply(cfg, p.get("unembed", {}), p["embed"], h)
+    return logits, {}
+
+
+def init_cache(cfg, batch, max_seq, dtype):
+    caches = []
+    for i in range(cfg.n_layers):
+        if _is_slstm(cfg, i):
+            caches.append({"slstm": slstm_state_init(cfg, batch, dtype)})
+        else:
+            caches.append({"mlstm": mlstm_state_init(cfg, batch, dtype)})
+    return {"layers": caches,
+            "pos": Param(jnp.zeros((batch,), jnp.int32), ("act_batch",))}
+
+
+def decode_step(cfg, p, cache, batch):
+    dtype = jnp.dtype(cfg.dtype)
+    h = blocks.embed_apply(cfg, p["embed"], batch["tokens"], dtype)
+    new_layers = []
+    for i, (lp, lc) in enumerate(zip(p["layers"], cache["layers"])):
+        if "slstm" in lp:
+            y, ns = slstm_block_apply(cfg, lp["slstm"], h, state=lc["slstm"])
+            new_layers.append({"slstm": ns})
+        else:
+            y, ns = mlstm_block_apply(cfg, lp["mlstm"], h, state=lc["mlstm"])
+            new_layers.append({"mlstm": ns})
+        h = h + y
+    h = blocks.apply_norm(cfg, p["norm_f"], h)
+    logits = blocks.unembed_apply(cfg, p.get("unembed", {}), p["embed"], h)
+    return logits, {"layers": new_layers, "pos": cache["pos"] + 1}
+
+
+def prefill(cfg, p, cache, batch):
+    """Full-sequence forward collecting recurrent states (pos = seq_len)."""
+    dtype = jnp.dtype(cfg.dtype)
+    h = blocks.embed_apply(cfg, p["embed"], batch["tokens"], dtype)
+    b, l = h.shape[:2]
+    new_layers = []
+    for i, lp in enumerate(p["layers"]):
+        if "slstm" in lp:
+            y, ns = slstm_block_apply(cfg, lp["slstm"], h)
+            new_layers.append({"slstm": ns})
+        else:
+            y, ns = mlstm_block_apply(cfg, lp["mlstm"], h)
+            new_layers.append({"mlstm": ns})
+        h = h + y
+    h = blocks.apply_norm(cfg, p["norm_f"], h)
+    logits = blocks.unembed_apply(cfg, p.get("unembed", {}), p["embed"], h)
+    return logits, {"layers": new_layers,
+                    "pos": jnp.full((b,), l, jnp.int32)}

@@ -1,0 +1,7 @@
+"""Optimizers + distributed-optimization tricks: AdamW (fp32/bf16/int8
+moments), schedules, global-norm clip, int8 error-feedback gradient
+compression for the cross-pod all-reduce."""
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               clip_by_global_norm)
+from repro.optim.schedule import cosine_schedule
+from repro.optim import compression, quantized_state  # noqa: F401

@@ -1,0 +1,63 @@
+"""Int8 error-feedback gradient compression for the cross-pod all-reduce.
+
+At multi-pod scale the only DCN collective is the gradient all-reduce over
+the "pod" axis (DESIGN.md §4).  Int8 + per-tensor scale cuts that traffic
+4x vs f32 / 2x vs bf16.  Error feedback (Seide et al. / EF-SGD) keeps the
+quantization residual locally and re-adds it next step, which preserves
+convergence (tests check parity on a quadratic problem).
+
+Two entry points:
+
+  * ``ef_compress_decompress(g, err)`` — the lossy channel + residual
+    bookkeeping, composable inside any pjit step (GSPMD then all-reduces
+    the already-quantized-then-decoded values; the wire format in a real
+    deployment is the int8 payload, summed in int32).
+  * ``compressed_psum(g, axis)`` — explicit shard_map building block that
+    performs quantize -> int32 psum -> dequantize, for manual-collective
+    pipelines and the multi-device tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _quant(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def ef_compress_decompress(g, err):
+    """Returns (g_hat, new_err): g_hat = Q(g + err), new_err = g + err - g_hat."""
+    x = g.astype(jnp.float32) + err
+    q, scale = _quant(x)
+    g_hat = q.astype(jnp.float32) * scale
+    return g_hat, x - g_hat
+
+
+def ef_init(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def ef_apply(grads, err_state):
+    """Tree version: compress every leaf with error feedback."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(err_state)
+    outs = [ef_compress_decompress(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))
+
+
+def compressed_psum(x, axis_name: str):
+    """Quantize -> int32 psum -> dequantize (mean).  Call under shard_map.
+
+    The max-scale is itself psum-maxed so all participants share one scale
+    (required for a linear int32 reduction)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)) / 127.0, 1e-12)
+    scale = jax.lax.pmax(scale, axis_name)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int32)
+    total = jax.lax.psum(q, axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    return total.astype(jnp.float32) * scale / n

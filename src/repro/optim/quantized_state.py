@@ -1,0 +1,73 @@
+"""Blockwise 8-bit state quantization (8-bit-Adam style).
+
+Needed to fit arctic-480b training on 16 GB/chip: Adam moments at int8 +
+per-block f32 absmax scales cut optimizer memory ~4x vs f32 (see DESIGN.md
+§4).  Quantization is symmetric linear per contiguous block of the
+flattened tensor; dequant-update-requant per step (error stays bounded
+because Adam moments are EMAs — tests check convergence parity).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK = 256
+
+
+@jax.tree_util.register_pytree_node_class
+class QTensor:
+    """int8 payload + per-block scales; original shape is static aux."""
+    __slots__ = ("q", "scale", "shape")
+
+    def __init__(self, q, scale, shape):
+        self.q = q                # int8 (n_blocks, BLOCK)
+        self.scale = scale        # f32  (n_blocks, 1)
+        self.shape = tuple(shape)
+
+    def tree_flatten(self):
+        return (self.q, self.scale), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, shape, children):
+        return cls(children[0], children[1], shape)
+
+    def __repr__(self):
+        return f"QTensor(shape={self.shape}, blocks={self.q.shape[0]})"
+
+
+def quantize(x: jax.Array, power: float = 1.0) -> QTensor:
+    """power=1: linear.  power>1: power-law code (8-bit-Adam style dynamic
+    map) — code = round(127 * sign(u) * |u|^(1/power)) with u = x/absmax.
+    Resolution near zero improves by ~127^(power-1); essential for Adam's
+    second moment whose per-block dynamic range spans many decades (linear
+    int8 floors small entries to 0 -> 1/sqrt(v) blows up; tests cover)."""
+    shape = x.shape
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    absmax = jnp.maximum(jnp.max(jnp.abs(flat), axis=1, keepdims=True),
+                         1e-30)
+    u = flat / absmax
+    if power != 1.0:
+        u = jnp.sign(u) * jnp.abs(u) ** (1.0 / power)
+    q = jnp.clip(jnp.round(u * 127.0), -127, 127).astype(jnp.int8)
+    # store absmax/127 so linear decode keeps the legacy contract
+    return QTensor(q, absmax * np.float32(1 / 127.0), shape) \
+        if power == 1.0 else QTensor(q, absmax, shape)
+
+
+def dequantize(t: QTensor, power: float = 1.0) -> jax.Array:
+    if power == 1.0:
+        flat = t.q.astype(jnp.float32) * t.scale
+    else:
+        u = t.q.astype(jnp.float32) / 127.0
+        flat = jnp.sign(u) * jnp.abs(u) ** power * t.scale
+    n = 1
+    for s in t.shape:
+        n *= s
+    return flat.reshape(-1)[:n].reshape(t.shape)
+
+
+def is_qtensor(x) -> bool:
+    return isinstance(x, QTensor)

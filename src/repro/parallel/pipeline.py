@@ -1,0 +1,87 @@
+"""Pipeline parallelism: GPipe-style microbatch pipelining under shard_map.
+
+Each device along the ``pipe`` mesh axis owns one stage's params; activations
+rotate stage-to-stage with ``ppermute``.  Because ppermute is differentiable,
+``jax.grad`` through the pipelined forward yields the reverse-schedule
+backward automatically (1F1B-equivalent wall-clock under XLA latency hiding).
+
+This is a selectable feature with its own mesh axis — the 40-cell production
+dry-run uses FSDPxTP only (DESIGN.md §4); tests exercise PP on a small
+8-device host mesh.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def _pipeline_local(stage_fn, params_local, mb_local, *, axis_name: str,
+                    n_micro: int):
+    """Runs inside shard_map.  params_local: this stage's params (leading
+    stage dim of size 1).  mb_local: (n_micro, mb, ...) replicated inputs
+    (only stage 0 ingests).  Returns (n_micro, mb, ...) outputs (only the
+    last stage's are real; others zero)."""
+    S = jax.lax.psum(1, axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    params_local = jax.tree.map(lambda x: x[0], params_local)
+
+    x0 = jnp.zeros_like(mb_local[0])
+    outputs0 = jnp.zeros((n_micro,) + mb_local.shape[1:],
+                         mb_local.dtype)
+    # the carry becomes device-varying after the first ppermute; mark the
+    # initial zeros as varying over the pipe axis for the vma type system
+    x0 = jax.lax.pcast(x0, (axis_name,), to="varying")
+    outputs0 = jax.lax.pcast(outputs0, (axis_name,), to="varying")
+    total = n_micro + S - 1
+
+    def step(carry, t):
+        state, outputs = carry
+        inject = mb_local[jnp.clip(t, 0, n_micro - 1)]
+        x = jnp.where(idx == 0, inject, state)
+        y = stage_fn(params_local, x)
+        # the last stage emits microbatch t-(S-1) once it exists
+        out_t = jnp.maximum(t - (S - 1), 0)
+        is_emit = jnp.logical_and(idx == S - 1, t - (S - 1) >= 0)
+        cur = jax.lax.dynamic_slice_in_dim(outputs, out_t, 1, axis=0)[0]
+        new = jnp.where(is_emit, y.astype(outputs.dtype), cur)
+        outputs = jax.lax.dynamic_update_slice_in_dim(
+            outputs, new[None], out_t, axis=0)
+        state = jax.lax.ppermute(
+            y, axis_name, [(i, (i + 1) % S) for i in range(S)])
+        return (state, outputs), None
+
+    (_, outputs), _ = jax.lax.scan(step, (x0, outputs0),
+                                   jnp.arange(total))
+    # broadcast the last stage's outputs to every stage
+    outputs = jax.lax.psum(
+        jnp.where(idx == S - 1, outputs, 0), axis_name)
+    return outputs
+
+
+def pipeline_apply(mesh: Mesh, stage_fn, stacked_params, inputs, *,
+                   n_micro: int, axis_name: str = "pipe"):
+    """Run ``stage_fn`` as an S-stage pipeline over the mesh's pipe axis.
+
+    stacked_params: pytree with leading stage dim S (sharded over pipe).
+    inputs: (batch, ...) — split into n_micro microbatches.
+    Returns outputs (batch, ...) after all S stages.
+    """
+    S = mesh.shape[axis_name]
+    b = inputs.shape[0]
+    assert b % n_micro == 0
+    mb = inputs.reshape(n_micro, b // n_micro, *inputs.shape[1:])
+
+    p_spec = jax.tree.map(lambda _: P(axis_name), stacked_params)
+    fn = shard_map(
+        functools.partial(_pipeline_local, stage_fn, axis_name=axis_name,
+                          n_micro=n_micro),
+        mesh=mesh,
+        in_specs=(p_spec, P()),
+        out_specs=P(),
+    )
+    out = fn(stacked_params, mb)
+    return out.reshape(b, *out.shape[2:])

@@ -1,0 +1,2 @@
+"""Runtime: training loop (resume/preemption/straggler), serving loop,
+metrics."""

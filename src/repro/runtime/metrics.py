@@ -1,0 +1,66 @@
+"""Metrics logging (jsonl) + straggler detection.
+
+StragglerDetector: per-step wall time EMA/EMVar; a step whose time exceeds
+mean + z*std is flagged.  On a real multi-host deployment the same detector
+runs per host on heartbeat files and feeds the microbatch re-balancer; here
+it logs and counts (tests inject artificial delays)."""
+from __future__ import annotations
+
+import json
+import math
+import sys
+import time
+from typing import Optional
+
+
+class MetricsLogger:
+    def __init__(self, path: Optional[str] = None, echo: bool = True):
+        self.path = path
+        self.echo = echo
+        self._fh = open(path, "a") if path else None
+
+    def log(self, **kv):
+        kv.setdefault("t", time.time())
+        line = json.dumps(kv)
+        if self._fh:
+            self._fh.write(line + "\n")
+            self._fh.flush()
+        if self.echo:
+            show = {k: (round(v, 4) if isinstance(v, float) else v)
+                    for k, v in kv.items() if k != "t"}
+            print(f"[metrics] {show}", file=sys.stderr)
+
+    def close(self):
+        if self._fh:
+            self._fh.close()
+
+
+class StragglerDetector:
+    """EMA-based step-time anomaly detector (z-score threshold)."""
+
+    def __init__(self, alpha: float = 0.1, z: float = 3.0,
+                 warmup: int = 5):
+        self.alpha = alpha
+        self.z = z
+        self.warmup = warmup
+        self.mean = 0.0
+        self.var = 0.0
+        self.n = 0
+        self.flagged: list[tuple[int, float]] = []
+
+    def record(self, step: int, dt: float) -> bool:
+        self.n += 1
+        if self.n <= self.warmup:
+            # prime the EMA
+            self.mean = (self.mean * (self.n - 1) + dt) / self.n
+            self.var = max(self.var, (dt - self.mean) ** 2)
+            return False
+        std = math.sqrt(self.var) if self.var > 0 else float("inf")
+        is_straggler = dt > self.mean + self.z * max(std, 1e-9)
+        if is_straggler:
+            self.flagged.append((step, dt))
+        else:
+            d = dt - self.mean
+            self.mean += self.alpha * d
+            self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)
+        return is_straggler

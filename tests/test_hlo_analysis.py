@@ -1,0 +1,71 @@
+"""HLO text analysis unit tests: collective parsing, op census, roofline
+terms arithmetic (hlo_analysis) — complements test_hlo_cost.py."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import hlo_analysis
+
+jax.config.update("jax_platform_name", "cpu")
+
+SAMPLE = """
+HloModule test
+
+%add_comp (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (p0: bf16[8,128]) -> bf16[8,128] {
+  %p0 = bf16[8,128]{1,0} parameter(0)
+  %ag = bf16[16,128]{1,0} all-gather(%p0), dimensions={0}
+  %ar = bf16[8,128]{1,0} all-reduce(%p0), to_apply=%add_comp
+  %cp = bf16[8,128]{1,0} collective-permute(%p0), source_target_pairs={{0,1}}
+  ROOT %out = bf16[8,128]{1,0} add(%ar, %cp)
+}
+"""
+
+
+class TestCollectiveStats:
+    def test_counts_and_bytes(self):
+        st = hlo_analysis.collective_stats(SAMPLE)
+        assert st.count_by_kind == {"all-gather": 1, "all-reduce": 1,
+                                    "collective-permute": 1}
+        per_op = 8 * 128 * 2                      # bf16 operand
+        assert st.bytes_by_kind["all-reduce"] == per_op
+        assert st.bytes_by_kind["all-gather"] == per_op
+        assert st.total_bytes == 3 * per_op
+
+    def test_census(self):
+        c = hlo_analysis.op_census(SAMPLE)
+        assert c["add"] >= 2 and c["parameter"] >= 1
+
+    def test_real_compiled_program(self):
+        txt = jax.jit(lambda x: x @ x).lower(
+            jnp.zeros((64, 64))).compile().as_text()
+        st = hlo_analysis.collective_stats(txt)
+        assert st.total_bytes == 0                # single device: none
+
+
+class TestRoofline:
+    def test_terms_arithmetic(self):
+        r = hlo_analysis.roofline_terms(
+            hlo_flops=197e12 * 256, hlo_bytes=819e9 * 256,
+            collective_bytes=50e9 * 256, chips=256,
+            model_flops=197e12 * 256 / 2)
+        assert abs(r.compute_s - 1.0) < 1e-9
+        assert abs(r.memory_s - 1.0) < 1e-9
+        assert abs(r.collective_s - 1.0) < 1e-9
+        assert r.useful_flops_ratio == pytest.approx(0.5)
+        assert r.dominant in ("compute", "memory", "collective")
+        assert r.roofline_fraction == pytest.approx(0.5)
+
+    def test_dominant_selection(self):
+        r = hlo_analysis.roofline_terms(1e12, 900e12, 1e9, 256, 1e12)
+        assert r.dominant == "memory"
+
+    def test_zero_safe(self):
+        r = hlo_analysis.roofline_terms(0, 0, 0, 256, 0)
+        assert r.roofline_fraction == 0.0
+        assert r.useful_flops_ratio == 0.0

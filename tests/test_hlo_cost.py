@@ -1,0 +1,107 @@
+"""Validate the static HLO cost analyzer against hand-computable programs
+(this analyzer produces the §Roofline numbers, so it must be right)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_cost
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _cost_of(fn, *args):
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    return hlo_cost.analyze(txt)
+
+
+def test_single_matmul_flops():
+    a = jnp.zeros((128, 256), jnp.float32)
+    b = jnp.zeros((256, 512), jnp.float32)
+    c = _cost_of(lambda x, y: x @ y, a, b)
+    want = 2 * 128 * 256 * 512
+    assert abs(c.flops - want) / want < 0.05, c.flops
+
+
+def test_matmul_in_fori_loop_multiplied_by_trips():
+    a = jnp.zeros((128, 128), jnp.float32)
+
+    def f(x):
+        def body(i, acc):
+            return acc @ a + 1.0
+        return jax.lax.fori_loop(0, 17, body, x)
+
+    c = _cost_of(f, a)
+    want = 17 * 2 * 128 * 128 * 128
+    assert c.flops > 0.9 * want, (c.flops, want)
+    assert c.flops < 1.3 * want, (c.flops, want)
+    assert c.unknown_trip_whiles == 0
+
+
+def test_scan_layers_flops():
+    """Scanned 8-layer MLP: flops ~ 8 * (2*b*d*f + 2*b*f*d)."""
+    b, d, f, L = 32, 64, 256, 8
+    w1 = jnp.zeros((L, d, f), jnp.float32)
+    w2 = jnp.zeros((L, f, d), jnp.float32)
+
+    def net(x):
+        def layer(h, ws):
+            a, bb = ws
+            return jnp.maximum(h @ a, 0) @ bb, None
+        y, _ = jax.lax.scan(layer, x, (w1, w2))
+        return y
+
+    c = _cost_of(net, jnp.zeros((b, d), jnp.float32))
+    want = L * (2 * b * d * f + 2 * b * f * d)
+    assert 0.9 * want < c.flops < 1.3 * want, (c.flops, want)
+
+
+def test_grad_of_scan_counts_backward():
+    """grad through a scanned matmul: >= 3x forward flops."""
+    b, d, L = 16, 64, 6
+    w = jnp.zeros((L, d, d), jnp.float32)
+
+    def net(w, x):
+        def layer(h, wi):
+            return jnp.tanh(h @ wi), None
+        y, _ = jax.lax.scan(layer, x, w)
+        return jnp.sum(y)
+
+    fwd = _cost_of(lambda w, x: net(w, x), w, jnp.zeros((b, d)))
+    bwd = _cost_of(lambda w, x: jax.grad(net)(w, x), w, jnp.zeros((b, d)))
+    assert bwd.flops > 2.5 * fwd.flops, (fwd.flops, bwd.flops)
+    assert bwd.unknown_trip_whiles == 0
+
+
+def test_bytes_dominated_by_big_operand():
+    big = jnp.zeros((4096, 4096), jnp.float32)      # 64 MB
+
+    def f(x):
+        return x * 2.0 + 1.0
+
+    c = _cost_of(f, big)
+    want = 2 * big.size * 4                          # read + write
+    assert 0.9 * want < c.bytes < 1.5 * want, (c.bytes, want)
+
+
+def test_elementwise_in_loop_bytes_scale_with_trips():
+    x = jnp.zeros((1024, 1024), jnp.float32)        # 4 MB
+
+    def f(x):
+        def body(i, acc):
+            return acc * 1.0001 + 1.0
+        return jax.lax.fori_loop(0, 10, body, x)
+
+    c = _cost_of(f, x)
+    assert c.bytes > 10 * x.size * 4, c.bytes        # >= trips * one pass
+
+
+def test_collectives_counted_with_trips():
+    if jax.device_count() < 2:
+        pytest.skip("needs >1 device (run via subprocess suite)")
+
+
+def test_transcendentals_counted():
+    x = jnp.zeros((256, 256), jnp.float32)
+    c = _cost_of(lambda x: jnp.exp(x), x)
+    assert c.transcendentals >= x.size

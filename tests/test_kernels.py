@@ -1,0 +1,259 @@
+"""Per-kernel validation: shape/dtype sweeps vs the ref.py pure-jnp oracles."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import approx
+from repro.core import selective_scan as css
+from repro.kernels import (conv1d as conv_k, fast_exp as fexp_k,
+                           flash_attention as flash_k,
+                           piecewise_silu as silu_k,
+                           selective_scan as scan_k, ref)
+
+jax.config.update("jax_platform_name", "cpu")
+RNG = np.random.default_rng(42)
+
+
+def _randn(shape, dtype=np.float32):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Element-wise kernels
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(8,), (33,), (4, 129), (2, 3, 257),
+                                   (1, 1024), (5, 7, 11, 13)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fast_exp_kernel_matches_oracle(shape, dtype):
+    x = _randn(shape, dtype) * 3 - 2
+    got = fexp_k.fast_exp(x)
+    want = ref.our_exp(x)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-3, atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(16,), (3, 100), (2, 5, 300)])
+@pytest.mark.parametrize("variant", ["ours", "paper"])
+def test_silu_kernel_matches_oracle(shape, variant):
+    x = _randn(shape) * 4
+    got = silu_k.piecewise_silu(x, variant=variant)
+    want = (ref.piecewise_silu(x) if variant == "ours"
+            else ref.piecewise_silu_paper(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Selective scan: the flagship kernel
+# ---------------------------------------------------------------------------
+
+def _scan_inputs(b, L, d, n, dtype=jnp.float32, with_d=True, with_z=True):
+    x = _randn((b, L, d), dtype)
+    dt = jax.nn.softplus(_randn((b, L, d))).astype(dtype)
+    A = -jnp.exp(_randn((d, n)) * 0.5)
+    B = _randn((b, L, n), dtype)
+    C = _randn((b, L, n), dtype)
+    D = _randn((d,)) if with_d else None
+    z = _randn((b, L, d), dtype) if with_z else None
+    return x, dt, A, B, C, D, z
+
+
+@pytest.mark.parametrize("b,L,d,n", [(1, 16, 8, 4), (2, 64, 32, 16),
+                                     (1, 100, 48, 8), (3, 33, 130, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_scan_kernel_matches_ref(b, L, d, n, dtype):
+    x, dt, A, B, C, D, z = _scan_inputs(b, L, d, n, dtype)
+    y0, h0 = ref.selective_scan(x, dt, A, B, C, D, z)
+    y1, h1 = scan_k.selective_scan(x, dt, A, B, C, D, z,
+                                   block_d=32, block_l=32)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y0, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h0),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("with_d,with_z", [(False, False), (True, False),
+                                           (False, True)])
+def test_scan_kernel_optional_inputs(with_d, with_z):
+    x, dt, A, B, C, D, z = _scan_inputs(2, 32, 16, 8, with_d=with_d,
+                                        with_z=with_z)
+    y0, h0 = ref.selective_scan(x, dt, A, B, C, D, z)
+    y1, h1 = scan_k.selective_scan(x, dt, A, B, C, D, z,
+                                   block_d=16, block_l=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_scan_kernel_h0_continuation():
+    """Chunk-streaming: scanning [0:L1] then [L1:L] == scanning [0:L]."""
+    x, dt, A, B, C, D, z = _scan_inputs(2, 64, 32, 16)
+    y_full, h_full = scan_k.selective_scan(x, dt, A, B, C, D, z,
+                                           block_d=32, block_l=32)
+    y1, h1 = scan_k.selective_scan(x[:, :32], dt[:, :32], A, B[:, :32],
+                                   C[:, :32], D, z[:, :32],
+                                   block_d=32, block_l=32)
+    y2, h2 = scan_k.selective_scan(x[:, 32:], dt[:, 32:], A, B[:, 32:],
+                                   C[:, 32:], D, z[:, 32:], h0=h1,
+                                   block_d=32, block_l=32)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], axis=1)),
+                               np.asarray(y_full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("exp_impl,silu_impl", [("ours", "ours"),
+                                                ("fast", "paper")])
+def test_scan_kernel_approx_modes(exp_impl, silu_impl):
+    """Kernel approx modes must match ref approx modes exactly (same algo)."""
+    x, dt, A, B, C, D, z = _scan_inputs(1, 48, 32, 8)
+    y0, h0 = ref.selective_scan(x, dt, A, B, C, D, z,
+                                exp_impl=exp_impl, silu_impl=silu_impl)
+    y1, h1 = scan_k.selective_scan(x, dt, A, B, C, D, z, block_d=32,
+                                   block_l=16, exp_impl=exp_impl,
+                                   silu_impl=silu_impl)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_scan_impl_equivalence_chunked_assoc_seq():
+    x, dt, A, B, C, D, z = _scan_inputs(2, 96, 24, 16)
+    y0, h0 = css.selective_scan_seq(x, dt, A, B, C, D, z)
+    for impl, kw in [(css.selective_scan_chunked, dict(chunk=32)),
+                     (css.selective_scan_chunked, dict(chunk=17)),
+                     (css.selective_scan_assoc, {})]:
+        y, h = impl(x, dt, A, B, C, D, z, **kw)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(h0),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_scan_chunked_differentiable():
+    x, dt, A, B, C, D, z = _scan_inputs(1, 32, 16, 8)
+
+    def loss(x, dt, A, B, C, D, z):
+        y, _ = css.selective_scan_chunked(x, dt, A, B, C, D, z, chunk=8)
+        return jnp.sum(y ** 2)
+
+    grads = jax.grad(loss, argnums=(0, 1, 2))(x, dt, A, B, C, D, z)
+    for g in grads:
+        assert np.all(np.isfinite(np.asarray(g)))
+        assert float(jnp.max(jnp.abs(g))) > 0
+
+
+@given(st.integers(1, 3), st.integers(1, 40), st.integers(1, 40),
+       st.integers(1, 16))
+@settings(max_examples=20, deadline=None)
+def test_scan_kernel_property_shapes(b, L, d, n):
+    """Property: kernel handles arbitrary (b, L, d, n) via padding."""
+    x, dt, A, B, C, D, z = _scan_inputs(b, L, d, n)
+    y0, h0 = ref.selective_scan(x, dt, A, B, C, D, z)
+    y1, h1 = scan_k.selective_scan(x, dt, A, B, C, D, z,
+                                   block_d=16, block_l=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h0),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_state_step_matches_scan_tail():
+    """One decode step == last step of a scan."""
+    x, dt, A, B, C, D, z = _scan_inputs(2, 8, 16, 4)
+    y_full, h_full = ref.selective_scan(x, dt, A, B, C, D, z)
+    _, h_prefix = ref.selective_scan(x[:, :-1], dt[:, :-1], A, B[:, :-1],
+                                     C[:, :-1], D, z[:, :-1])
+    y_t, h_t = ref.selective_state_step(h_prefix, x[:, -1], dt[:, -1], A,
+                                        B[:, -1], C[:, -1], D, z[:, -1])
+    np.testing.assert_allclose(np.asarray(y_t), np.asarray(y_full[:, -1]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_t), np.asarray(h_full),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Conv1d kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,L,d,k", [(1, 16, 8, 4), (2, 100, 96, 4),
+                                     (3, 33, 17, 3)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_conv1d_kernel_matches_ref(b, L, d, k, dtype):
+    x = _randn((b, L, d), dtype)
+    w = _randn((k, d))
+    bias = _randn((d,))
+    xprev = _randn((b, k - 1, d), dtype)
+    y0, s0 = ref.causal_conv1d(x, w, bias, xprev)
+    y1, s1 = conv_k.causal_conv1d(x, w, bias, xprev, block_d=16, block_l=16)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y0, np.float32), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(s1, np.float32),
+                               np.asarray(s0, np.float32), rtol=tol, atol=tol)
+
+
+def test_conv1d_streaming_equals_full():
+    b, L, d, k = 2, 64, 32, 4
+    x = _randn((b, L, d))
+    w = _randn((k, d))
+    y_full, _ = ref.causal_conv1d(x, w)
+    y1, s1 = conv_k.causal_conv1d(x[:, :40], w, block_d=32, block_l=8)
+    y2, _ = conv_k.causal_conv1d(x[:, 40:], w, x_prev=s1, block_d=32,
+                                 block_l=8)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([y1, y2], axis=1)), np.asarray(y_full),
+        rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,l,hq,hkv,dh", [(1, 64, 4, 4, 32),
+                                           (2, 128, 8, 2, 64),
+                                           (1, 96, 8, 1, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_ref(b, l, hq, hkv, dh, dtype):
+    q = _randn((b, l, hq, dh), dtype)
+    k = _randn((b, l, hkv, dh), dtype)
+    v = _randn((b, l, hkv, dh), dtype)
+    o0 = ref.attention(q, k, v, causal=True)
+    o1 = flash_k.flash_attention(q, k, v, causal=True, block_q=32,
+                                 block_k=32)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o0, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_suffix_decode_chunk():
+    """lq < lk: queries are the suffix (speculative/chunked decode)."""
+    b, lq, lk, hq, hkv, dh = 2, 17, 100, 8, 2, 64
+    q = _randn((b, lq, hq, dh))
+    k = _randn((b, lk, hkv, dh))
+    v = _randn((b, lk, hkv, dh))
+    o0 = ref.attention(q, k, v, causal=True)
+    o1 = flash_k.flash_attention(q, k, v, causal=True, block_q=16,
+                                 block_k=32)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o0), rtol=2e-5,
+                               atol=2e-5)
+
+
+@given(st.integers(1, 2), st.integers(4, 70), st.integers(0, 2),
+       st.integers(0, 1))
+@settings(max_examples=15, deadline=None)
+def test_flash_property(b, l, hq_pow, dh_pow):
+    hq = 2 ** hq_pow
+    dh = 32 * (2 ** dh_pow)
+    q = _randn((b, l, hq, dh))
+    k = _randn((b, l, hq, dh))
+    v = _randn((b, l, hq, dh))
+    o0 = ref.attention(q, k, v, causal=True)
+    o1 = flash_k.flash_attention(q, k, v, causal=True, block_q=32,
+                                 block_k=32)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o0), rtol=1e-4,
+                               atol=1e-4)

@@ -1,0 +1,51 @@
+"""Launcher CLI integration tests (subprocess, single CPU device)."""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=420):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-m"] + args, capture_output=True,
+                       text=True, timeout=timeout, env=env, cwd=ROOT)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+def test_train_cli_tiny(tmp_path):
+    out = _run(["repro.launch.train", "--arch", "mamba-130m",
+                "--steps", "6", "--seq", "32", "--global-batch", "4",
+                "--dtype", "float32", "--no-resume",
+                "--ckpt-dir", str(tmp_path)])
+    assert "[launch.train] mamba-130m" in out
+
+
+def test_train_cli_resumes(tmp_path):
+    _run(["repro.launch.train", "--arch", "mamba-130m", "--steps", "4",
+          "--seq", "32", "--global-batch", "4", "--dtype", "float32",
+          "--no-resume", "--ckpt-every", "2", "--ckpt-dir", str(tmp_path)])
+    out = _run(["repro.launch.train", "--arch", "mamba-130m", "--steps",
+                "6", "--seq", "32", "--global-batch", "4", "--dtype",
+                "float32", "--ckpt-every", "2", "--ckpt-dir",
+                str(tmp_path)])
+    assert "resumed from step 4" in out
+
+
+def test_serve_cli_smoke():
+    out = _run(["repro.launch.serve", "--arch", "mamba-130m", "--smoke",
+                "--requests", "2", "--batch-slots", "2", "--max-new", "4"])
+    assert "tok/s" in out
+
+
+def test_dryrun_cli_help_without_devices():
+    """dryrun --help must work (and not crash on the forced device count)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--help"],
+        capture_output=True, text=True, timeout=240, env=env, cwd=ROOT)
+    assert r.returncode == 0 and "--mesh" in r.stdout

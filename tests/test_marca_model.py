@@ -1,0 +1,107 @@
+"""Paper-model layer tests: op graph consistency, buffer-management policy
+properties, cycle-model sanity, reproduction-claim gates (the same checks
+benchmarks/run.py prints, as hard assertions)."""
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import buffer_manager as bm, marca_model as mm, op_graph
+
+
+CFG = configs.get_config("mamba-2.8b")
+
+
+class TestOpGraph:
+    def test_flops_match_6nd_forward(self):
+        """Linear-op flops of the full model ~ 2*N*D forward."""
+        L = 1024
+        ops = op_graph.mamba_model_ops(CFG, L)
+        lin = sum(o.flops for o in ops if o.cls == "linear")
+        n_params = CFG.n_params()
+        want = 2 * n_params * L
+        assert 0.8 * want < lin < 1.3 * want
+
+    def test_ew_flops_scale_with_L_times_d_n(self):
+        o1 = op_graph.summarize(op_graph.mamba_model_ops(CFG, 512))
+        o2 = op_graph.summarize(op_graph.mamba_model_ops(CFG, 1024))
+        r = o2["element-wise"]["flops"] / o1["element-wise"]["flops"]
+        assert abs(r - 2.0) < 0.05
+
+    def test_update_op_marks_steps(self):
+        ops = op_graph.mamba_block_ops(CFG, 256)
+        upd = [o for o in ops if o.cls == "update"]
+        assert len(upd) == 1 and upd[0].steps == 256
+
+    def test_classes_cover_paper_set(self):
+        ops = op_graph.mamba_block_ops(CFG, 64)
+        classes = {o.cls for o in ops}
+        assert {"linear", "ew1", "ew2", "exp", "silu", "softplus",
+                "norm", "update"} <= classes
+
+
+class TestBufferManager:
+    def test_policies_ordered(self):
+        """both <= intra, inter <= none (adding a policy never adds bytes)."""
+        for L in [64, 512, 4096]:
+            t = bm.policy_table(op_graph.mamba_model_ops(CFG, L))
+            assert t["both"].total <= t["intra"].total + 1
+            assert t["both"].total <= t["inter"].total + 1
+            assert t["intra"].total <= t["none"].total + 1
+            assert t["inter"].total <= t["none"].total + 1
+
+    def test_intra_dominates_short_seq(self):
+        """Paper Fig. 10: intra-BM reduction is largest at short seq."""
+        t64 = bm.policy_table(op_graph.mamba_model_ops(CFG, 64))
+        t4k = bm.policy_table(op_graph.mamba_model_ops(CFG, 4096))
+        red = lambda t, k: 1 - t[k].total / t["none"].total
+        assert red(t64, "intra") > red(t4k, "intra")
+        assert red(t64, "intra") > 0.4           # paper ~0.73
+
+    def test_inter_dominates_long_seq(self):
+        t64 = bm.policy_table(op_graph.mamba_model_ops(CFG, 64))
+        t4k = bm.policy_table(op_graph.mamba_model_ops(CFG, 4096))
+        red = lambda t, k: 1 - t[k].total / t["none"].total
+        assert red(t4k, "inter") > red(t64, "inter")
+        assert red(t4k, "inter") > 0.3           # paper ~0.49
+
+
+class TestCycleModel:
+    def test_marca_faster_than_baselines_everywhere(self):
+        for name in ["mamba-130m", "mamba-2.8b"]:
+            cfg = configs.get_config(name)
+            for L in [64, 2048]:
+                ops = op_graph.mamba_model_ops(cfg, L)
+                assert mm.speedup(ops, mm.CPU) > 1
+                assert mm.speedup(ops, mm.GPU) > 1
+                assert mm.speedup(ops, mm.TENSOR_CORE_ONLY) > 1
+
+    def test_fig9_envelopes_within_2x_of_paper(self):
+        cs, gs = [], []
+        for name in ["mamba-130m", "mamba-370m", "mamba-790m",
+                     "mamba-1.4b", "mamba-2.8b"]:
+            cfg = configs.get_config(name)
+            for L in [64, 256, 1024, 2048, 4096]:
+                ops = op_graph.mamba_model_ops(cfg, L)
+                cs.append(mm.speedup(ops, mm.CPU))
+                gs.append(mm.speedup(ops, mm.GPU))
+        # paper: cpu max 463 avg 194; gpu max 11.66 avg 4.93
+        assert 463 / 2.5 < max(cs) < 463 * 2.5
+        assert 11.66 / 2.5 < max(gs) < 11.66 * 2.5
+        assert 4.93 / 2.5 < np.mean(gs) < 4.93 * 2.5
+
+    def test_fig1_ew_share_grows_and_exceeds_60pct(self):
+        shares = []
+        for L in [64, 512, 2048]:
+            ops = op_graph.mamba_model_ops(CFG, L)
+            t = mm.model_time(ops, mm.GPU)
+            tot = t["seconds"]
+            shares.append((t["by_group"].get("element-wise", 0)
+                           + t["by_group"].get("nonlinear", 0)) / tot)
+        assert shares[0] < shares[-1]
+        assert shares[-1] > 0.60
+
+    def test_energy_follows_power_and_memory(self):
+        ops = op_graph.mamba_model_ops(CFG, 1024)
+        e_marca = mm.model_time(ops, mm.MARCA)["energy_j"]
+        e_gpu = mm.model_time(ops, mm.GPU)["energy_j"]
+        assert e_gpu / e_marca > 10          # paper avg 42.5

@@ -1,0 +1,100 @@
+"""Serving tests: prefill+decode consistency vs full forward (the invariant
+that makes KV/state caching correct), batched generation, Server API."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import registry
+from repro.parallel import sharding
+from repro.runtime.serve import ServeConfig, Server
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _setup(name):
+    cfg = configs.smoke_variant(configs.get_config(name))
+    # capacity_factor high enough that no token ever drops: MoE dropping is
+    # count-dependent, which would (correctly) break prefill-vs-forward
+    # bit-equality on different sequence lengths.
+    cfg = dataclasses.replace(cfg, vocab=64, dtype="float32",
+                              capacity_factor=float(max(cfg.n_experts, 1)))
+    params = sharding.tree_values(
+        registry.init_params(cfg, jax.random.key(0)))
+    return cfg, params
+
+
+DECODE_ARCHS = ["mamba-130m", "granite-20b", "qwen2-7b", "jamba-v0.1-52b",
+                "xlstm-350m", "qwen2-moe-a2.7b"]
+
+
+@pytest.mark.parametrize("name", DECODE_ARCHS)
+def test_prefill_then_decode_matches_forward(name):
+    """logits from [prefill(t0..t8); decode(t9)] == forward(t0..t9)[:, -1]."""
+    cfg, params = _setup(name)
+    b, L = 2, 10
+    toks = jax.random.randint(jax.random.key(1), (b, L), 0, cfg.vocab,
+                              dtype=jnp.int32)
+    full_logits, _ = registry.forward(cfg, params, {"tokens": toks})
+
+    cache = sharding.tree_values(registry.init_cache(cfg, b, max_seq=16))
+    pre_logits, cache = registry.prefill(cfg, params, cache,
+                                         {"tokens": toks[:, :L - 1]})
+    np.testing.assert_allclose(
+        np.asarray(pre_logits), np.asarray(full_logits[:, :L - 1]),
+        rtol=2e-2, atol=2e-2)
+    dec_logits, cache = registry.decode_step(cfg, params, cache,
+                                             {"tokens": toks[:, L - 1:]})
+    np.testing.assert_allclose(
+        np.asarray(dec_logits[:, 0]), np.asarray(full_logits[:, -1]),
+        rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("name", ["mamba-130m", "granite-20b"])
+def test_greedy_generation_matches_teacher_forcing(name):
+    """Each greedily generated token equals argmax of a fresh full forward
+    over the extended prefix (decode path == forward path)."""
+    cfg, params = _setup(name)
+    prompts = np.asarray([[1, 2, 3, 4], [5, 6, 7, 8]], np.int32)
+    srv = Server(cfg, params, ServeConfig(max_seq=32))
+    gen = srv.generate(prompts, max_new=5)
+    seq = np.concatenate([prompts, gen], axis=1)
+    for t in range(5):
+        ctx = jnp.asarray(seq[:, :4 + t])
+        logits, _ = registry.forward(cfg, params, {"tokens": ctx})
+        want = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        np.testing.assert_array_equal(seq[:, 4 + t], want)
+
+
+def test_server_batch_api():
+    cfg, params = _setup("mamba-130m")
+    srv = Server(cfg, params, ServeConfig(max_seq=64))
+    out = srv.generate(np.ones((3, 6), np.int32), max_new=8)
+    assert out.shape == (3, 8)
+    assert out.dtype in (np.int32, np.int64)
+    assert (out >= 0).all() and (out < cfg.vocab).all()
+
+
+@pytest.mark.parametrize("name", ["granite-20b", "qwen2-7b"])
+def test_int8_kv_cache_decode_consistency(name):
+    """int8 KV cache (per-position absmax): greedy decode agrees with the
+    full forward argmax; logit drift bounded by quantization error."""
+    cfg, params = _setup(name)
+    cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    toks = jax.random.randint(jax.random.key(2), (2, 10), 0, cfg.vocab,
+                              dtype=jnp.int32)
+    full, _ = registry.forward(cfg, params, {"tokens": toks})
+    cache = sharding.tree_values(registry.init_cache(cfg, 2, 16))
+    assert cache["k"].dtype == jnp.int8
+    _, cache = registry.prefill(cfg, params, cache,
+                                {"tokens": toks[:, :9]})
+    dec, cache = registry.decode_step(cfg, params, cache,
+                                      {"tokens": toks[:, 9:]})
+    drift = float(jnp.max(jnp.abs(dec[:, 0] - full[:, -1])))
+    assert drift < 0.5, drift
+    np.testing.assert_array_equal(
+        np.asarray(jnp.argmax(dec[:, 0], -1)),
+        np.asarray(jnp.argmax(full[:, -1], -1)))

@@ -1,0 +1,243 @@
+"""Substrate tests: data determinism, optimizer (incl. 8-bit moments, EF
+compression), checkpoint roundtrip/async/keep-k, schedules."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager
+from repro.data import SyntheticLM, ShardedLoader
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         clip_by_global_norm, cosine_schedule, compression,
+                         quantized_state as qs)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+class TestData:
+    def test_deterministic_and_resumable(self):
+        ds = SyntheticLM(vocab=64, seq_len=16, seed=3)
+        a = ds.batch_at(step=7, shard=0, num_shards=2, batch_per_shard=4)
+        b = ds.batch_at(step=7, shard=0, num_shards=2, batch_per_shard=4)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+    def test_shards_disjoint(self):
+        ds = SyntheticLM(vocab=64, seq_len=16, seed=3)
+        a = ds.batch_at(5, 0, 2, 4)
+        b = ds.batch_at(5, 1, 2, 4)
+        assert not np.array_equal(a["tokens"], b["tokens"])
+
+    def test_labels_shift(self):
+        ds = SyntheticLM(vocab=64, seq_len=16, seed=0)
+        batch = ds.batch_at(0, 0, 1, 2)
+        assert batch["tokens"].shape == (2, 16)
+        assert batch["labels"].shape == (2, 16)
+
+    def test_loader_resume_matches(self):
+        ds = SyntheticLM(vocab=32, seq_len=8, seed=1)
+        l1 = ShardedLoader(ds, global_batch=4, start_step=0)
+        batches = [next(l1) for _ in range(5)]
+        l2 = ShardedLoader(ds, global_batch=4, start_step=3)
+        np.testing.assert_array_equal(next(l2)["tokens"],
+                                      batches[3]["tokens"])
+
+    def test_structure_learnable(self):
+        """Order-2 rule: the same (prev2, prev) context repeats its next
+        token >50% of the time (vs 1/V for noise)."""
+        ds = SyntheticLM(vocab=32, seq_len=64, seed=0, noise=0.1)
+        b = ds.batch_at(0, 0, 1, 64)["tokens"]
+        ctx = {}
+        hits = total = 0
+        for row in b:
+            for t in range(2, len(row)):
+                key = (row[t - 2], row[t - 1])
+                if key in ctx:
+                    total += 1
+                    hits += ctx[key] == row[t]
+                ctx[key] = row[t]
+        assert total > 50 and hits / total > 0.5
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+def _quadratic_problem():
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(8, 8)),
+                         jnp.float32)
+    params = {"w": jnp.zeros((8, 8), jnp.float32)}
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    return params, loss, target
+
+
+class TestAdamW:
+    @pytest.mark.parametrize("moment_dtype", ["float32", "bfloat16", "int8"])
+    def test_converges_quadratic(self, moment_dtype):
+        params, loss, target = _quadratic_problem()
+        cfg = AdamWConfig(lr=0.05, weight_decay=0.0,
+                          moment_dtype=moment_dtype)
+        state = adamw_init(params, cfg)
+        for _ in range(300):
+            g = jax.grad(loss)(params)
+            params, state, _ = adamw_update(g, state, params, cfg)
+        assert float(loss(params)) < 0.05
+
+    def test_int8_moments_memory(self):
+        params = {"w": jnp.zeros((1024, 256), jnp.float32)}
+        cfg = AdamWConfig(moment_dtype="int8")
+        state = adamw_init(params, cfg)
+        q = state.mu["w"]
+        assert qs.is_qtensor(q)
+        bytes_q = q.q.size + q.scale.size * 4
+        assert bytes_q < 1024 * 256 * 4 / 3         # >3x smaller than f32
+
+    def test_clip_global_norm(self):
+        g = {"a": jnp.full((10,), 100.0)}
+        clipped, gn = clip_by_global_norm(g, 1.0)
+        total = jnp.sqrt(sum(jnp.sum(x ** 2)
+                             for x in jax.tree.leaves(clipped)))
+        assert abs(float(total) - 1.0) < 1e-5
+
+    def test_schedule_shape(self):
+        s0 = float(cosine_schedule(0, 10, 100))
+        s10 = float(cosine_schedule(10, 10, 100))
+        s100 = float(cosine_schedule(100, 10, 100))
+        assert s0 == 0.0 and abs(s10 - 1.0) < 1e-6 and s100 <= 0.11
+
+
+class TestQuantization:
+    @given(st.integers(1, 4), st.integers(1, 600))
+    @settings(max_examples=30, deadline=None)
+    def test_roundtrip_error_bounded(self, r, c):
+        x = jnp.asarray(np.random.default_rng(r * 1000 + c).normal(
+            size=(r, c)).astype(np.float32))
+        y = qs.dequantize(qs.quantize(x))
+        blk_max = float(jnp.max(jnp.abs(x)))
+        assert float(jnp.max(jnp.abs(y - x))) <= blk_max / 127 + 1e-6
+        assert y.shape == x.shape
+
+
+class TestCompression:
+    def test_error_feedback_unbiased_over_time(self):
+        """EF compensates quantization: sum of g_hat ~ sum of g."""
+        rng = np.random.default_rng(0)
+        err = jnp.zeros((64,), jnp.float32)
+        total_g = np.zeros(64)
+        total_hat = np.zeros(64)
+        for _ in range(200):
+            g = jnp.asarray(rng.normal(size=64).astype(np.float32))
+            g_hat, err = compression.ef_compress_decompress(g, err)
+            total_g += np.asarray(g)
+            total_hat += np.asarray(g_hat)
+        assert np.max(np.abs(total_g - total_hat)) < 0.2
+
+    def test_ef_training_parity(self):
+        """Quadratic convergence with EF-compressed grads ~= exact."""
+        params, loss, _ = _quadratic_problem()
+        cfg = AdamWConfig(lr=0.05, weight_decay=0.0)
+        state = adamw_init(params, cfg)
+        err = compression.ef_init(params)
+        for _ in range(300):
+            g = jax.grad(loss)(params)
+            g, err = compression.ef_apply(g, err)
+            params, state, _ = adamw_update(g, state, params, cfg)
+        assert float(loss(params)) < 0.1
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint manager
+# ---------------------------------------------------------------------------
+
+class TestCheckpoint:
+    def _tree(self):
+        return {"params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                           "b": jnp.ones((4,), jnp.bfloat16)},
+                "step": jnp.int32(5)}
+
+    def test_roundtrip(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        tree = self._tree()
+        mgr.save(10, tree, blocking=True)
+        got, step = mgr.restore(tree)
+        assert step == 10
+        np.testing.assert_array_equal(np.asarray(got["params"]["w"]),
+                                      np.asarray(tree["params"]["w"]))
+        assert got["params"]["b"].dtype == jnp.bfloat16
+
+    def test_async_and_keep_k(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        tree = self._tree()
+        for s in [1, 2, 3, 4]:
+            mgr.save(s, tree)
+        mgr.wait()
+        assert mgr.all_steps() == [3, 4]
+
+    def test_latest_restore(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        tree = self._tree()
+        mgr.save(1, tree, blocking=True)
+        tree2 = jax.tree.map(lambda x: x + 1, tree)
+        mgr.save(7, tree2, blocking=True)
+        got, step = mgr.restore(tree)
+        assert step == 7
+        np.testing.assert_array_equal(np.asarray(got["step"]), 6)
+
+    def test_no_partial_checkpoints_visible(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        os.makedirs(tmp_path / "tmp.99")          # simulated torn write
+        assert mgr.all_steps() == []
+
+
+class TestPrefetcher:
+    def test_prefetch_preserves_order_and_terminates(self):
+        from repro.data import Prefetcher
+        items = list(range(20))
+        out = list(Prefetcher(iter(items), depth=3))
+        assert out == items
+
+    def test_make_train_iterator_end_to_end(self):
+        import dataclasses
+        from repro import configs
+        from repro.data import make_train_iterator
+        cfg = configs.smoke_variant(configs.get_config("mamba-130m"))
+        it = make_train_iterator(cfg, global_batch=4, seq_len=16,
+                                 start_step=5, prefetch=2)
+        b = next(it)
+        assert b["tokens"].shape == (4, 16)
+        assert (b["tokens"] < cfg.vocab).all()
+
+
+class TestCheckpointEdge:
+    def test_restore_specific_step(self, tmp_path):
+        import jax.numpy as jnp
+        from repro.checkpoint import CheckpointManager
+        mgr = CheckpointManager(str(tmp_path), keep=5)
+        tree = {"x": jnp.ones((3,))}
+        for s in [1, 2, 3]:
+            mgr.save(s, jax.tree.map(lambda v: v * s, tree), blocking=True)
+        got, step = mgr.restore(tree, step=2)
+        assert step == 2
+        np.testing.assert_array_equal(np.asarray(got["x"]), 2 * np.ones(3))
+
+    def test_restore_missing_raises(self, tmp_path):
+        from repro.checkpoint import CheckpointManager
+        mgr = CheckpointManager(str(tmp_path))
+        with pytest.raises(FileNotFoundError):
+            mgr.restore({"x": jnp.ones((1,))})
+
+    def test_dtype_cast_on_restore(self, tmp_path):
+        from repro.checkpoint import CheckpointManager
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, {"x": jnp.ones((4,), jnp.float32)}, blocking=True)
+        got, _ = mgr.restore({"x": jnp.ones((4,), jnp.bfloat16)})
+        assert got["x"].dtype == jnp.bfloat16
