@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   tab3  approximation accuracy                (paper Table 3)
   kernels  scan/exp/silu microbenchmarks      (functional, CPU)
   roofline per-(arch x shape x mesh) terms    (from experiments/dryrun)
+  serve    continuous-batching vs static-batch serving throughput
 """
 from __future__ import annotations
 
@@ -19,12 +20,12 @@ def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (fig1_breakdown, fig7_intensity, fig9_speedup,
                             fig10_ablation, kernel_bench, roofline,
-                            tab3_accuracy)
+                            serve_throughput, tab3_accuracy)
     mods = {
         "fig1": fig1_breakdown, "fig7": fig7_intensity,
         "fig9": fig9_speedup, "fig10": fig10_ablation,
         "tab3": tab3_accuracy, "kernels": kernel_bench,
-        "roofline": roofline,
+        "roofline": roofline, "serve": serve_throughput,
     }
     for name, mod in mods.items():
         if only and name != only:

@@ -1,29 +1,28 @@
-"""Batched serving example (deliverable b): train briefly, then serve
-batched generation requests through the prefill+decode Server.
+"""Continuous-batching serving example: variable-length prompts with
+per-request token budgets stream through the slot-pool engine; the static
+Server wrapper is shown for comparison.
 
   PYTHONPATH=src python examples/serve_batched.py --arch mamba-130m
   PYTHONPATH=src python examples/serve_batched.py --arch olmo-1b
 """
 import argparse
 import dataclasses
-import time
 
 import jax
 import numpy as np
 
 from repro import configs
-from repro.data import SyntheticLM
 from repro.models import registry
 from repro.parallel import sharding
+from repro.runtime.engine import Engine, EngineConfig
 from repro.runtime.serve import ServeConfig, Server
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mamba-130m")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=5)
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
 
@@ -32,24 +31,34 @@ def main():
     params = sharding.tree_values(
         registry.init_params(cfg, jax.random.key(0)))
 
-    ds = SyntheticLM(vocab=cfg.vocab, seq_len=args.prompt_len, seed=7)
-    prompts = ds.batch_at(0, 0, 1, args.batch)["tokens"]
+    # variable-length prompts + per-request budgets: the case the static
+    # batch loop could not serve without padding every request
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab, size=(int(l),)).astype(np.int32)
+               for l in rng.choice([6, 10, 16, 24], size=args.requests)]
+    budgets = rng.integers(8, 25, size=args.requests)
 
-    srv = Server(cfg, params, ServeConfig(
-        batch_slots=args.batch,
-        max_seq=args.prompt_len + args.max_new + 8,
-        temperature=args.temperature))
+    eng = Engine(cfg, params, EngineConfig(
+        n_slots=args.slots, max_seq=64, temperature=args.temperature))
+    reqs = [eng.submit(p, max_new=int(m))
+            for p, m in zip(prompts, budgets)]
+    eng.run()
 
-    t0 = time.perf_counter()
-    out = srv.generate(prompts, max_new=args.max_new)
-    dt = time.perf_counter() - t0
-    toks = out.size
-    print(f"[serve] arch={args.arch} batch={args.batch} "
-          f"prompt={args.prompt_len} new={args.max_new}")
-    print(f"[serve] generated {toks} tokens in {dt:.2f}s "
-          f"({toks / dt:.1f} tok/s on CPU, prefill+decode path)")
-    for i, row in enumerate(out):
-        print(f"  req{i}: {prompts[i].tolist()} -> {row.tolist()}")
+    s = eng.stats.summary()
+    print(f"[engine] arch={args.arch} slots={args.slots} "
+          f"requests={args.requests}")
+    print(f"[engine] {s['useful_tokens']} tokens in {s['wall_s']:.2f}s "
+          f"({s['tokens_per_s']:.1f} tok/s, occupancy {s['occupancy']:.2f}, "
+          f"ttft mean {s['ttft_mean_s'] * 1e3:.0f}ms)")
+    for r in reqs:
+        print(f"  req{r.req_id}: prompt[{r.prompt.size}] "
+              f"-> {r.tokens}")
+
+    # the legacy rectangular API still works, now engine-backed
+    srv = Server(cfg, params, ServeConfig(batch_slots=args.slots,
+                                          max_seq=64))
+    out = srv.generate(np.ones((args.slots, 8), np.int32), max_new=8)
+    print(f"[server] legacy batch API: generated shape {out.shape}")
 
 
 if __name__ == "__main__":

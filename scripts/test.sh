@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 test entry point.  Fails fast — and loudly — on collection
+# errors so "suite can't import" is never mistaken for "suite passes".
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if ! python -m pytest -q --collect-only >collect.err 2>&1; then
+    echo "FATAL: test collection failed" >&2
+    cat collect.err >&2
+    rm -f collect.err
+    exit 2
+fi
+rm -f collect.err
+
+exec python -m pytest -x -q "$@"

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels import pallas_compat
+
 
 def _conv_kernel(x_ref, w_ref, b_ref, xprev_ref, y_ref, tail_ref, hist,
                  *, bl: int, k: int, has_bias: bool):
@@ -75,7 +77,7 @@ def _conv_padded(x, w, b, x_prev, block_d: int, block_l: int,
         in_specs=in_specs,
         out_specs=out_specs,
         scratch_shapes=[pltpu.VMEM((k - 1, block_d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="marca_causal_conv1d",

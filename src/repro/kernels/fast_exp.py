@@ -16,6 +16,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels import pallas_compat
+
 from repro.core import approx
 
 _LANES = 128
@@ -46,7 +48,7 @@ def fast_exp_2d(x, b_shift=approx.OUR_EXP_B_SHIFT, c=approx.OUR_EXP_C,
         grid=grid,
         in_specs=[pl.BlockSpec((block_rows, cols), lambda r: (r, 0))],
         out_specs=pl.BlockSpec((block_rows, cols), lambda r: (r, 0)),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_compat.CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
         name="marca_fast_exp",

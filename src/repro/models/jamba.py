@@ -141,6 +141,17 @@ def init_cache(cfg, batch, max_seq, dtype):
             "pos": Param(jnp.zeros((batch,), jnp.int32), ("act_batch",))}
 
 
+def cache_slot_axes(cfg):
+    """Batch/slot axis index per cache leaf (layout matches init_cache)."""
+    period = cfg.attn_every or 8
+    caches = {}
+    for pos in range(period):
+        is_attn, _ = _pos_kind(cfg, pos)
+        caches[f"pos{pos}"] = ({"k": 1, "v": 1} if is_attn
+                               else {"h": 1, "conv": 1})
+    return {"layers": caches, "pos": 0}
+
+
 def decode_step(cfg, p, cache, batch):
     dtype = jnp.dtype(cfg.dtype)
     period = cfg.attn_every or 8

@@ -90,17 +90,17 @@ def mamba_block_apply(cfg, p, x, state=None):
 
 
 def mamba_block_step(cfg, p, x_t, state):
-    """Single-token decode.  x_t (b, 1, d); state dict as above."""
+    """Single-token decode.  x_t (b, 1, d); state dict as above.
+
+    The conv-state update (shift window, depthwise filter at the last tap)
+    is the L=1 case of the streaming causal conv, so it shares the
+    ops.causal_conv1d dispatch with prefill — decode uses the same
+    cfg.conv_impl kernel."""
     silu = approx.get_silu(cfg.silu_impl)
     x_in, z = _project(cfg, p, x_t)             # (b,1,di)
-    # conv state update: shift window, apply depthwise filter at last tap
-    conv = state["conv"]                        # (b, k-1, di)
-    window = jnp.concatenate([conv, x_in], axis=1)      # (b, k, di)
-    w = p["conv_w"].astype(jnp.float32)
-    x_c = jnp.sum(window.astype(jnp.float32) * w[None], axis=1,
-                  keepdims=True) + p["conv_b"]
-    x_c = x_c.astype(x_t.dtype)
-    new_conv = window[:, 1:]
+    x_c, new_conv = ops.causal_conv1d(
+        x_in, p["conv_w"], p["conv_b"], x_prev=state["conv"],
+        impl=cfg.conv_impl)
     x_a = silu(x_c)
     dt, B, C = _ssm_inputs(cfg, p, x_a)
     A = -jnp.exp(p["A_log"])

@@ -71,6 +71,11 @@ def init_cache(cfg, batch, max_seq, dtype):
     }
 
 
+def cache_slot_axes(cfg):
+    """Batch/slot axis index per cache leaf (layout matches init_cache)."""
+    return {"h": 1, "conv": 1, "pos": 0}
+
+
 def decode_step(cfg, p, cache, batch):
     dtype = jnp.dtype(cfg.dtype)
     h = blocks.embed_apply(cfg, p["embed"], batch["tokens"], dtype)

@@ -63,6 +63,50 @@ def abstract_cache(cfg, batch, max_seq):
 
 
 # ---------------------------------------------------------------------------
+# Slot-indexable caches (continuous-batching serving engine)
+#
+# Every family exposes cache_slot_axes(cfg): a pytree congruent with
+# init_cache whose leaves are the index of the batch ("slot") axis of the
+# corresponding cache leaf.  The three operations below are the whole
+# contract the serving engine needs: fixed-shape gather/scatter of
+# per-sequence state by slot id, plus masking so inactive slots never
+# mutate.  All are jit-safe with traced slot ids.
+# ---------------------------------------------------------------------------
+
+def cache_slot_axes(cfg):
+    """Pytree (matching init_cache structure) of per-leaf slot-axis ints."""
+    return family(cfg).cache_slot_axes(cfg)
+
+
+def gather_slots(cfg, cache, slot_ids):
+    """Extract a sub-cache for ``slot_ids`` (int array (m,)) from a pooled
+    cache: each leaf is narrowed to m entries along its slot axis."""
+    return jax.tree.map(
+        lambda ax, leaf: jnp.take(leaf, slot_ids, axis=ax),
+        cache_slot_axes(cfg), cache)
+
+
+def scatter_slots(cfg, pool_cache, sub_cache, slot_ids):
+    """Write a sub-cache (m slot entries) into ``pool_cache`` at
+    ``slot_ids``; the pooled shapes are unchanged (pure functional .at)."""
+    def put(ax, dst, src):
+        idx = (slice(None),) * ax + (slot_ids,)
+        return dst.at[idx].set(src.astype(dst.dtype))
+    return jax.tree.map(put, cache_slot_axes(cfg), pool_cache, sub_cache)
+
+
+def mask_slots(cfg, old_cache, new_cache, active):
+    """Per-slot select: keep ``new_cache`` where ``active`` (bool (slots,))
+    else ``old_cache`` — freezes state (incl. pos) of inactive slots so a
+    pooled decode step cannot disturb free or finished slots."""
+    def mix(ax, old, new):
+        shape = [1] * old.ndim
+        shape[ax] = -1
+        return jnp.where(active.reshape(shape), new.astype(old.dtype), old)
+    return jax.tree.map(mix, cache_slot_axes(cfg), old_cache, new_cache)
+
+
+# ---------------------------------------------------------------------------
 # Forward / loss
 # ---------------------------------------------------------------------------
 

@@ -152,6 +152,14 @@ def init_cache(cfg, batch, max_seq, dtype):
     return out
 
 
+def cache_slot_axes(cfg):
+    """Batch/slot axis index per cache leaf (layout matches init_cache)."""
+    ax = {"k": 1, "v": 1, "pos": 0}
+    if cfg.kv_cache_dtype == "int8":
+        ax.update({"k_scale": 1, "v_scale": 1})
+    return ax
+
+
 def decode_step(cfg, p, cache, batch):
     """One-token decode.  batch['tokens'] (b, 1) (or embeds for stubs);
     cache from init_cache.  Returns (logits (b,1,V...), new_cache)."""

@@ -335,6 +335,18 @@ def init_cache(cfg, batch, max_seq, dtype):
             "pos": Param(jnp.zeros((batch,), jnp.int32), ("act_batch",))}
 
 
+def cache_slot_axes(cfg):
+    """Batch/slot axis index per cache leaf (layout matches init_cache):
+    all xLSTM state tensors are batch-leading."""
+    layers = []
+    for i in range(cfg.n_layers):
+        if _is_slstm(cfg, i):
+            layers.append({"slstm": {k: 0 for k in ("c", "n", "h", "m")}})
+        else:
+            layers.append({"mlstm": {k: 0 for k in ("C", "n", "m", "conv")}})
+    return {"layers": layers, "pos": 0}
+
+
 def decode_step(cfg, p, cache, batch):
     dtype = jnp.dtype(cfg.dtype)
     h = blocks.embed_apply(cfg, p["embed"], batch["tokens"], dtype)

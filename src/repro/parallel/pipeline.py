@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.parallel import sharding
+
 
 def _pipeline_local(stage_fn, params_local, mb_local, *, axis_name: str,
                     n_micro: int):
@@ -34,8 +36,8 @@ def _pipeline_local(stage_fn, params_local, mb_local, *, axis_name: str,
                          mb_local.dtype)
     # the carry becomes device-varying after the first ppermute; mark the
     # initial zeros as varying over the pipe axis for the vma type system
-    x0 = jax.lax.pcast(x0, (axis_name,), to="varying")
-    outputs0 = jax.lax.pcast(outputs0, (axis_name,), to="varying")
+    x0 = sharding.pcast_varying(x0, axis_name)
+    outputs0 = sharding.pcast_varying(outputs0, axis_name)
     total = n_micro + S - 1
 
     def step(carry, t):

@@ -139,6 +139,16 @@ def constrain(x, *axes):
 # Param-tree utilities
 # ---------------------------------------------------------------------------
 
+def pcast_varying(x, axis_name: str):
+    """Mark ``x`` varying over ``axis_name`` for shard_map's vma type
+    system.  On jax versions without lax.pcast (pre-vma) this is the
+    identity — values there are implicitly varying."""
+    pcast = getattr(jax.lax, "pcast", None)
+    if pcast is None:
+        return x
+    return pcast(x, (axis_name,), to="varying")
+
+
 def is_param(x) -> bool:
     return isinstance(x, Param)
 

@@ -28,6 +28,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core import selective_scan as css
+from repro.parallel import sharding
 
 
 def _local(x, dt, A, B, C, D, z, axis_name: str):
@@ -37,9 +38,9 @@ def _local(x, dt, A, B, C, D, z, axis_name: str):
 
     # pass 1: local scan from zero + segment summary (h0 pcast to varying
     # so the inner lax.scan carry type matches under shard_map's vma rules)
-    h0_zero = jax.lax.pcast(
+    h0_zero = sharding.pcast_varying(
         jnp.zeros((x.shape[0], x.shape[2], A.shape[1]), jnp.float32),
-        (axis_name,), to="varying")
+        axis_name)
     y_local, b_seg = css.selective_scan_chunked(x, dt, A, B, C, D=None,
                                                 z=None, h0=h0_zero)
     dt_sum = jnp.sum(dt.astype(jnp.float32), axis=1)          # (b, d)

@@ -1,2 +1,20 @@
-"""Runtime: training loop (resume/preemption/straggler), serving loop,
-metrics."""
+"""Runtime: training loop (resume/preemption/straggler), serving engine,
+metrics.
+
+Serving request lifecycle (engine.py + state_pool.py):
+
+  1. queue    — Engine.submit() enqueues a Request; arrival-gated
+                requests wait in a pending list until their trace time.
+  2. prefill  — when a pool slot is free, the request's prompt runs one
+                exact-length batch-1 prefill; the resulting per-layer
+                recurrent state (SSM h, conv tail, or KV strip) is
+                scattered into the slot and the first token is sampled.
+  3. decode   — the slot joins the fixed-shape pooled decode batch; every
+                engine step advances all active slots one token, with
+                inactive slots masked so their state stays frozen.
+  4. evict    — on EOS or max_new the slot is reset to the init state and
+                returned to the free list; the next queued request is
+                admitted on the same step.  Throughput/latency counters
+                (metrics.ServeStats) track useful tokens, occupancy,
+                TTFT and request latency throughout.
+"""

@@ -1,0 +1,307 @@
+"""Continuous-batching serving engine over the slot-based state pool.
+
+Request lifecycle (see also runtime/__init__.py):
+
+  submit() -> [pending until arrival] -> ready queue -> prefill-into-slot
+  -> joins the running decode batch -> per-slot EOS / max-token finish
+  -> evict (slot reset + freed) -> Request returned with tokens + timings.
+
+Scheduling policy: admit-eagerly FIFO.  Each engine ``step()`` first
+admits ready requests into every free slot (one fused exact-length
+prefill-scatter-sample dispatch per request), then runs a pooled decode
+BURST over all ``n_slots`` slots with inactive slots masked.  Sampling
+is fused into the decode jit so tokens chain on-device; the host syncs
+once per burst.  A burst runs to the next *certain* scheduling event
+(the shortest remaining token budget = the next guaranteed eviction),
+capped by ``sched_quantum`` only when an uncertain event could act
+sooner (an active EOS, or a free slot with queued work).  Because an
+SSM slot is O(d_inner * d_state) regardless of sequence length,
+admission/eviction are O(1) scatters and the decode batch shape never
+changes — no ragged-batch re-bucketing between steps.
+
+jit discipline: decode compiles once (fixed pool shape) and is shared
+across Engine instances per config; the prefill compiles once per
+distinct prompt length (callers that care should quantize prompt
+lengths; the benchmark draws from a small set).
+
+Caveat: MoE families route tokens across the batch through shared expert
+capacity, so slot composition can perturb logits at tight
+capacity_factor.  Pure Mamba / dense attention families are exactly
+slot-independent (the engine's correctness tests assert this).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import registry
+from repro.runtime import metrics as metrics_lib
+from repro.runtime.state_pool import SlotStatePool
+
+
+def _sample_last(logits, temperature: float, key):
+    """(b, L, V) logits -> (b, 1) int32 tokens off the last position.
+    Runs inside the jit'd step functions (temperature is trace-static)."""
+    last = logits.astype(jnp.float32)[:, -1:, :]
+    if temperature <= 0:
+        return jnp.argmax(last, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, last / temperature, axis=-1).astype(jnp.int32)
+
+
+# Per-config jit'd step functions, shared across Engine instances (cfg is
+# a frozen dataclass, hence hashable).  Without this every Engine would
+# carry its own jit cache and re-trace/compile prefill and decode that an
+# earlier engine — or the warmup pass — already compiled.
+@functools.lru_cache(maxsize=None)
+def _jit_prefill_admit(cfg, temperature: float):
+    """Fused prefill-into-slot: full-seq prefill of one request, scatter
+    of its state into the pool slot, and first-token sampling — one
+    dispatch per admission."""
+    def _fn(p, fresh, tokens, pool_cache, slot_id, key):
+        logits, sub = registry.prefill(cfg, p, fresh, {"tokens": tokens})
+        new_pool = registry.scatter_slots(cfg, pool_cache, sub, slot_id)
+        return _sample_last(logits, temperature, key), new_pool
+    return jax.jit(_fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_decode_sample(cfg, temperature: float):
+    """Fused decode + sample: tokens stay on device so consecutive steps
+    chain without a host round-trip (the burst loop syncs once per
+    scheduling quantum, keeping XLA dispatch pipelined)."""
+    def _decode_fn(p, cache, toks, active, key):
+        logits, new_cache = registry.decode_step(cfg, p, cache,
+                                                 {"tokens": toks})
+        new_cache = registry.mask_slots(cfg, cache, new_cache, active)
+        return _sample_last(logits, temperature, key), new_cache
+    return jax.jit(_decode_fn)
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    n_slots: int = 4
+    max_seq: int = 256
+    temperature: float = 0.0
+    seed: int = 0
+    # scheduling quantum: max decode steps per burst between host syncs /
+    # admission checks.  Larger = fewer syncs (throughput), smaller =
+    # faster admission + tighter EOS eviction (latency).
+    sched_quantum: int = 8
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request; engine fills tokens + timing fields."""
+    req_id: int
+    prompt: np.ndarray                    # (Lp,) int32
+    max_new: int = 32
+    eos_id: Optional[int] = None
+    arrival: float = 0.0                  # offset (s) from run() start
+    tokens: list = dataclasses.field(default_factory=list)
+    t_submit: float = 0.0
+    t_admit: Optional[float] = None       # prefill start
+    t_first: Optional[float] = None       # first token out (TTFT anchor)
+    t_done: Optional[float] = None
+
+    @property
+    def finished(self) -> bool:
+        return self.t_done is not None
+
+
+class Engine:
+    def __init__(self, cfg, params, ecfg: EngineConfig,
+                 logger: Optional[metrics_lib.MetricsLogger] = None,
+                 clock: Callable[[], float] = time.perf_counter):
+        if cfg.frontend in ("audio_stub", "vision_stub"):
+            raise NotImplementedError(
+                "serving engine supports token frontends only")
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.pool = SlotStatePool(cfg, ecfg.n_slots, ecfg.max_seq)
+        self.stats = metrics_lib.ServeStats()
+        self.logger = logger
+        self._now = clock
+        self._prefill = _jit_prefill_admit(cfg, float(ecfg.temperature))
+        self._decode = _jit_decode_sample(cfg, float(ecfg.temperature))
+        self._key = jax.random.key(ecfg.seed)
+        self._pending: list[Request] = []      # arrival-gated, sorted
+        self._ready: collections.deque[Request] = collections.deque()
+        self._slot_req: list[Optional[Request]] = [None] * ecfg.n_slots
+        self._next_tok = np.zeros((ecfg.n_slots, 1), np.int32)
+        self._finished: list[Request] = []
+        self._next_id = 0
+
+    # ------------------------------------------------------------------
+    # Request intake
+    # ------------------------------------------------------------------
+
+    def submit(self, prompt, max_new: int = 32,
+               eos_id: Optional[int] = None,
+               arrival: Optional[float] = None) -> Request:
+        """Enqueue a request.  ``arrival`` (seconds from run() start)
+        gates admission for trace replay; None means ready immediately."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size < 1:
+            raise ValueError("empty prompt")
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        if prompt.size + max_new > self.ecfg.max_seq:
+            raise ValueError(
+                f"prompt ({prompt.size}) + max_new ({max_new}) exceeds "
+                f"max_seq ({self.ecfg.max_seq})")
+        req = Request(req_id=self._next_id, prompt=prompt, max_new=max_new,
+                      eos_id=eos_id, arrival=arrival or 0.0,
+                      t_submit=self._now())
+        self._next_id += 1
+        if arrival is None:
+            self._ready.append(req)
+        else:
+            self._pending.append(req)
+            self._pending.sort(key=lambda r: r.arrival)
+        return req
+
+    # ------------------------------------------------------------------
+    # Scheduler core
+    # ------------------------------------------------------------------
+
+    def _admit(self, req: Request) -> None:
+        slot = self.pool.alloc()
+        assert slot is not None
+        t0 = self._now()
+        req.t_admit = t0
+        self._key, k = jax.random.split(self._key)
+        tok_dev, new_pool = self._prefill(
+            self.params, self.pool.fresh, jnp.asarray(req.prompt[None]),
+            self.pool.cache, jnp.asarray([slot]), k)
+        tok = int(np.asarray(tok_dev)[0, 0])
+        self.pool.cache = new_pool
+        req.t_first = self._now()
+        self.stats.record_prefill(req.prompt.size, req.t_first - t0)
+        self._slot_req[slot] = req
+        self._next_tok[slot, 0] = tok
+        req.tokens.append(tok)
+        if self.logger:
+            self.logger.log(event="admit", req=req.req_id, slot=slot,
+                            prompt_len=int(req.prompt.size))
+        if self._hit_stop(req):
+            self._finish(slot)
+
+    def _hit_stop(self, req: Request) -> bool:
+        return (len(req.tokens) >= req.max_new
+                or (req.eos_id is not None
+                    and req.tokens[-1] == req.eos_id))
+
+    def _finish(self, slot: int) -> None:
+        req = self._slot_req[slot]
+        req.t_done = self._now()
+        self.stats.record_request(ttft=req.t_first - req.t_submit,
+                                  latency=req.t_done - req.t_submit)
+        self.pool.evict(slot)
+        self._slot_req[slot] = None
+        self._next_tok[slot, 0] = 0
+        self._finished.append(req)
+        if self.logger:
+            self.logger.log(event="finish", req=req.req_id, slot=slot,
+                            n_tokens=len(req.tokens))
+
+    def _burst_len(self, active) -> int:
+        """Decode steps until the next scheduling event.
+
+        The shortest remaining token budget among active slots is the
+        next *certain* eviction; nothing can be admitted before then when
+        all slots are busy, so in that state the burst runs uncapped to
+        the eviction — zero intermediate host syncs, matching a static
+        loop's dispatch pipelining with none of its wasted steps.  The
+        quantum caps the burst only when an *uncertain* event could act
+        sooner: an EOS may evict any step (overshoot is trimmed but
+        wastes the slot until the burst ends), and a free slot plus
+        queued/pending work means an admission check is worth taking."""
+        remaining = min(self._slot_req[s].max_new - len(self._slot_req[s].tokens)
+                        for s in active)
+        has_eos = any(self._slot_req[s].eos_id is not None for s in active)
+        may_admit = self.pool.n_free > 0 and (self._ready or self._pending)
+        if has_eos or may_admit:
+            return max(1, min(remaining, self.ecfg.sched_quantum))
+        return max(1, remaining)
+
+    def _decode_burst(self) -> None:
+        active = self.pool.active_slots()
+        n_steps = self._burst_len(active)
+        t0 = self._now()
+        toks = jnp.asarray(self._next_tok)
+        act = jnp.asarray(self.pool.active_mask())
+        cache = self.pool.cache
+        outs = []
+        for _ in range(n_steps):
+            self._key, k = jax.random.split(self._key)
+            toks, cache = self._decode(self.params, cache, toks, act, k)
+            outs.append(toks)
+        self.pool.cache = cache
+        # one host sync per burst; device_get on the list avoids compiling
+        # an XLA concatenate per distinct burst length
+        burst = np.concatenate(jax.device_get(outs), axis=1)
+        n_appended = 0
+        for slot in active:
+            req = self._slot_req[slot]
+            for t in range(n_steps):
+                tok = int(burst[slot, t])
+                req.tokens.append(tok)
+                n_appended += 1
+                self._next_tok[slot, 0] = tok
+                if self._hit_stop(req):
+                    self._finish(slot)
+                    break                 # trim overshoot past EOS
+        self.stats.record_decode(n_active=len(active),
+                                 n_slots=self.ecfg.n_slots,
+                                 dt=self._now() - t0,
+                                 n_steps=n_steps, n_tokens=n_appended)
+
+    def step(self) -> bool:
+        """One scheduler iteration: admit into free slots, then one decode
+        burst.  Returns False when there was nothing to do."""
+        did = False
+        while self._ready and self.pool.n_free:
+            self._admit(self._ready.popleft())
+            did = True
+        if self.pool.n_active:
+            self._decode_burst()
+            did = True
+        return did
+
+    # ------------------------------------------------------------------
+    # Drive loop
+    # ------------------------------------------------------------------
+
+    def run(self) -> list[Request]:
+        """Run until every submitted request is finished; replays
+        arrival-gated requests against a wall clock starting now.
+        Returns the requests finished during THIS call, in completion
+        order (the engine keeps no reference afterwards)."""
+        self.stats.start()
+        self._finished = []
+        t0 = self._now()
+        while self._pending or self._ready or self.pool.n_active:
+            now = self._now() - t0
+            while self._pending and self._pending[0].arrival <= now:
+                req = self._pending.pop(0)
+                # TTFT/latency are measured from the (simulated) arrival,
+                # not from when the trace was queued before run()
+                req.t_submit = self._now()
+                self._ready.append(req)
+            if not self.step() and self._pending:
+                wait = self._pending[0].arrival - (self._now() - t0)
+                if wait > 0:
+                    time.sleep(min(wait, 0.05))
+        self.stats.stop()
+        if self.logger:
+            self.logger.log(event="summary", **self.stats.summary())
+        return self._finished

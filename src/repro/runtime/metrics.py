@@ -1,9 +1,13 @@
-"""Metrics logging (jsonl) + straggler detection.
+"""Metrics logging (jsonl) + straggler detection + serving counters.
 
 StragglerDetector: per-step wall time EMA/EMVar; a step whose time exceeds
 mean + z*std is flagged.  On a real multi-host deployment the same detector
 runs per host on heartbeat files and feeds the microbatch re-balancer; here
-it logs and counts (tests inject artificial delays)."""
+it logs and counts (tests inject artificial delays).
+
+ServeStats: throughput/latency counters for the continuous-batching
+engine — prefill/decode token counts and wall time, slot occupancy, and
+per-request TTFT/latency distributions."""
 from __future__ import annotations
 
 import json
@@ -33,6 +37,88 @@ class MetricsLogger:
     def close(self):
         if self._fh:
             self._fh.close()
+
+
+def _percentile(sorted_xs: list, q: float) -> float:
+    if not sorted_xs:
+        return 0.0
+    i = min(len(sorted_xs) - 1, max(0, int(round(q * (len(sorted_xs) - 1)))))
+    return sorted_xs[i]
+
+
+class ServeStats:
+    """Counters for the serving engine (host-side, cheap per step).
+
+    "useful" tokens are tokens delivered to a live request: one per
+    prefill (the first sampled token) and one per active slot per decode
+    step — masked/idle slots never count, so tokens_per_s reflects work a
+    client actually received."""
+
+    def __init__(self):
+        self.prefill_calls = 0
+        self.prefill_tokens = 0        # prompt tokens consumed
+        self.prefill_time = 0.0
+        self.decode_steps = 0
+        self.decode_time = 0.0
+        self.useful_tokens = 0
+        self.slot_steps = 0            # n_slots summed over decode steps
+        self.active_steps = 0          # active slots summed (occupancy)
+        self.n_requests = 0
+        self._ttft: list[float] = []
+        self._latency: list[float] = []
+        self._t0: Optional[float] = None
+        self.wall = 0.0
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self):
+        if self._t0 is not None:
+            self.wall += time.perf_counter() - self._t0
+            self._t0 = None
+
+    def record_prefill(self, n_tokens: int, dt: float):
+        self.prefill_calls += 1
+        self.prefill_tokens += n_tokens
+        self.prefill_time += dt
+        self.useful_tokens += 1        # the token sampled off the prefill
+
+    def record_decode(self, n_active: int, n_slots: int, dt: float,
+                      n_steps: int = 1, n_tokens: Optional[int] = None):
+        """One decode burst of ``n_steps`` pooled steps.  ``n_tokens`` is
+        the count actually delivered (EOS overshoot trimmed); defaults to
+        n_active * n_steps."""
+        self.decode_steps += n_steps
+        self.decode_time += dt
+        self.useful_tokens += (n_tokens if n_tokens is not None
+                               else n_active * n_steps)
+        self.active_steps += n_active * n_steps
+        self.slot_steps += n_slots * n_steps
+
+    def record_request(self, ttft: float, latency: float):
+        self.n_requests += 1
+        self._ttft.append(ttft)
+        self._latency.append(latency)
+
+    def summary(self) -> dict:
+        wall = self.wall if self.wall > 0 else (
+            self.prefill_time + self.decode_time)
+        ttft = sorted(self._ttft)
+        lat = sorted(self._latency)
+        return {
+            "requests": self.n_requests,
+            "useful_tokens": self.useful_tokens,
+            "prefill_tokens": self.prefill_tokens,
+            "decode_steps": self.decode_steps,
+            "wall_s": wall,
+            "tokens_per_s": self.useful_tokens / wall if wall > 0 else 0.0,
+            "occupancy": (self.active_steps / self.slot_steps
+                          if self.slot_steps else 0.0),
+            "ttft_mean_s": sum(ttft) / len(ttft) if ttft else 0.0,
+            "ttft_p95_s": _percentile(ttft, 0.95),
+            "latency_mean_s": sum(lat) / len(lat) if lat else 0.0,
+            "latency_p95_s": _percentile(lat, 0.95),
+        }
 
 
 class StragglerDetector:

@@ -1,22 +1,25 @@
-"""Batched serving runtime: prefill + decode with fixed batch slots
-(continuous-batching lite).
+"""Batched serving: thin compatibility wrapper over the continuous-
+batching Engine (runtime/engine.py).
 
-``Server`` owns jit'd prefill/decode step functions and a slot table; new
-requests are admitted into free slots (their cache region re-prefilled),
-finished requests retire their slot.  Greedy or temperature sampling.
-On the production mesh the same functions lower with the decode sharding
-rules (see launch/dryrun.py serve_step cells)."""
+``Server.generate`` keeps the original static-batch API — same-length
+prompts, b <= batch_slots, (b, max_new) output — but internally submits
+each row as an independent request to the engine, so the same jit'd
+prefill/decode functions and slot pool serve both entry points.  New code
+should use ``Engine`` directly (variable-length prompts, per-request
+max_new/EOS, arrival traces).
+
+Behavioral note vs the old static loop: with an ``eos_id`` the engine
+stops each row at its own EOS and frees the slot; rows that finish early
+are right-padded with ``eos_id`` so the rectangular output shape is
+preserved (the old loop kept generating until all rows finished)."""
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.models import registry
-from repro.parallel import sharding
+from repro.runtime.engine import Engine, EngineConfig
 
 
 @dataclasses.dataclass
@@ -32,39 +35,24 @@ class Server:
         self.cfg = cfg
         self.scfg = scfg
         self.params = params
-        self._prefill = jax.jit(
-            lambda p, c, b: registry.prefill(cfg, p, c, b))
-        self._decode = jax.jit(
-            lambda p, c, b: registry.decode_step(cfg, p, c, b))
-        self._key = jax.random.key(scfg.seed)
-
-    def _sample(self, logits):
-        """logits (b, 1, V) -> tokens (b, 1)."""
-        if self.scfg.temperature <= 0:
-            return jnp.argmax(logits[:, -1:, :], axis=-1)
-        self._key, k = jax.random.split(self._key)
-        return jax.random.categorical(
-            k, logits[:, -1:, :] / self.scfg.temperature, axis=-1)
+        self.engine = Engine(cfg, params, EngineConfig(
+            n_slots=scfg.batch_slots, max_seq=scfg.max_seq,
+            temperature=scfg.temperature, seed=scfg.seed))
 
     def generate(self, prompts: np.ndarray, max_new: int = 32,
                  eos_id: Optional[int] = None) -> np.ndarray:
-        """prompts (b, Lp) int32 -> (b, max_new) generated ids.  b must be
-        <= batch_slots; all prompts same length (left-dense)."""
-        b, lp = prompts.shape
-        cache = sharding.tree_values(
-            registry.init_cache(self.cfg, b, self.scfg.max_seq))
-        logits, cache = self._prefill(self.params, cache,
-                                      {"tokens": jnp.asarray(prompts)})
-        tok = self._sample(logits[:, lp - 1:lp, :].astype(jnp.float32))
-        out = [tok]
-        done = np.zeros((b,), bool)
-        for _ in range(max_new - 1):
-            logits, cache = self._decode(self.params, cache,
-                                         {"tokens": tok})
-            tok = self._sample(logits.astype(jnp.float32)[:, -1:, :])
-            out.append(tok)
-            if eos_id is not None:
-                done |= np.asarray(tok[:, 0] == eos_id)
-                if done.all():
-                    break
-        return np.concatenate([np.asarray(t) for t in out], axis=1)
+        """prompts (b, Lp) int32 -> (b, <=max_new) generated ids.  b must
+        be <= batch_slots; all prompts same length (left-dense)."""
+        b = prompts.shape[0]
+        if b > self.scfg.batch_slots:
+            raise ValueError(f"batch {b} > batch_slots "
+                             f"{self.scfg.batch_slots}")
+        reqs = [self.engine.submit(row, max_new=max_new, eos_id=eos_id)
+                for row in np.asarray(prompts)]
+        self.engine.run()
+        width = max(len(r.tokens) for r in reqs)
+        pad = eos_id if eos_id is not None else 0
+        out = np.full((b, width), pad, np.int32)
+        for i, r in enumerate(reqs):
+            out[i, :len(r.tokens)] = r.tokens
+        return out

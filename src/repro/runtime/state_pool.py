@@ -1,0 +1,134 @@
+"""Slot-based decode-state pool — MARCA's inter-operation buffer insight
+applied at serving scale.
+
+A Mamba sequence's entire decode state is a fixed O(d_inner * d_state)
+block per layer (plus the (k-1)-tap conv tail), so unlike a ragged KV
+cache it can live in a fixed-shape pool with one slot per in-flight
+sequence: admission is a scatter of freshly prefilled state into a free
+slot, eviction is a scatter of the init state, and the running decode
+batch never changes shape.  The same layout generalizes to the other
+registry families (KV caches are per-slot [max_seq] strips; xLSTM
+matrix-memory states are per-slot blocks), which is why the pool is
+family-agnostic: all slot knowledge lives in registry.cache_slot_axes.
+
+All device ops are jit'd once with fixed shapes (slot ids are traced
+(1,) arrays), so admit/evict/read never recompile.  The free list and
+slot accounting are host-side.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import registry
+from repro.parallel import sharding
+
+
+# Shared per-config jit caches (cfg is frozen/hashable): every pool for a
+# given model reuses the same compiled gather/scatter/mask executables.
+@functools.lru_cache(maxsize=None)
+def _jit_gather(cfg):
+    return jax.jit(lambda c, i: registry.gather_slots(cfg, c, i))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_scatter(cfg):
+    return jax.jit(lambda c, s, i: registry.scatter_slots(cfg, c, s, i))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_mask(cfg):
+    return jax.jit(lambda o, n, m: registry.mask_slots(cfg, o, n, m))
+
+
+class SlotStatePool:
+    """Fixed-capacity pool of per-slot decode state for one model config.
+
+    ``cache`` is a plain-value pytree (Param wrappers stripped) whose every
+    leaf has ``n_slots`` entries along its slot axis.  Mutation is
+    functional: admit/evict/commit rebind ``self.cache``.
+    """
+
+    def __init__(self, cfg, n_slots: int, max_seq: int, dtype=None):
+        if n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.cache = sharding.tree_values(
+            registry.init_cache(cfg, n_slots, max_seq, dtype))
+        # the init state of a single slot — eviction scatters this (NOT
+        # zeros: e.g. xLSTM stabilizer state m inits to -1e30)
+        self._fresh = sharding.tree_values(
+            registry.init_cache(cfg, 1, max_seq, dtype))
+        self._gather_fn = _jit_gather(cfg)
+        self._scatter_fn = _jit_scatter(cfg)
+        self._mask_fn = _jit_mask(cfg)
+        self._free: list[int] = list(range(n_slots))
+        self._active: list[bool] = [False] * n_slots
+
+    @property
+    def fresh(self):
+        """The (batch-1) init-state cache — reusable prefill scratch."""
+        return self._fresh
+
+    # -- host-side slot accounting ------------------------------------------
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_active(self) -> int:
+        return self.n_slots - len(self._free)
+
+    def active_slots(self) -> list[int]:
+        return [i for i, a in enumerate(self._active) if a]
+
+    def active_mask(self) -> np.ndarray:
+        return np.asarray(self._active, bool)
+
+    def alloc(self) -> Optional[int]:
+        """Reserve a free slot id (lowest first), or None when full."""
+        if not self._free:
+            return None
+        slot = min(self._free)
+        self._free.remove(slot)
+        self._active[slot] = True
+        return slot
+
+    # -- device-state operations --------------------------------------------
+
+    def admit(self, slot: int, sub_cache) -> None:
+        """Scatter a batch-1 prefilled cache into ``slot`` (from alloc)."""
+        assert self._active[slot], f"slot {slot} not allocated"
+        self.cache = self._scatter_fn(self.cache, sub_cache,
+                                      jnp.asarray([slot]))
+
+    def evict(self, slot: int) -> None:
+        """Reset ``slot`` to the init state and return it to the free list.
+
+        The scatter-of-fresh-state is what guarantees no stale-state leak:
+        a later admit overwrites the slot again, so even a torn admit can
+        never observe a previous request's recurrent state.
+        """
+        assert self._active[slot], f"slot {slot} not active"
+        self.cache = self._scatter_fn(self.cache, self._fresh,
+                                      jnp.asarray([slot]))
+        self._active[slot] = False
+        self._free.append(slot)
+
+    def read(self, slots: Sequence[int]):
+        """Gather a sub-cache for ``slots`` (testing/debug/migration)."""
+        return self._gather_fn(self.cache, jnp.asarray(list(slots)))
+
+    def commit(self, new_cache, active: Optional[np.ndarray] = None) -> None:
+        """Accept a post-decode cache, keeping inactive slots frozen."""
+        if active is None:
+            active = self.active_mask()
+        self.cache = self._mask_fn(self.cache, new_cache,
+                                   jnp.asarray(active))

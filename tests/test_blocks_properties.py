@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # degrade to the deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro import configs
 from repro.models import blocks

@@ -1,0 +1,260 @@
+"""Continuous-batching engine tests: slot pool state hygiene, decode
+parity over many steps (the invariant slot admission relies on), scan
+resumability across chunk boundaries, and engine-vs-sequential
+equivalence under slot churn."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.kernels import ops
+from repro.models import registry
+from repro.parallel import sharding
+from repro.runtime.engine import Engine, EngineConfig
+from repro.runtime.state_pool import SlotStatePool
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _setup(name):
+    cfg = configs.smoke_variant(configs.get_config(name))
+    cfg = dataclasses.replace(cfg, vocab=64, dtype="float32",
+                              capacity_factor=float(max(cfg.n_experts, 1)))
+    params = sharding.tree_values(
+        registry.init_params(cfg, jax.random.key(0)))
+    return cfg, params
+
+
+def _tree_equal(a, b):
+    flat_a, flat_b = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(flat_a) == len(flat_b)
+    return all(bool(jnp.array_equal(x, y.astype(x.dtype)))
+               for x, y in zip(flat_a, flat_b))
+
+
+DECODE_ARCHS = ["mamba-130m", "granite-20b", "qwen2-7b", "jamba-v0.1-52b",
+                "xlstm-350m", "qwen2-moe-a2.7b"]
+POOL_ARCHS = ["mamba-130m", "granite-20b", "jamba-v0.1-52b", "xlstm-350m"]
+
+
+# ---------------------------------------------------------------------------
+# Slot state pool
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", POOL_ARCHS)
+def test_pool_admit_read_roundtrip_bitexact(name):
+    """Scatter of prefilled state into a slot, then gather, is the
+    identity — per-slot state survives pooling bit-exactly."""
+    cfg, params = _setup(name)
+    pool = SlotStatePool(cfg, n_slots=3, max_seq=32)
+    fresh = sharding.tree_values(registry.init_cache(cfg, 1, 32))
+    toks = jax.random.randint(jax.random.key(1), (1, 7), 0, cfg.vocab,
+                              dtype=jnp.int32)
+    _, sub = registry.prefill(cfg, params, fresh, {"tokens": toks})
+    slot = pool.alloc()
+    pool.admit(slot, sub)
+    assert _tree_equal(sub, pool.read([slot]))
+
+
+def test_pool_alloc_evict_accounting():
+    cfg, _ = _setup("mamba-130m")
+    pool = SlotStatePool(cfg, n_slots=2, max_seq=16)
+    a, b = pool.alloc(), pool.alloc()
+    assert {a, b} == {0, 1} and pool.alloc() is None
+    assert pool.n_active == 2 and pool.n_free == 0
+    pool.evict(a)
+    assert pool.n_free == 1 and pool.active_slots() == [b]
+    assert pool.alloc() == a           # lowest-first reuse
+
+
+@pytest.mark.parametrize("name", ["mamba-130m", "granite-20b"])
+def test_evicted_slot_never_leaks_into_new_request(name):
+    """Admit A, decode it a few steps, evict, admit B into the same slot:
+    the slot's state must equal a fresh prefill of B bit-exactly, and the
+    other slot must be untouched throughout."""
+    cfg, params = _setup(name)
+    pool = SlotStatePool(cfg, n_slots=2, max_seq=32)
+    fresh = lambda: sharding.tree_values(registry.init_cache(cfg, 1, 32))
+    key = jax.random.key(2)
+    pa, pb, pc = (jax.random.randint(jax.random.fold_in(key, i), (1, 5 + i),
+                                     0, cfg.vocab, dtype=jnp.int32)
+                  for i in range(3))
+    # bystander request C in slot 1
+    sc_slot = 1
+    _, sub_c = registry.prefill(cfg, params, fresh(), {"tokens": pc})
+    s0 = pool.alloc()
+    s1 = pool.alloc()
+    assert (s0, s1) == (0, 1)
+    pool.admit(sc_slot, sub_c)
+    # A lives in slot 0, decodes 3 steps (slot 1 masked/frozen)
+    _, sub_a = registry.prefill(cfg, params, fresh(), {"tokens": pa})
+    pool.admit(0, sub_a)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    for _ in range(3):
+        _, new_cache = registry.decode_step(cfg, params, pool.cache,
+                                            {"tokens": tok})
+        pool.commit(new_cache, active=np.array([True, False]))
+    pool.evict(0)
+    # slot 0 is back to the init state — nothing of A remains
+    assert _tree_equal(pool.read([0]), fresh())
+    # B admitted into the recycled slot equals a standalone prefill of B
+    _, sub_b = registry.prefill(cfg, params, fresh(), {"tokens": pb})
+    slot = pool.alloc()
+    assert slot == 0
+    pool.admit(slot, sub_b)
+    assert _tree_equal(pool.read([0]), sub_b)
+    # bystander C was frozen through all of it
+    assert _tree_equal(pool.read([sc_slot]), sub_c)
+
+
+# ---------------------------------------------------------------------------
+# Decode parity: prefill + N decode steps == full forward (the invariant
+# slot admission relies on)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", DECODE_ARCHS)
+def test_prefill_plus_n_decode_steps_matches_forward(name):
+    cfg, params = _setup(name)
+    b, lp, n_steps = 2, 4, 6
+    L = lp + n_steps
+    toks = jax.random.randint(jax.random.key(3), (b, L), 0, cfg.vocab,
+                              dtype=jnp.int32)
+    full, _ = registry.forward(cfg, params, {"tokens": toks})
+    cache = sharding.tree_values(registry.init_cache(cfg, b, max_seq=16))
+    logits, cache = registry.prefill(cfg, params, cache,
+                                     {"tokens": toks[:, :lp]})
+    np.testing.assert_allclose(np.asarray(logits),
+                               np.asarray(full[:, :lp]),
+                               rtol=2e-2, atol=2e-2)
+    for t in range(n_steps):
+        logits, cache = registry.decode_step(
+            cfg, params, cache, {"tokens": toks[:, lp + t:lp + t + 1]})
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0]), np.asarray(full[:, lp + t]),
+            rtol=2e-2, atol=2e-2,
+            err_msg=f"decode step {t} diverged from forward")
+
+
+# ---------------------------------------------------------------------------
+# Scan resumability: split + carry h equals one-shot, across chunk
+# padding boundaries
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["seq", "assoc", "chunked", "chunked_seq"])
+@pytest.mark.parametrize("L1", [1, 7, 16, 17, 31, 39])
+def test_selective_scan_resumes_across_split(impl, L1):
+    """scan([0:L1]) carrying h into scan([L1:L]) == scan([0:L]) even when
+    L1 straddles the chunk (block_l) padding boundary (chunk=16)."""
+    rng = np.random.default_rng(11)
+    b, L, d, n = 2, 40, 8, 4
+    x = jnp.asarray(rng.normal(size=(b, L, d)).astype(np.float32))
+    dt = jax.nn.softplus(jnp.asarray(
+        rng.normal(size=(b, L, d)).astype(np.float32)))
+    A = -jnp.exp(jnp.asarray(
+        rng.normal(size=(d, n)).astype(np.float32)) * 0.5)
+    B = jnp.asarray(rng.normal(size=(b, L, n)).astype(np.float32))
+    C = jnp.asarray(rng.normal(size=(b, L, n)).astype(np.float32))
+    D = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+    z = jnp.asarray(rng.normal(size=(b, L, d)).astype(np.float32))
+
+    kw = dict(D=D, z=z, impl=impl, chunk=16)
+    y_full, h_full = ops.selective_scan(x, dt, A, B, C, **kw)
+    y1, h1 = ops.selective_scan(x[:, :L1], dt[:, :L1], A, B[:, :L1],
+                                C[:, :L1], D=D, z=z[:, :L1],
+                                impl=impl, chunk=16)
+    y2, h2 = ops.selective_scan(x[:, L1:], dt[:, L1:], A, B[:, L1:],
+                                C[:, L1:], D=D, z=z[:, L1:], h0=h1,
+                                impl=impl, chunk=16)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], axis=1)),
+                               np.asarray(y_full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Engine end-to-end: continuous batching must equal per-request greedy
+# decode under admission/eviction churn
+# ---------------------------------------------------------------------------
+
+def _reference_greedy(cfg, params, prompt, max_new, eos_id=None):
+    """Single-request greedy generation straight off registry functions."""
+    cache = sharding.tree_values(registry.init_cache(cfg, 1, max_seq=64))
+    logits, cache = registry.prefill(cfg, params, cache,
+                                     {"tokens": jnp.asarray(prompt[None])})
+    tok = int(jnp.argmax(logits[0, -1].astype(jnp.float32)))
+    out = [tok]
+    while len(out) < max_new and (eos_id is None or tok != eos_id):
+        logits, cache = registry.decode_step(
+            cfg, params, cache, {"tokens": jnp.asarray([[tok]], jnp.int32)})
+        tok = int(jnp.argmax(logits[0, -1].astype(jnp.float32)))
+        out.append(tok)
+    return out
+
+
+@pytest.mark.parametrize("name", ["mamba-130m", "granite-20b"])
+def test_engine_matches_sequential_reference(name):
+    """5 variable-length requests through 2 slots (forcing queueing,
+    eviction, and slot reuse) produce exactly the tokens each request
+    would get decoded alone."""
+    cfg, params = _setup(name)
+    rng = np.random.default_rng(5)
+    lens = [3, 5, 9, 4, 7]
+    max_news = [6, 3, 8, 5, 4]
+    prompts = [rng.integers(0, cfg.vocab, size=(l,)).astype(np.int32)
+               for l in lens]
+    eng = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=64))
+    reqs = [eng.submit(p, max_new=m) for p, m in zip(prompts, max_news)]
+    done = eng.run()
+    assert len(done) == len(reqs)
+    for p, m, r in zip(prompts, max_news, reqs):
+        assert r.finished and len(r.tokens) == m
+        assert r.tokens == _reference_greedy(cfg, params, p, m), \
+            f"req {r.req_id} diverged under continuous batching"
+
+
+def test_engine_eos_evicts_and_backfills():
+    """A request whose EOS fires early frees its slot; the queued request
+    is admitted and still decodes exactly."""
+    cfg, params = _setup("mamba-130m")
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, cfg.vocab, size=(l,)).astype(np.int32)
+               for l in (4, 6, 5)]
+    # learn req0's natural 3rd token, then make it the EOS
+    ref0 = _reference_greedy(cfg, params, prompts[0], 10)
+    eos = ref0[2]
+    eng = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=64))
+    r0 = eng.submit(prompts[0], max_new=10, eos_id=eos)
+    r1 = eng.submit(prompts[1], max_new=4)
+    r2 = eng.submit(prompts[2], max_new=3)
+    eng.run()
+    assert r0.tokens == ref0[:3] and r0.tokens[-1] == eos
+    assert r1.tokens == _reference_greedy(cfg, params, prompts[1], 4)
+    assert r2.tokens == _reference_greedy(cfg, params, prompts[2], 3)
+    assert eng.stats.n_requests == 3
+
+
+def test_engine_stats_counters():
+    cfg, params = _setup("mamba-130m")
+    rng = np.random.default_rng(13)
+    eng = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=64))
+    reqs = [eng.submit(rng.integers(0, cfg.vocab, size=(4,)).astype(np.int32),
+                       max_new=m) for m in (5, 3, 4)]
+    eng.run()
+    s = eng.stats
+    assert s.n_requests == 3
+    assert s.prefill_calls == 3 and s.prefill_tokens == 12
+    assert s.useful_tokens == sum(len(r.tokens) for r in reqs) == 12
+    smry = s.summary()
+    assert smry["tokens_per_s"] > 0
+    assert 0 < smry["occupancy"] <= 1
+    assert all(t >= 0 for t in (smry["ttft_mean_s"], smry["latency_p95_s"]))
+
+
+def test_engine_rejects_oversized_request():
+    cfg, params = _setup("mamba-130m")
+    eng = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=16))
+    with pytest.raises(ValueError):
+        eng.submit(np.arange(10, dtype=np.int32), max_new=10)
