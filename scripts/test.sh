@@ -1,9 +1,38 @@
 #!/usr/bin/env bash
 # Tier-1 test entry point.  Fails fast — and loudly — on collection
 # errors so "suite can't import" is never mistaken for "suite passes".
+#
+#   scripts/test.sh            full tier-1 suite
+#   scripts/test.sh --fast     skip the slow training-integration tier
+#                              (end-to-end Trainer runs; minutes on CPU)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# Known-red ledger.  Every entry is a test we KNOW fails and have chosen
+# to ship anyway; since the grad-accum fix (PR 2) the list is empty, and
+# this gate keeps it that way: adding an entry fails the suite loudly
+# instead of quietly normalizing red.
+KNOWN_RED=()
+if [ "${#KNOWN_RED[@]}" -ne 0 ]; then
+    echo "FATAL: known-red list must stay empty; fix or delete the tests" >&2
+    printf '  known-red: %s\n' "${KNOWN_RED[@]}" >&2
+    exit 3
+fi
+
+FAST=0
+ARGS=()
+for a in "$@"; do
+    case "$a" in
+        --fast) FAST=1 ;;
+        *) ARGS+=("$a") ;;
+    esac
+done
+
+PYTEST_ARGS=(-x -q)
+if [ "$FAST" -eq 1 ]; then
+    PYTEST_ARGS+=(--ignore=tests/test_train_integration.py)
+fi
 
 if ! python -m pytest -q --collect-only >collect.err 2>&1; then
     echo "FATAL: test collection failed" >&2
@@ -13,4 +42,4 @@ if ! python -m pytest -q --collect-only >collect.err 2>&1; then
 fi
 rm -f collect.err
 
-exec python -m pytest -x -q "$@"
+exec python -m pytest "${PYTEST_ARGS[@]}" ${ARGS[@]+"${ARGS[@]}"}

@@ -71,6 +71,11 @@ class ModelConfig:
     #: paper-baseline XLA implementation, "pallas" the TPU kernel.
     scan_impl: str = "chunked_seq"   # seq | assoc | chunked | chunked_seq | pallas
     scan_chunk: int = 64
+    #: per-token decode step: "fused" = single Pallas launch for the whole
+    #: state-update/contraction/gate chain (serving hot path), "xla" = the
+    #: ref.py oracle, "auto" = fused where it compiles natively (TPU for
+    #: Pallas-backed families; everywhere for pure-XLA fused steps)
+    step_impl: str = "auto"          # auto | fused | xla
     attn_impl: str = "chunked"       # chunked | ref | pallas
     attn_chunk: int = 512
     exp_impl: str = "exact"          # exact | ours | fast   (MARCA §5)

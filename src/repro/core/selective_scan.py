@@ -141,3 +141,50 @@ def get_scan(name: str):
         from repro.kernels import selective_scan as ssk
         return ssk.selective_scan
     raise KeyError(f"unknown scan impl {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Single-token decode step (the serving engine's per-layer hot path)
+# ---------------------------------------------------------------------------
+
+def resolve_step_impl(name: str, needs_pallas: bool = True) -> str:
+    """Resolve cfg.step_impl to a concrete impl.
+
+    "auto" picks the fused kernel where it compiles natively (TPU) and
+    the XLA reference elsewhere — unless the family's fused step is pure
+    XLA (``needs_pallas=False``, e.g. xLSTM), in which case fused wins
+    on every backend.  Callers can force either with "fused" / "xla"
+    (parity tests and TPU-less benchmarking of the fused path do)."""
+    if name == "auto":
+        if not needs_pallas:
+            return "fused"
+        return "fused" if jax.default_backend() == "tpu" else "xla"
+    if name in ("fused", "pallas"):
+        return "fused"
+    if name == "xla":
+        return "xla"
+    raise KeyError(f"unknown step impl {name!r}")
+
+
+def decode_step(h, x_t, dt_t, A, B_t, C_t, D=None, z_t=None,
+                impl: str = "xla",
+                exp_impl: str = "exact", silu_impl: str = "exact"):
+    """One fused-or-reference SSM decode step over the (pooled) batch.
+
+    h (b, d, n) f32; x_t/dt_t (b, d); A (d, n); B_t/C_t (b, n).
+    Returns (y (b, d), h_new (b, d, n) f32).  ``impl="fused"`` runs the
+    single-launch Pallas kernel (interpret-mode on CPU); "xla" the
+    pure-jnp reference with identical semantics."""
+    if impl in ("fused", "pallas"):
+        from repro.kernels import decode_step as dsk   # lazy: import cycle
+        return dsk.selective_state_step(
+            h, x_t, dt_t, A, B_t, C_t, D=D, z_t=z_t,
+            exp_impl=exp_impl, silu_impl=silu_impl)
+    if impl != "xla":
+        # "auto" must go through resolve_step_impl first; a typo or raw
+        # cfg string silently falling back to the unfused path would eat
+        # the fused kernel's win with no error anywhere
+        raise KeyError(f"unknown step impl {impl!r}")
+    return kref.selective_state_step(
+        h, x_t, dt_t, A, B_t, C_t, D=D, z_t=z_t,
+        exp_impl=exp_impl, silu_impl=silu_impl)

@@ -1,0 +1,160 @@
+"""Pallas TPU kernel: fused single-token SSM decode step.
+
+This is the serving-engine counterpart of kernels/selective_scan.py:
+where the scan kernel fuses the recurrence over the *time* axis for
+prefill/training, this kernel fuses the entire per-token chain the
+engine's decode burst executes per layer:
+
+    h' = exp(dt * A) (*) h + (dt * x) (*) B        state update (EW FMA)
+    y  = sum_n C_n * h'_n + D * x                  output contraction
+    out = y * silu(z)                              gate
+
+MARCA's point (Fig. 1 / §4) is that this chain is element-wise with a
+single tiny N=d_state reduction, so dispatching it as a dozen separate
+XLA ops per layer per token pays kernel-launch + HBM round-trip for
+every arrow in the chain.  Here the whole chain — including the fast
+biased exp and the piecewise SiLU when approx mode is on — is one
+kernel over the slot-pooled state: state in, token out, one launch.
+
+Layout mirrors the scan kernel: channels D on lanes (128-aligned),
+state N on sublanes; h is carried as (slots, N, D).  Grid is
+(slots, D-blocks), both parallel — a decode step has no sequential
+axis, which is exactly why it fuses so cleanly.
+
+``interpret=True`` (the default) is the CPU fallback: the same kernel
+body runs under the Pallas interpreter, so every CPU test exercises
+the fused path; on real TPU callers pass interpret=False.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import approx
+from repro.kernels import pallas_compat
+
+
+def _step_kernel(h_ref, x_ref, dt_ref, at_ref, b_ref, c_ref, d_ref, z_ref,
+                 y_ref, hout_ref, *, exp_impl: str, silu_impl: str,
+                 has_d: bool, has_z: bool):
+    exp = approx.get_exp(exp_impl)
+    silu = approx.get_silu(silu_impl)
+    h = h_ref[0].astype(jnp.float32)               # (N, BD)
+    x = x_ref[0, :].astype(jnp.float32)            # (BD,)
+    dt = dt_ref[0, :].astype(jnp.float32)          # (BD,)
+    at = at_ref[...].astype(jnp.float32)           # (N, BD)
+    b_t = b_ref[0, :].astype(jnp.float32)          # (N,)
+    c_t = c_ref[0, :].astype(jnp.float32)          # (N,)
+    da = exp(dt[None, :] * at)                     # (N, BD)  EW + "shift"
+    dbx = (dt * x)[None, :] * b_t[:, None]         # (N, BD)  EW outer prod
+    h_new = da * h + dbx                           # (N, BD)  EW FMA
+    y = jnp.sum(h_new * c_t[:, None], axis=0)      # (BD,) tiny N-reduction
+    if has_d:
+        y = y + d_ref[0, :].astype(jnp.float32) * x
+    if has_z:
+        y = y * silu(z_ref[0, :].astype(jnp.float32))
+    y_ref[0, :] = y.astype(y_ref.dtype)
+    hout_ref[0] = h_new.astype(hout_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_d", "exp_impl", "silu_impl", "interpret"))
+def _step_padded(h, x_t, dt_t, at, b_t, c_t, d_skip, z_t,
+                 block_d: int, exp_impl: str, silu_impl: str,
+                 interpret: bool):
+    """All channel-dim inputs pre-padded: D % block_d == 0."""
+    bsz, n, d_in = h.shape
+    has_d = d_skip is not None
+    has_z = z_t is not None
+    grid = (bsz, d_in // block_d)
+
+    def _row(_):
+        return pl.BlockSpec((1, block_d), lambda bb, dd: (bb, dd))
+
+    in_specs = [
+        pl.BlockSpec((1, n, block_d), lambda bb, dd: (bb, 0, dd)),   # h
+        _row("x"), _row("dt"),
+        pl.BlockSpec((n, block_d), lambda bb, dd: (0, dd)),          # At
+        pl.BlockSpec((1, n), lambda bb, dd: (bb, 0)),                # B_t
+        pl.BlockSpec((1, n), lambda bb, dd: (bb, 0)),                # C_t
+    ]
+    args = [h, x_t, dt_t, at, b_t, c_t]
+    if has_d:
+        in_specs.append(pl.BlockSpec((1, block_d), lambda bb, dd: (0, dd)))
+        args.append(d_skip)
+    else:
+        in_specs.append(pl.BlockSpec((1, 1), lambda bb, dd: (0, 0)))
+        args.append(jnp.zeros((1, 1), jnp.float32))
+    if has_z:
+        in_specs.append(_row("z"))
+        args.append(z_t)
+    else:
+        in_specs.append(pl.BlockSpec((1, 1), lambda bb, dd: (0, 0)))
+        args.append(jnp.zeros((1, 1), jnp.float32))
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((bsz, d_in), x_t.dtype),
+        jax.ShapeDtypeStruct((bsz, n, d_in), jnp.float32),
+    )
+    out_specs = (
+        pl.BlockSpec((1, block_d), lambda bb, dd: (bb, dd)),
+        pl.BlockSpec((1, n, block_d), lambda bb, dd: (bb, 0, dd)),
+    )
+
+    kernel = functools.partial(
+        _step_kernel, exp_impl=exp_impl, silu_impl=silu_impl,
+        has_d=has_d, has_z=has_z)
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=out_shapes,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        compiler_params=pallas_compat.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+        name="marca_decode_step",
+    )(*args)
+
+
+def selective_state_step(h, x_t, dt_t, A, B_t, C_t, D=None, z_t=None,
+                         block_d: int = 512,
+                         exp_impl: str = "exact", silu_impl: str = "exact",
+                         interpret: bool | None = None):
+    """Fused decode step.  Same semantics as kernels.ref.selective_state_step.
+
+    h (b, d, n) f32 pooled state; x_t/dt_t (b, d); A (d, n); B_t/C_t (b, n);
+    D (d,)|None; z_t (b, d)|None.
+    Returns (y (b, d) in x_t.dtype, h_new (b, d, n) f32).
+
+    ``interpret=None`` resolves per backend: compiled on TPU, the Pallas
+    interpreter elsewhere — so the serving hot path is never accidentally
+    interpreted on the hardware the kernel targets.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bsz, d_in, n = h.shape
+    block_d = min(block_d, d_in)
+    pad_d = (-d_in) % block_d
+
+    def _pad_row(t):
+        if t is None:
+            return None
+        return jnp.pad(t, ((0, 0), (0, pad_d)))
+
+    hp = jnp.pad(h.astype(jnp.float32).swapaxes(1, 2),
+                 ((0, 0), (0, 0), (0, pad_d)))                  # (b, n, Dp)
+    at = jnp.pad(A.astype(jnp.float32), ((0, pad_d), (0, 0))).T  # (n, Dp)
+    dp = (None if D is None
+          else jnp.pad(D.astype(jnp.float32), (0, pad_d)).reshape(1, -1))
+
+    y, h_new = _step_padded(
+        hp, _pad_row(x_t), _pad_row(dt_t), at, B_t, C_t, dp, _pad_row(z_t),
+        block_d=block_d, exp_impl=exp_impl, silu_impl=silu_impl,
+        interpret=interpret)
+    return y[:, :d_in], h_new[:, :, :d_in].swapaxes(1, 2)

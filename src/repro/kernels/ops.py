@@ -74,6 +74,20 @@ def selective_scan(x, dt, A, B, C, D=None, z=None, h0=None,
                               exp_impl=exp_impl, silu_impl=silu_impl)
 
 
+def selective_state_step(h, x_t, dt_t, A, B_t, C_t, D=None, z_t=None,
+                         impl: str = "xla",
+                         exp_impl: str = "exact", silu_impl: str = "exact"):
+    """Single-token decode step; impl in {xla, fused/pallas}.
+
+    The fused impl is one Pallas launch for the whole state-update /
+    contraction / gate chain (interpret-mode on CPU); xla is the ref.py
+    oracle with identical semantics."""
+    from repro.core import selective_scan as css
+    return css.decode_step(h, x_t, dt_t, A, B_t, C_t, D=D, z_t=z_t,
+                           impl=impl, exp_impl=exp_impl,
+                           silu_impl=silu_impl)
+
+
 def causal_conv1d(x, w, b=None, x_prev=None, impl: str = "xla"):
     if impl == "pallas":
         return _conv1d_k.causal_conv1d(x, w, b=b, x_prev=x_prev)

@@ -95,7 +95,13 @@ def mamba_block_step(cfg, p, x_t, state):
     The conv-state update (shift window, depthwise filter at the last tap)
     is the L=1 case of the streaming causal conv, so it shares the
     ops.causal_conv1d dispatch with prefill — decode uses the same
-    cfg.conv_impl kernel."""
+    cfg.conv_impl kernel.
+
+    The SSM step itself routes through ops.selective_state_step: with
+    cfg.step_impl resolving to "fused" the state update, output
+    contraction, D-skip, and SiLU gate are one Pallas launch over the
+    pooled batch instead of the per-op XLA chain."""
+    from repro.core.selective_scan import resolve_step_impl
     silu = approx.get_silu(cfg.silu_impl)
     x_in, z = _project(cfg, p, x_t)             # (b,1,di)
     x_c, new_conv = ops.causal_conv1d(
@@ -104,10 +110,11 @@ def mamba_block_step(cfg, p, x_t, state):
     x_a = silu(x_c)
     dt, B, C = _ssm_inputs(cfg, p, x_a)
     A = -jnp.exp(p["A_log"])
-    y, h = ops.selective_scan(
-        x_a, dt, A, B, C, D=p["D"], z=z, h0=state["h"],
-        impl="seq", exp_impl=cfg.exp_impl, silu_impl=cfg.silu_impl)
-    out = blocks.dense(p["out_proj"], y, x_t.dtype)
+    y, h = ops.selective_state_step(
+        state["h"], x_a[:, 0], dt[:, 0], A, B[:, 0], C[:, 0],
+        D=p["D"], z_t=z[:, 0], impl=resolve_step_impl(cfg.step_impl),
+        exp_impl=cfg.exp_impl, silu_impl=cfg.silu_impl)
+    out = blocks.dense(p["out_proj"], y[:, None, :], x_t.dtype)
     return out, {"h": h, "conv": new_conv}
 
 

@@ -60,6 +60,24 @@ def mlstm_block_init(cfg, key):
     }
 
 
+def _mlstm_cell(C, n, m, q_t, k_t, v_t, i_t, f_t, dh):
+    """One stabilized mLSTM recurrence step — the single source of truth
+    shared by the chunked scan body and the fused decode step, so the
+    two paths cannot drift.  All inputs f32; (b,nh,...) layouts."""
+    logf = jax.nn.log_sigmoid(f_t)                   # (b,nh)
+    m_new = jnp.maximum(logf + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(logf + m - m_new)
+    kv = k_t[..., :, None] * v_t[..., None, :]       # (b,nh,dh,dh)
+    C = f_p[..., None, None] * C + i_p[..., None, None] * kv
+    n = f_p[..., None] * n + i_p[..., None] * k_t
+    qn = q_t * (dh ** -0.5)
+    num = jnp.einsum("bhde,bhd->bhe", C, qn)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", n, qn))
+    h_t = num / jnp.maximum(den, 1.0)[..., None]
+    return (C, n, m_new), h_t
+
+
 def _mlstm_scan(q, k, v, ig, fg, state, chunk, remat=True):
     """Stabilized mLSTM recurrence.
     q/k/v (b, L, nh, dh); ig/fg (b, L, nh) pre-activation gates.
@@ -88,18 +106,7 @@ def _mlstm_scan(q, k, v, ig, fg, state, chunk, remat=True):
     def step(carry, inp):
         C, n, m = carry
         q_t, k_t, v_t, i_t, f_t = inp                    # (b,nh,dh) ...
-        logf = jax.nn.log_sigmoid(f_t)                   # (b,nh)
-        m_new = jnp.maximum(logf + m, i_t)
-        i_p = jnp.exp(i_t - m_new)
-        f_p = jnp.exp(logf + m - m_new)
-        kv = k_t[..., :, None] * v_t[..., None, :]       # (b,nh,dh,dh)
-        C = f_p[..., None, None] * C + i_p[..., None, None] * kv
-        n = f_p[..., None] * n + i_p[..., None] * k_t
-        qn = q_t * (dh ** -0.5)
-        num = jnp.einsum("bhde,bhd->bhe", C, qn)
-        den = jnp.abs(jnp.einsum("bhd,bhd->bh", n, qn))
-        h_t = num / jnp.maximum(den, 1.0)[..., None]
-        return (C, n, m_new), h_t
+        return _mlstm_cell(C, n, m, q_t, k_t, v_t, i_t, f_t, dh)
 
     def chunk_body(carry, inp):
         qc, kc, vc, ic, fc = inp                         # (b,chunk,nh,..)
@@ -120,7 +127,10 @@ def _mlstm_scan(q, k, v, ig, fg, state, chunk, remat=True):
     return h, new_state
 
 
-def mlstm_block_apply(cfg, p, x, state=None):
+def _mlstm_inputs(cfg, p, x, conv_state):
+    """Block front-end shared by apply (L=seq) and the decode step (L=1):
+    norm -> up-proj -> short conv -> SiLU -> q/k/v projections + gate
+    pre-activations.  One source of truth so the two paths cannot drift."""
     d, nh = cfg.d_model, cfg.n_heads
     di = 2 * d
     dh = di // nh
@@ -130,17 +140,26 @@ def mlstm_block_apply(cfg, p, x, state=None):
     ug = blocks.dense(p["up"], xn, x.dtype)
     u, g = jnp.split(ug, 2, axis=-1)                     # (b,L,di) each
     u = constrain(u, "act_batch", "act_seq", "act_ffn")
-    conv_state = None if state is None else state["conv"]
     from repro.kernels import ops
     c, new_conv = ops.causal_conv1d(u, p["conv_w"], None,
                                     x_prev=conv_state, impl=cfg.conv_impl)
-    c = silu(c)
-    ch = c.reshape(b, L, nh, dh)
+    ch = silu(c).reshape(b, L, nh, dh)
     q = jnp.einsum("blhd,hde->blhe", ch, p["wq"].astype(x.dtype))
     k = jnp.einsum("blhd,hde->blhe", ch, p["wk"].astype(x.dtype))
     v = u.reshape(b, L, nh, dh)
-    ig = jnp.einsum("blhd,hd->blh", ch.astype(jnp.float32), p["wi"]) + p["bi"]
-    fg = jnp.einsum("blhd,hd->blh", ch.astype(jnp.float32), p["wf"]) + p["bf"]
+    chf = ch.astype(jnp.float32)
+    ig = jnp.einsum("blhd,hd->blh", chf, p["wi"]) + p["bi"]
+    fg = jnp.einsum("blhd,hd->blh", chf, p["wf"]) + p["bf"]
+    return q, k, v, ig, fg, g, new_conv
+
+
+def mlstm_block_apply(cfg, p, x, state=None):
+    d, nh = cfg.d_model, cfg.n_heads
+    di = 2 * d
+    b, L, _ = x.shape
+    silu = approx.get_silu(cfg.silu_impl)
+    conv_state = None if state is None else state["conv"]
+    q, k, v, ig, fg, g, new_conv = _mlstm_inputs(cfg, p, x, conv_state)
     if state is None:
         state = {k2: v2 for k2, v2 in _mlstm_state(cfg, b).items()}
     h, new_rec = _mlstm_scan(q, k, v, ig, fg,
@@ -151,6 +170,28 @@ def mlstm_block_apply(cfg, p, x, state=None):
     out = blocks.dense(p["down"], hf * silu(g), x.dtype)
     new_rec["conv"] = new_conv
     return out, new_rec
+
+
+def mlstm_block_step(cfg, p, x_t, state):
+    """Single-token decode: shared front-end + one _mlstm_cell step, no
+    chunked-scan machinery (padding, reshapes, remat) — the per-token
+    path the serving engine's decode burst dispatches.  Matches
+    mlstm_block_apply at L=1."""
+    d, nh = cfg.d_model, cfg.n_heads
+    di = 2 * d
+    dh = di // nh
+    b = x_t.shape[0]
+    silu = approx.get_silu(cfg.silu_impl)
+    q, k, v, ig, fg, g, new_conv = _mlstm_inputs(cfg, p, x_t,
+                                                 state["conv"])
+    qf, kf, vf = (t[:, 0].astype(jnp.float32) for t in (q, k, v))
+    (C_new, n_new, m_new), h_t = _mlstm_cell(
+        state["C"], state["n"], state["m"], qf, kf, vf,
+        ig[:, 0], fg[:, 0], dh)
+
+    hf = blocks.group_norm(h_t.reshape(b, 1, di), p["gn_scale"], nh)
+    out = blocks.dense(p["down"], hf * silu(g), x_t.dtype)
+    return out, {"C": C_new, "n": n_new, "m": m_new, "conv": new_conv}
 
 
 def _mlstm_state(cfg, batch):
@@ -201,6 +242,24 @@ def slstm_block_init(cfg, key):
     }
 
 
+def _slstm_cell(c, n, m, g):
+    """One stabilized sLSTM gate step from combined pre-activations
+    g (b,4,nh,dh) — shared by the chunked scan body and the fused decode
+    step.  Returns (c_new, n_new, h_new, m_new)."""
+    z_t = jnp.tanh(g[:, 0])
+    i_t = g[:, 1]
+    f_t = g[:, 2]
+    o_t = jax.nn.sigmoid(g[:, 3])
+    logf = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(logf + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(logf + m - m_new)
+    c_new = f_p * c + i_p * z_t
+    n_new = f_p * n + i_p
+    h_new = o_t * c_new / jnp.maximum(n_new, 1.0)
+    return c_new, n_new, h_new, m_new
+
+
 def _slstm_scan(gates_x, r, bias, state, nh, dh, chunk, remat=True):
     """gates_x (b, L, 4d) input contributions; recurrence adds R h_{t-1}.
     state: c,n,h (b,nh,dh), m (b,nh,dh)."""
@@ -218,17 +277,7 @@ def _slstm_scan(gates_x, r, bias, state, nh, dh, chunk, remat=True):
         g_t, ok = inp                                    # (b,4d), ()
         rec = jnp.einsum("gher,bhe->bghr", r, h)         # (b,4,nh,dh)
         g = g_t.reshape(b, 4, nh, dh) + rec + bias.reshape(4, nh, dh)
-        z_t = jnp.tanh(g[:, 0])
-        i_t = g[:, 1]
-        f_t = g[:, 2]
-        o_t = jax.nn.sigmoid(g[:, 3])
-        logf = jax.nn.log_sigmoid(f_t)
-        m_new = jnp.maximum(logf + m, i_t)
-        i_p = jnp.exp(i_t - m_new)
-        f_p = jnp.exp(logf + m - m_new)
-        c_new = f_p * c + i_p * z_t
-        n_new = f_p * n + i_p
-        h_new = o_t * c_new / jnp.maximum(n_new, 1.0)
+        c_new, n_new, h_new, m_new = _slstm_cell(c, n, m, g)
         # padded steps: keep state
         keep = ok.astype(jnp.float32)
         c_new = keep * c_new + (1 - keep) * c
@@ -268,6 +317,26 @@ def slstm_block_apply(cfg, p, x, state=None):
     hf = blocks.group_norm(h, p["gn_scale"], nh)
     out = blocks.dense(p["out"], hf, x.dtype)
     return out, new_state
+
+
+def slstm_block_step(cfg, p, x_t, state):
+    """Single-token decode: one gate-recurrence step, no chunked-scan
+    machinery.  Matches slstm_block_apply at L=1."""
+    d, nh = cfg.d_model, cfg.n_heads
+    dh = d // nh
+    b = x_t.shape[0]
+    xn = blocks.apply_norm(cfg, p["norm"], x_t)
+    gates_x = blocks.dense(p["wx"], xn, x_t.dtype)       # (b,1,4d)
+    g_t = gates_x[:, 0].astype(jnp.float32)
+
+    rec = jnp.einsum("gher,bhe->bghr", p["r"], state["h"])  # (b,4,nh,dh)
+    g = g_t.reshape(b, 4, nh, dh) + rec + p["b"].reshape(4, nh, dh)
+    c_new, n_new, h_new, m_new = _slstm_cell(
+        state["c"], state["n"], state["m"], g)
+
+    hf = blocks.group_norm(h_new.reshape(b, 1, d), p["gn_scale"], nh)
+    out = blocks.dense(p["out"], hf, x_t.dtype)
+    return out, {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
 
 
 def _slstm_state(cfg, batch):
@@ -348,15 +417,27 @@ def cache_slot_axes(cfg):
 
 
 def decode_step(cfg, p, cache, batch):
+    """Per-token path.  cfg.step_impl routes the recurrences: "fused"
+    (the "auto" default — xLSTM's fused step is pure XLA, so it wins on
+    every backend) takes the dedicated single-step functions; "xla"
+    keeps the L=1 chunked-apply path as the parity reference."""
+    from repro.core.selective_scan import resolve_step_impl
+    fused = resolve_step_impl(cfg.step_impl, needs_pallas=False) == "fused"
     dtype = jnp.dtype(cfg.dtype)
     h = blocks.embed_apply(cfg, p["embed"], batch["tokens"], dtype)
     new_layers = []
     for i, (lp, lc) in enumerate(zip(p["layers"], cache["layers"])):
         if "slstm" in lp:
-            y, ns = slstm_block_apply(cfg, lp["slstm"], h, state=lc["slstm"])
+            y, ns = (slstm_block_step(cfg, lp["slstm"], h, lc["slstm"])
+                     if fused else
+                     slstm_block_apply(cfg, lp["slstm"], h,
+                                       state=lc["slstm"]))
             new_layers.append({"slstm": ns})
         else:
-            y, ns = mlstm_block_apply(cfg, lp["mlstm"], h, state=lc["mlstm"])
+            y, ns = (mlstm_block_step(cfg, lp["mlstm"], h, lc["mlstm"])
+                     if fused else
+                     mlstm_block_apply(cfg, lp["mlstm"], h,
+                                       state=lc["mlstm"]))
             new_layers.append({"mlstm": ns})
         h = h + y
     h = blocks.apply_norm(cfg, p["norm_f"], h)

@@ -95,6 +95,11 @@ class EngineConfig:
     # admission checks.  Larger = fewer syncs (throughput), smaller =
     # faster admission + tighter EOS eviction (latency).
     sched_quantum: int = 8
+    # override for the model's per-token step routing (cfg.step_impl):
+    # "fused" = one kernel launch per layer per token for the whole SSM
+    # state-update/contraction/gate chain, "xla" = unfused reference ops,
+    # None = keep the model config's setting ("auto" resolves per backend).
+    step_impl: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -123,6 +128,10 @@ class Engine:
         if cfg.frontend in ("audio_stub", "vision_stub"):
             raise NotImplementedError(
                 "serving engine supports token frontends only")
+        if ecfg.step_impl is not None:
+            # cfg keys the shared jit caches, so fused and unfused engines
+            # compile (and benchmark) independently
+            cfg = dataclasses.replace(cfg, step_impl=ecfg.step_impl)
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg

@@ -11,6 +11,7 @@ from __future__ import annotations
 import dataclasses
 import signal
 import time
+import zipfile
 from typing import Any, Optional
 
 import jax
@@ -72,7 +73,13 @@ def make_train_step(cfg, tcfg: TrainConfig):
                                     *x.shape[1:]), batch)
             (acc,), ms = jax.lax.scan(micro, (zeros,), mbs)
             grads = jax.tree.map(lambda g: g / tcfg.grad_accum, acc)
-            metrics = jax.tree.map(lambda m: m[-1], ms)
+            # Each microbatch metric is a mean over its rows; with equal
+            # microbatch sizes the mean over microbatches IS the full-batch
+            # statistic, so grad_accum=k reports the same loss as the
+            # single-batch step (reporting ms[-1] — the last microbatch
+            # only — made the two paths diverge by O(microbatch noise)).
+            metrics = jax.tree.map(
+                lambda m: jnp.mean(m.astype(jnp.float32), axis=0), ms)
         else:
             (_, metrics), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(params, batch)
@@ -136,10 +143,28 @@ class Trainer:
         tcfg = self.tcfg
         params, opt_state, ef_err = self.init_state()
         start_step = 0
-        if resume and self.ckpt.latest_step() is not None:
-            (params, opt_state, ef_err), start_step = self.ckpt.restore(
-                (params, opt_state, ef_err))
-            print(f"[trainer] resumed from step {start_step}")
+        if resume:
+            # newest first; a crash or disk fault can leave the latest
+            # step dir torn (missing/truncated arrays.npz, meta.json
+            # without the needed leaves), so fall back through older
+            # intact checkpoints and only then to fresh init — never
+            # wedge every restart on one bad directory
+            for step in reversed(self.ckpt.all_steps()):
+                try:
+                    (params, opt_state, ef_err), start_step = \
+                        self.ckpt.restore((params, opt_state, ef_err),
+                                          step=step)
+                    print(f"[trainer] resumed from step {start_step}")
+                    break
+                except (OSError, EOFError, KeyError, ValueError,
+                        zipfile.BadZipFile) as e:
+                    print(f"[trainer] checkpoint step {step} in "
+                          f"{self.tcfg.ckpt_dir} is unreadable "
+                          f"({type(e).__name__}: {e}); trying older")
+            else:
+                if self.ckpt.all_steps():
+                    print("[trainer] no readable checkpoint; starting "
+                          "from fresh init")
 
         step_fn = make_train_step(self.cfg, tcfg)
         donate = (0, 1, 2)

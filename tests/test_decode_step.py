@@ -1,0 +1,223 @@
+"""Fused single-token decode step: kernel parity vs the ref.py oracle
+(pooled-slot shapes, fp32/bf16, approx impls), per-family fused-vs-xla
+decode routing parity, masked-slot hygiene under the fused step, and
+engine-level fused == unfused token-for-token."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import selective_scan as css
+from repro.kernels import decode_step as dsk
+from repro.kernels import ops, ref
+from repro.models import registry
+from repro.parallel import sharding
+from repro.runtime.engine import Engine, EngineConfig
+
+jax.config.update("jax_platform_name", "cpu")
+RNG = np.random.default_rng(7)
+
+
+def _step_inputs(b, d, n, dtype=jnp.float32, with_d=True, with_z=True):
+    """Pooled-slot decode inputs: b is the slot-pool batch, h is the f32
+    slot state, token tensors are in the model compute dtype."""
+    h = jnp.asarray(RNG.normal(size=(b, d, n)).astype(np.float32))
+    x = jnp.asarray(RNG.normal(size=(b, d)).astype(np.float32)).astype(dtype)
+    dt = jax.nn.softplus(jnp.asarray(
+        RNG.normal(size=(b, d)).astype(np.float32))).astype(dtype)
+    A = -jnp.exp(jnp.asarray(RNG.normal(size=(d, n)).astype(np.float32))
+                 * 0.5)
+    B = jnp.asarray(RNG.normal(size=(b, n)).astype(np.float32)).astype(dtype)
+    C = jnp.asarray(RNG.normal(size=(b, n)).astype(np.float32)).astype(dtype)
+    D = jnp.asarray(RNG.normal(size=(d,)).astype(np.float32)) if with_d \
+        else None
+    z = (jnp.asarray(RNG.normal(size=(b, d)).astype(np.float32))
+         .astype(dtype) if with_z else None)
+    return h, x, dt, A, B, C, D, z
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,d,n", [(1, 8, 4), (4, 64, 16), (3, 130, 16),
+                                   (2, 256, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_step_matches_ref(b, d, n, dtype):
+    h, x, dt, A, B, C, D, z = _step_inputs(b, d, n, dtype)
+    y0, h0 = ref.selective_state_step(h, x, dt, A, B, C, D=D, z_t=z)
+    y1, h1 = dsk.selective_state_step(h, x, dt, A, B, C, D=D, z_t=z,
+                                      block_d=64)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y0, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h0),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("with_d,with_z", [(False, False), (True, False),
+                                           (False, True)])
+def test_fused_step_optional_terms(with_d, with_z):
+    h, x, dt, A, B, C, D, z = _step_inputs(2, 48, 8, with_d=with_d,
+                                           with_z=with_z)
+    y0, h0 = ref.selective_state_step(h, x, dt, A, B, C, D=D, z_t=z)
+    y1, h1 = dsk.selective_state_step(h, x, dt, A, B, C, D=D, z_t=z)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h0),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("exp_impl,silu_impl", [("ours", "ours"),
+                                                ("fast", "paper")])
+def test_fused_step_approx_nonlinearities(exp_impl, silu_impl):
+    """The MARCA approximations (biased exp, piecewise SiLU) run *inside*
+    the kernel and must match the oracle running the same approximations."""
+    h, x, dt, A, B, C, D, z = _step_inputs(3, 64, 16)
+    y0, h0 = ref.selective_state_step(h, x, dt, A, B, C, D=D, z_t=z,
+                                      exp_impl=exp_impl,
+                                      silu_impl=silu_impl)
+    y1, h1 = dsk.selective_state_step(h, x, dt, A, B, C, D=D, z_t=z,
+                                      exp_impl=exp_impl,
+                                      silu_impl=silu_impl)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h0),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_step_equals_one_scan_step():
+    """A decode step IS the L=1 scan: the fused step must agree with the
+    sequential scan reference driven one token forward."""
+    h, x, dt, A, B, C, D, z = _step_inputs(2, 32, 8)
+    y_scan, h_scan = ref.selective_scan(
+        x[:, None], dt[:, None], A, B[:, None], C[:, None],
+        D=D, z=z[:, None], h0=h)
+    y1, h1 = dsk.selective_state_step(h, x, dt, A, B, C, D=D, z_t=z)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y_scan[:, 0]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h_scan),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ops_dispatch_and_resolution():
+    h, x, dt, A, B, C, D, z = _step_inputs(2, 16, 4)
+    y0, _ = ops.selective_state_step(h, x, dt, A, B, C, D=D, z_t=z,
+                                     impl="xla")
+    y1, _ = ops.selective_state_step(h, x, dt, A, B, C, D=D, z_t=z,
+                                     impl="fused")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                               rtol=1e-5, atol=1e-5)
+    assert css.resolve_step_impl("fused") == "fused"
+    assert css.resolve_step_impl("pallas") == "fused"
+    assert css.resolve_step_impl("xla") == "xla"
+    assert css.resolve_step_impl("auto", needs_pallas=False) == "fused"
+    # Pallas-backed auto resolves per backend (CPU in this suite -> xla)
+    assert css.resolve_step_impl("auto") == (
+        "fused" if jax.default_backend() == "tpu" else "xla")
+    with pytest.raises(KeyError):
+        css.resolve_step_impl("nope")
+
+
+# ---------------------------------------------------------------------------
+# Per-family routing parity: fused decode == unfused decode
+# ---------------------------------------------------------------------------
+
+FAMILY_ARCHS = ["mamba-130m", "jamba-v0.1-52b", "xlstm-350m"]
+
+
+def _setup(name, dtype="float32"):
+    cfg = configs.smoke_variant(configs.get_config(name))
+    cfg = dataclasses.replace(cfg, vocab=64, dtype=dtype,
+                              capacity_factor=float(max(cfg.n_experts, 1)))
+    params = sharding.tree_values(
+        registry.init_params(cfg, jax.random.key(0)))
+    return cfg, params
+
+
+@pytest.mark.parametrize("name", FAMILY_ARCHS)
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_family_fused_decode_matches_xla(name, dtype):
+    """prefill once, then decode N tokens through both step routings over
+    pooled-slot shapes; logits and caches must agree."""
+    cfg, params = _setup(name, dtype)
+    b, lp, n_steps = 3, 4, 4
+    toks = jax.random.randint(jax.random.key(5), (b, lp + n_steps), 0,
+                              cfg.vocab, dtype=jnp.int32)
+    cache0 = sharding.tree_values(registry.init_cache(cfg, b, max_seq=16))
+    _, cache = registry.prefill(cfg, params, cache0,
+                                {"tokens": toks[:, :lp]})
+    cfg_f = dataclasses.replace(cfg, step_impl="fused")
+    cfg_x = dataclasses.replace(cfg, step_impl="xla")
+    cache_f = cache_x = cache
+    tol = 3e-2 if dtype == "bfloat16" else 2e-4
+    for t in range(n_steps):
+        tok = {"tokens": toks[:, lp + t:lp + t + 1]}
+        lf, cache_f = registry.decode_step(cfg_f, params, cache_f, tok)
+        lx, cache_x = registry.decode_step(cfg_x, params, cache_x, tok)
+        np.testing.assert_allclose(
+            np.asarray(lf, np.float32), np.asarray(lx, np.float32),
+            rtol=tol, atol=tol, err_msg=f"{name} step {t} logits diverged")
+    for pf, px in zip(jax.tree.leaves(cache_f), jax.tree.leaves(cache_x)):
+        np.testing.assert_allclose(np.asarray(pf, np.float32),
+                                   np.asarray(px, np.float32),
+                                   rtol=tol, atol=tol)
+
+
+def test_fused_pooled_decode_freezes_masked_slots():
+    """Pooled fused decode + mask_slots: inactive slots must stay frozen
+    bit-exactly while an active slot advances (the engine invariant)."""
+    cfg, params = _setup("mamba-130m")
+    cfg = dataclasses.replace(cfg, step_impl="fused")
+    n_slots = 3
+    cache0 = sharding.tree_values(
+        registry.init_cache(cfg, n_slots, max_seq=16))
+    toks = jax.random.randint(jax.random.key(8), (n_slots, 5), 0, cfg.vocab,
+                              dtype=jnp.int32)
+    _, cache = registry.prefill(cfg, params, cache0, {"tokens": toks})
+    before = jax.tree.map(np.asarray, cache)
+    active = jnp.asarray([True, False, True])
+    tok = jnp.zeros((n_slots, 1), jnp.int32)
+    _, new_cache = registry.decode_step(cfg, params, cache, {"tokens": tok})
+    new_cache = registry.mask_slots(cfg, cache, new_cache, active)
+    axes = registry.cache_slot_axes(cfg)
+    active_changed = []
+    for ax, old, new in zip(jax.tree.leaves(axes), jax.tree.leaves(before),
+                            jax.tree.leaves(new_cache)):
+        old_t = np.moveaxis(old, ax, 0)
+        new_t = np.moveaxis(np.asarray(new), ax, 0)
+        np.testing.assert_array_equal(new_t[1], old_t[1],
+                                      err_msg="masked slot mutated")
+        active_changed.append(not np.array_equal(new_t[0], old_t[0]))
+    assert any(active_changed), "active slot did not advance"
+
+
+# ---------------------------------------------------------------------------
+# Engine level: fused == unfused, token for token
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["mamba-130m", "xlstm-350m"])
+def test_engine_fused_matches_unfused_token_for_token(name):
+    """The PR 1 engine with the unfused per-op decode and the fused
+    single-launch decode must emit identical greedy token streams under
+    slot churn (queueing, eviction, reuse)."""
+    cfg, params = _setup(name)
+    rng = np.random.default_rng(17)
+    lens = [3, 6, 4, 7]
+    max_news = [5, 3, 6, 4]
+    prompts = [rng.integers(0, cfg.vocab, size=(l,)).astype(np.int32)
+               for l in lens]
+    streams = {}
+    for impl in ("xla", "fused"):
+        eng = Engine(cfg, params,
+                     EngineConfig(n_slots=2, max_seq=64, step_impl=impl))
+        reqs = [eng.submit(p, max_new=m)
+                for p, m in zip(prompts, max_news)]
+        eng.run()
+        streams[impl] = [r.tokens for r in reqs]
+    assert streams["fused"] == streams["xla"], \
+        "fused decode burst diverged from unfused engine"

@@ -80,6 +80,46 @@ class TestTraining:
         _, _, l2 = t2.run(resume=False)
         np.testing.assert_allclose(l1, l2, rtol=1e-3, atol=1e-3)
 
+    def test_resume_with_no_checkpoint_falls_back_to_fresh(self, tmp_path):
+        """resume=True on an empty (and even not-yet-created) ckpt dir
+        must train from fresh init, not raise."""
+        t = Trainer(_tiny_cfg(), _tcfg(tmp_path / "never_written",
+                                       total_steps=3))
+        _, _, losses = t.run(resume=True)
+        assert len(losses) == 3
+        assert np.isfinite(losses).all()
+
+    @pytest.mark.parametrize("damage", ["missing_npz", "corrupt_npz"])
+    def test_resume_with_torn_checkpoint_falls_back_to_fresh(
+            self, tmp_path, damage):
+        """A crash or disk fault can leave a step dir with meta.json but a
+        missing or truncated arrays.npz; resume must fall back to fresh
+        init instead of wedging every restart."""
+        torn = tmp_path / "step_000000000010"
+        torn.mkdir(parents=True)
+        (torn / "meta.json").write_text("{\"step\": 10, \"leaves\": {}}")
+        if damage == "corrupt_npz":
+            (torn / "arrays.npz").write_bytes(b"not a zip archive")
+        t = Trainer(_tiny_cfg(), _tcfg(tmp_path, total_steps=3))
+        _, _, losses = t.run(resume=True)
+        assert len(losses) == 3            # started at step 0, not 10
+        assert np.isfinite(losses).all()
+
+    def test_resume_falls_back_to_older_intact_checkpoint(self, tmp_path):
+        """If the newest checkpoint is corrupt, resume must retry older
+        intact ones before resorting to fresh init — a torn latest write
+        must not discard real progress."""
+        cfg = _tiny_cfg()
+        t = Trainer(cfg, _tcfg(tmp_path, total_steps=20, ckpt_every=10))
+        t.run(resume=False)
+        steps = t.ckpt.all_steps()
+        assert len(steps) >= 2
+        newest = tmp_path / f"step_{steps[-1]:012d}"
+        (newest / "arrays.npz").write_bytes(b"garbage")
+        t2 = Trainer(cfg, _tcfg(tmp_path, total_steps=25, ckpt_every=10))
+        _, _, losses = t2.run(resume=True)
+        assert len(losses) == 25 - steps[-2]   # resumed from the older step
+
     def test_grad_compression_trains(self, tmp_path):
         t = Trainer(_tiny_cfg(), _tcfg(tmp_path, grad_compression=True))
         _, _, losses = t.run(resume=False)
