@@ -244,6 +244,67 @@ def _fused_decode_comparison(arch, slots, requests, max_new, reps,
             "fused_speedup": ratio}
 
 
+# ---------------------------------------------------------------------------
+# Quantized slot state (cfg.state_dtype): slots-per-GB and tok/s per dtype
+# ---------------------------------------------------------------------------
+
+def state_dtype_comparison(arch, slots, requests, max_new,
+                           dtypes=("f32", "bf16", "int8"), seed=0,
+                           quiet=False):
+    """Serve one saturated greedy trace once per state dtype and report
+    slots-per-GB (deterministic — pure cache-layout arithmetic) plus
+    tokens/sec and the token-stream agreement vs the f32 engine.
+
+    The capacity claim (int8 fits >= 2x the slots of f32 in the same
+    pool memory) and the useful-token counts are deterministic and are
+    the pass/fail signal; tok/s is reported only (CPU noise >20%)."""
+    if "f32" not in dtypes:
+        raise ValueError("dtypes must include the 'f32' reference "
+                         "(agreement is measured against it)")
+    cfg, params = _setup_model(arch)
+    rng = np.random.default_rng(seed)
+    max_seq = max(LEN_CHOICES) + max_new + 8
+    prompts = [rng.integers(0, cfg.vocab,
+                            size=(int(rng.choice(LEN_CHOICES)),))
+               .astype(np.int32) for _ in range(requests)]
+    out = {}
+    for sd in dtypes:
+        eng = Engine(cfg, params,
+                     EngineConfig(n_slots=slots, max_seq=max_seq,
+                                  state_dtype=sd))
+        reqs = [eng.submit(p, max_new=max_new) for p in prompts]
+        eng.run()
+        s = eng.stats.summary()
+        out[sd] = {
+            "tokens": [list(map(int, r.tokens)) for r in reqs],
+            "useful_tokens": int(s["useful_tokens"]),
+            "tokens_per_s": float(s["tokens_per_s"]),
+            "state_bytes_per_slot": int(eng.pool.state_bytes_per_slot()),
+            "slots_per_gb": float(eng.pool.slots_per_gb()),
+        }
+    base = out["f32"]["tokens"]
+    n_tok = sum(len(t) for t in base)
+    for sd in dtypes:
+        same = sum(int(x == y) for a, b in zip(base, out[sd]["tokens"])
+                   for x, y in zip(a, b))
+        out[sd]["token_agreement_vs_f32"] = same / max(1, n_tok)
+    if not quiet:
+        print(f"[serve_throughput] state-dtype sweep, arch={arch} "
+              f"slots={slots} requests={requests} max_new={max_new}")
+        for sd in dtypes:
+            o = out[sd]
+            print(f"  {sd:5s}: {o['state_bytes_per_slot']:8d} B/slot "
+                  f"-> {o['slots_per_gb']:9.0f} slots/GB | "
+                  f"{o['tokens_per_s']:7.1f} tok/s | "
+                  f"agreement vs f32 {o['token_agreement_vs_f32']:.3f}")
+        if "int8" in out:
+            ratio = (out['f32']['state_bytes_per_slot']
+                     / out['int8']['state_bytes_per_slot'])
+            print(f"  int8 capacity gain : {ratio:0.2f}x slots at equal "
+                  "pool memory")
+    return out
+
+
 def run():
     """benchmarks/run.py protocol: quick saturated comparison, CSV rows."""
     from benchmarks import common
@@ -263,6 +324,14 @@ def run():
     common.emit("serve_decode_fused_step",
                 1e6 / max(fused["fused_tps"], 1e-9),
                 f"speedup_vs_unfused={fused['fused_speedup']:.2f}x{tag}")
+    sweep = state_dtype_comparison(arch="mamba-130m", slots=4, requests=8,
+                                   max_new=16, quiet=True)
+    gain = (sweep["f32"]["state_bytes_per_slot"]
+            / sweep["int8"]["state_bytes_per_slot"])
+    common.emit("serve_state_int8_slots_per_gb",
+                sweep["int8"]["slots_per_gb"],
+                f"capacity_gain_vs_f32={gain:.2f}x;"
+                f"agreement={sweep['int8']['token_agreement_vs_f32']:.3f}")
 
 
 def main():
@@ -287,6 +356,10 @@ def main():
     _fused_decode_comparison(args.arch, args.slots,
                              requests=min(args.requests, 8),
                              max_new=16, reps=args.reps, seed=args.seed)
+    state_dtype_comparison(args.arch, args.slots,
+                           requests=min(args.requests, 8),
+                           max_new=16, seed=args.seed,
+                           dtypes=("f32", "bf16", "int8", "fp8"))
     # Exit status: deterministic token accounting already asserted above;
     # the timing ratio is only asserted off-CPU, and generously — a
     # same-order engine is not a regression, a 2x slowdown is.

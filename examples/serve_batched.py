@@ -24,6 +24,8 @@ def main():
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--requests", type=int, default=5)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--state-dtype", default=None,
+                    choices=["f32", "bf16", "int8", "fp8"])
     args = ap.parse_args()
 
     cfg = configs.smoke_variant(configs.get_config(args.arch))
@@ -39,7 +41,8 @@ def main():
     budgets = rng.integers(8, 25, size=args.requests)
 
     eng = Engine(cfg, params, EngineConfig(
-        n_slots=args.slots, max_seq=64, temperature=args.temperature))
+        n_slots=args.slots, max_seq=64, temperature=args.temperature,
+        state_dtype=args.state_dtype))
     reqs = [eng.submit(p, max_new=int(m))
             for p, m in zip(prompts, budgets)]
     eng.run()

@@ -10,12 +10,10 @@ import json
 import sys
 import time
 
-import jax
-
 from repro import configs
 from repro.configs import shapes as shp
 from repro.launch import hlo_cost
-from repro.launch.dryrun import build_cell, rules_for, optimizer_for
+from repro.launch.dryrun import build_cell, rules_for
 from repro.launch.mesh import make_production_mesh
 from repro.models import registry
 from repro.parallel import sharding

@@ -3,7 +3,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,6 +91,16 @@ class ModelConfig:
     #: (per-position absmax scales; halves/quarters decode cache memory,
     #: fixes the MHA decode_32k cells that exceed 16 GB/chip)
     kv_cache_dtype: str = "model"
+
+    #: Recurrent-state storage dtype for the pooled decode state
+    #: ("f32" | "bf16" | "int8" | "fp8").  int8/fp8 store the SSM h (and
+    #: xLSTM matrix memory C) with per-slot-per-layer-per-channel-group
+    #: f32 absmax scales kept alongside the cache pytree; the decode
+    #: step dequantizes on read and requantizes on write (decayed
+    #: running absmax), so slot capacity scales ~4x while step math
+    #: stays f32.  Pairs with kv_cache_dtype, which covers the
+    #: attention KV strips; state_dtype covers the recurrent blocks.
+    state_dtype: str = "f32"
 
     # training defaults
     max_seq: int = 4096

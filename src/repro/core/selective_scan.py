@@ -20,9 +20,6 @@ single-pass version for TPU and is validated against ``selective_scan_seq``.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
@@ -188,3 +185,28 @@ def decode_step(h, x_t, dt_t, A, B_t, C_t, D=None, z_t=None,
     return kref.selective_state_step(
         h, x_t, dt_t, A, B_t, C_t, D=D, z_t=z_t,
         exp_impl=exp_impl, silu_impl=silu_impl)
+
+
+def decode_step_q(hq, h_scale, x_t, dt_t, A, B_t, C_t, D=None, z_t=None,
+                  state_dtype: str = "int8", impl: str = "xla",
+                  exp_impl: str = "exact", silu_impl: str = "exact"):
+    """Quantized-state decode step (cfg.state_dtype in {int8, fp8}).
+
+    hq (b, d, n) storage payload, h_scale (b, g) f32 group scales (see
+    core.state_quant); returns (y (b, d), hq_new, scale_new).  "fused"
+    dequantizes/requantizes inside the single Pallas launch; "xla" is
+    the dequant -> ref step -> requant oracle with identical scale math
+    (the two match to within one quantization code — XLA may contract
+    da*h + dbx into an FMA, which can flip a value sitting exactly on a
+    rounding boundary)."""
+    if impl in ("fused", "pallas"):
+        from repro.kernels import decode_step as dsk   # lazy: import cycle
+        return dsk.selective_state_step_q(
+            hq, h_scale, x_t, dt_t, A, B_t, C_t, D=D, z_t=z_t,
+            state_dtype=state_dtype, exp_impl=exp_impl,
+            silu_impl=silu_impl)
+    if impl != "xla":
+        raise KeyError(f"unknown step impl {impl!r}")
+    return kref.selective_state_step_q(
+        hq, h_scale, x_t, dt_t, A, B_t, C_t, D=D, z_t=z_t,
+        state_dtype=state_dtype, exp_impl=exp_impl, silu_impl=silu_impl)

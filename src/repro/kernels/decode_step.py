@@ -33,16 +33,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import approx
+from repro.core import approx, state_quant
 from repro.kernels import pallas_compat
 
 
-def _step_kernel(h_ref, x_ref, dt_ref, at_ref, b_ref, c_ref, d_ref, z_ref,
-                 y_ref, hout_ref, *, exp_impl: str, silu_impl: str,
-                 has_d: bool, has_z: bool):
+def _chain(h, x_ref, dt_ref, at_ref, b_ref, c_ref, d_ref, z_ref, *,
+           exp_impl: str, silu_impl: str, has_d: bool, has_z: bool):
+    """The fused per-token chain on one (slot, D-block) grid cell.
+    h (N, BD) f32 already dequantized; returns (y (BD,), h_new (N, BD))."""
     exp = approx.get_exp(exp_impl)
     silu = approx.get_silu(silu_impl)
-    h = h_ref[0].astype(jnp.float32)               # (N, BD)
     x = x_ref[0, :].astype(jnp.float32)            # (BD,)
     dt = dt_ref[0, :].astype(jnp.float32)          # (BD,)
     at = at_ref[...].astype(jnp.float32)           # (N, BD)
@@ -56,8 +56,39 @@ def _step_kernel(h_ref, x_ref, dt_ref, at_ref, b_ref, c_ref, d_ref, z_ref,
         y = y + d_ref[0, :].astype(jnp.float32) * x
     if has_z:
         y = y * silu(z_ref[0, :].astype(jnp.float32))
+    return y, h_new
+
+
+def _step_kernel(h_ref, x_ref, dt_ref, at_ref, b_ref, c_ref, d_ref, z_ref,
+                 y_ref, hout_ref, *, exp_impl: str, silu_impl: str,
+                 has_d: bool, has_z: bool):
+    h = h_ref[0].astype(jnp.float32)               # (N, BD)
+    y, h_new = _chain(h, x_ref, dt_ref, at_ref, b_ref, c_ref, d_ref,
+                      z_ref, exp_impl=exp_impl, silu_impl=silu_impl,
+                      has_d=has_d, has_z=has_z)
     y_ref[0, :] = y.astype(y_ref.dtype)
     hout_ref[0] = h_new.astype(hout_ref.dtype)
+
+
+def _step_kernel_q(h_ref, scale_ref, x_ref, dt_ref, at_ref, b_ref, c_ref,
+                   d_ref, z_ref, y_ref, hout_ref, scale_out_ref, *,
+                   exp_impl: str, silu_impl: str, has_d: bool, has_z: bool,
+                   state_dtype: str):
+    """Quantized-state variant: the int8/fp8 payload is dequantized on
+    read and requantized on write *inside* the kernel, so the f32 state
+    lives only in VMEM/registers — never in HBM.  Each grid cell owns
+    one channel group's scale (scale blocking == channel blocking), so
+    the running-absmax update needs no cross-block reduction."""
+    s_in = scale_ref[0, 0]
+    h = h_ref[0].astype(jnp.float32) * s_in        # dequant on read
+    y, h_new = _chain(h, x_ref, dt_ref, at_ref, b_ref, c_ref, d_ref,
+                      z_ref, exp_impl=exp_impl, silu_impl=silu_impl,
+                      has_d=has_d, has_z=has_z)
+    y_ref[0, :] = y.astype(y_ref.dtype)
+    amax = jnp.max(jnp.abs(h_new))
+    s_out = state_quant.update_scale(amax, s_in, state_dtype)
+    hout_ref[0] = state_quant.encode(h_new / s_out, state_dtype)
+    scale_out_ref[0, 0] = s_out
 
 
 @functools.partial(
@@ -120,6 +151,117 @@ def _step_padded(h, x_t, dt_t, at, b_t, c_t, d_skip, z_t,
         interpret=interpret,
         name="marca_decode_step",
     )(*args)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_d", "exp_impl", "silu_impl", "state_dtype",
+                     "interpret"))
+def _step_padded_q(h, h_scale, x_t, dt_t, at, b_t, c_t, d_skip, z_t,
+                   block_d: int, exp_impl: str, silu_impl: str,
+                   state_dtype: str, interpret: bool):
+    """Quantized-state launch: D % block_d == 0 and the scale array has
+    exactly one entry per (slot, D-block)."""
+    bsz, n, d_in = h.shape
+    has_d = d_skip is not None
+    has_z = z_t is not None
+    g = d_in // block_d
+    grid = (bsz, g)
+
+    def _row(_):
+        return pl.BlockSpec((1, block_d), lambda bb, dd: (bb, dd))
+
+    in_specs = [
+        pl.BlockSpec((1, n, block_d), lambda bb, dd: (bb, 0, dd)),   # h
+        pl.BlockSpec((1, 1), lambda bb, dd: (bb, dd)),               # scale
+        _row("x"), _row("dt"),
+        pl.BlockSpec((n, block_d), lambda bb, dd: (0, dd)),          # At
+        pl.BlockSpec((1, n), lambda bb, dd: (bb, 0)),                # B_t
+        pl.BlockSpec((1, n), lambda bb, dd: (bb, 0)),                # C_t
+    ]
+    args = [h, h_scale, x_t, dt_t, at, b_t, c_t]
+    if has_d:
+        in_specs.append(pl.BlockSpec((1, block_d), lambda bb, dd: (0, dd)))
+        args.append(d_skip)
+    else:
+        in_specs.append(pl.BlockSpec((1, 1), lambda bb, dd: (0, 0)))
+        args.append(jnp.zeros((1, 1), jnp.float32))
+    if has_z:
+        in_specs.append(_row("z"))
+        args.append(z_t)
+    else:
+        in_specs.append(pl.BlockSpec((1, 1), lambda bb, dd: (0, 0)))
+        args.append(jnp.zeros((1, 1), jnp.float32))
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((bsz, d_in), x_t.dtype),
+        jax.ShapeDtypeStruct((bsz, n, d_in),
+                             state_quant.storage_dtype(state_dtype)),
+        jax.ShapeDtypeStruct((bsz, g), jnp.float32),
+    )
+    out_specs = (
+        pl.BlockSpec((1, block_d), lambda bb, dd: (bb, dd)),
+        pl.BlockSpec((1, n, block_d), lambda bb, dd: (bb, 0, dd)),
+        pl.BlockSpec((1, 1), lambda bb, dd: (bb, dd)),
+    )
+
+    kernel = functools.partial(
+        _step_kernel_q, exp_impl=exp_impl, silu_impl=silu_impl,
+        has_d=has_d, has_z=has_z, state_dtype=state_dtype)
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=out_shapes,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        compiler_params=pallas_compat.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+        name="marca_decode_step_q",
+    )(*args)
+
+
+def selective_state_step_q(hq, h_scale, x_t, dt_t, A, B_t, C_t, D=None,
+                           z_t=None, state_dtype: str = "int8",
+                           exp_impl: str = "exact",
+                           silu_impl: str = "exact",
+                           interpret: bool | None = None):
+    """Fused quantized-state decode step.  Same semantics as
+    kernels.ref.selective_state_step_q.
+
+    hq (b, d, n) int8/fp8 payload; h_scale (b, g) f32 with one scale per
+    ``state_quant.D_BLOCK`` channel group; other args as in
+    selective_state_step.  Returns (y (b, d), hq_new, scale_new (b, g)).
+
+    The channel blocking is pinned to the scale grouping (block_d =
+    min(D_BLOCK, d)), so dequant/requant stay local to one grid cell.
+    Note: int8/fp8 HBM tiles want (32, 128) alignment on real TPU; the
+    d_state sublane dim of small configs is below that, which costs
+    padding, not correctness."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bsz, d_in, n = hq.shape
+    block_d = min(state_quant.D_BLOCK, d_in)
+    g = state_quant.n_groups(d_in)
+    pad_d = g * block_d - d_in
+    assert h_scale.shape == (bsz, g), (h_scale.shape, (bsz, g))
+
+    def _pad_row(t):
+        if t is None:
+            return None
+        return jnp.pad(t, ((0, 0), (0, pad_d)))
+
+    hp = jnp.pad(hq.swapaxes(1, 2), ((0, 0), (0, 0), (0, pad_d)))
+    at = jnp.pad(A.astype(jnp.float32), ((0, pad_d), (0, 0))).T  # (n, Dp)
+    dp = (None if D is None
+          else jnp.pad(D.astype(jnp.float32), (0, pad_d)).reshape(1, -1))
+
+    y, hq_new, scale_new = _step_padded_q(
+        hp, h_scale, _pad_row(x_t), _pad_row(dt_t), at, B_t, C_t, dp,
+        _pad_row(z_t), block_d=block_d, exp_impl=exp_impl,
+        silu_impl=silu_impl, state_dtype=state_dtype, interpret=interpret)
+    return (y[:, :d_in], hq_new[:, :, :d_in].swapaxes(1, 2), scale_new)
 
 
 def selective_state_step(h, x_t, dt_t, A, B_t, C_t, D=None, z_t=None,

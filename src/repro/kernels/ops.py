@@ -88,6 +88,22 @@ def selective_state_step(h, x_t, dt_t, A, B_t, C_t, D=None, z_t=None,
                            silu_impl=silu_impl)
 
 
+def selective_state_step_q(hq, h_scale, x_t, dt_t, A, B_t, C_t, D=None,
+                           z_t=None, state_dtype: str = "int8",
+                           impl: str = "xla", exp_impl: str = "exact",
+                           silu_impl: str = "exact"):
+    """Quantized-state single-token decode step; impl in {xla, fused}.
+
+    Same chain as selective_state_step but the state payload stays in
+    its int8/fp8 storage dtype across the HBM round-trip: dequant on
+    read, requant on write with a decayed-running-absmax scale (inside
+    the kernel for the fused impl)."""
+    from repro.core import selective_scan as css
+    return css.decode_step_q(hq, h_scale, x_t, dt_t, A, B_t, C_t, D=D,
+                             z_t=z_t, state_dtype=state_dtype, impl=impl,
+                             exp_impl=exp_impl, silu_impl=silu_impl)
+
+
 def causal_conv1d(x, w, b=None, x_prev=None, impl: str = "xla"):
     if impl == "pallas":
         return _conv1d_k.causal_conv1d(x, w, b=b, x_prev=x_prev)

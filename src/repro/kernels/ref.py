@@ -101,6 +101,26 @@ def selective_state_step(h, x_t, dt_t, A, B_t, C_t, D=None, z_t=None,
     return y.astype(x_t.dtype), h
 
 
+def selective_state_step_q(hq, h_scale, x_t, dt_t, A, B_t, C_t, D=None,
+                           z_t=None, state_dtype: str = "int8",
+                           exp_impl: str = "exact",
+                           silu_impl: str = "exact"):
+    """Quantized-state decode step (oracle for the fused q-kernel).
+
+    hq (b,d,n) int8/fp8 payload, h_scale (b,g) f32 group scales (see
+    core.state_quant).  Dequantize -> f32 step -> requantize with the
+    decayed-running-absmax scale update; the f32 state exists only
+    between those two lines.  Returns (y, hq_new, scale_new)."""
+    from repro.core import state_quant
+    h = state_quant.dequantize_h(hq, h_scale)
+    y, h_new = selective_state_step(h, x_t, dt_t, A, B_t, C_t, D=D,
+                                    z_t=z_t, exp_impl=exp_impl,
+                                    silu_impl=silu_impl)
+    hq_new, scale_new = state_quant.quantize_h(h_new, state_dtype,
+                                               prev_scale=h_scale)
+    return y, hq_new, scale_new
+
+
 # ---------------------------------------------------------------------------
 # Causal depthwise conv1d (Mamba short conv).
 # ---------------------------------------------------------------------------

@@ -23,7 +23,6 @@ Validated in tests/test_hlo_cost.py against hand-computable programs
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from collections import defaultdict
 

@@ -9,7 +9,6 @@ import dataclasses
 import time
 
 import jax
-import numpy as np
 
 from repro import configs
 from repro.checkpoint import CheckpointManager
@@ -30,6 +29,10 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--state-dtype", default=None,
+                    choices=["f32", "bf16", "int8", "fp8"],
+                    help="pooled decode-state storage dtype; int8 "
+                         "multiplies slot capacity ~4x")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch)
@@ -46,7 +49,8 @@ def main():
     srv = Server(cfg, params, ServeConfig(
         batch_slots=args.batch_slots,
         max_seq=args.prompt_len + args.max_new + 8,
-        temperature=args.temperature))
+        temperature=args.temperature,
+        state_dtype=args.state_dtype))
 
     ds = SyntheticLM(vocab=cfg.vocab, seq_len=args.prompt_len, seed=1)
     done = 0

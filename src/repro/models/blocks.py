@@ -6,12 +6,8 @@ are pure.  Compute dtype follows cfg.dtype, accumulation/softmax in f32.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import approx
 from repro.kernels import ops

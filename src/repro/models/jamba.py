@@ -16,8 +16,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import state_quant
 from repro.models import blocks, mamba, moe
-from repro.parallel.sharding import Param, constrain, tree_values
+from repro.parallel.sharding import Param, constrain
 
 
 def _pos_kind(cfg, pos):
@@ -132,11 +133,19 @@ def init_cache(cfg, batch, max_seq, dtype):
                 "v": Param(jnp.zeros(shape, dtype), axes)}
         else:
             di, n, k = cfg.d_inner, cfg.d_state, cfg.d_conv
-            caches[f"pos{pos}"] = {
-                "h": Param(jnp.zeros((n_groups, batch, di, n), jnp.float32),
-                           ("layers", "act_batch", "act_ffn", None)),
+            mc = {
+                "h": Param(jnp.zeros(
+                    (n_groups, batch, di, n),
+                    state_quant.storage_dtype(cfg.state_dtype)),
+                    ("layers", "act_batch", "act_ffn", None)),
                 "conv": Param(jnp.zeros((n_groups, batch, k - 1, di), dtype),
                               ("layers", "act_batch", None, "act_ffn"))}
+            if state_quant.is_quantized(cfg.state_dtype):
+                mc["h_scale"] = Param(
+                    jnp.zeros((n_groups, batch, state_quant.n_groups(di)),
+                              jnp.float32),
+                    ("layers", "act_batch", None))
+            caches[f"pos{pos}"] = mc
     return {"layers": caches,
             "pos": Param(jnp.zeros((batch,), jnp.int32), ("act_batch",))}
 
@@ -144,11 +153,14 @@ def init_cache(cfg, batch, max_seq, dtype):
 def cache_slot_axes(cfg):
     """Batch/slot axis index per cache leaf (layout matches init_cache)."""
     period = cfg.attn_every or 8
+    mamba_ax = {"h": 1, "conv": 1}
+    if state_quant.is_quantized(cfg.state_dtype):
+        mamba_ax["h_scale"] = 1
     caches = {}
     for pos in range(period):
         is_attn, _ = _pos_kind(cfg, pos)
         caches[f"pos{pos}"] = ({"k": 1, "v": 1} if is_attn
-                               else {"h": 1, "conv": 1})
+                               else dict(mamba_ax))
     return {"layers": caches, "pos": 0}
 
 
@@ -209,8 +221,10 @@ def prefill(cfg, p, cache, batch):
             else:
                 hh, ns = mamba.mamba_block_apply(
                     cfg, group_params[f"pos{pos}"]["mamba"], xn)
-                new_cache[f"pos{pos}"] = {
-                    "h": ns["h"], "conv": ns["conv"].astype(dtype)}
+                mc = {"h": ns["h"], "conv": ns["conv"].astype(dtype)}
+                if "h_scale" in ns:        # quantized state_dtype
+                    mc["h_scale"] = ns["h_scale"]
+                new_cache[f"pos{pos}"] = mc
             x = x + hh
             xn = blocks.apply_norm(
                 cfg, group_params[f"pos{pos}"]["norm2"], x)

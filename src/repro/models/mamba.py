@@ -14,10 +14,31 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import approx
+from repro.core import approx, state_quant
 from repro.kernels import ops
 from repro.models import blocks
 from repro.parallel.sharding import Param, constrain
+
+
+def read_state_h(cfg, state):
+    """Decode the stored recurrent state to the f32 the scan/step math
+    uses.  f32/bf16 is a cast; int8/fp8 dequantizes with the state's
+    group scales (state["h_scale"])."""
+    if state_quant.is_quantized(cfg.state_dtype):
+        return state_quant.dequantize_h(state["h"], state["h_scale"])
+    return state["h"].astype(jnp.float32)
+
+
+def write_state_h(cfg, h, prev_state=None):
+    """Encode a f32 state for storage: the {"h": ...} (+"h_scale") leaves
+    of the new state dict.  ``prev_state`` supplies the previous scales
+    for the decayed-running-absmax update; None = cold start (prefill)."""
+    if state_quant.is_quantized(cfg.state_dtype):
+        prev = None if prev_state is None else prev_state["h_scale"]
+        q, scale = state_quant.quantize_h(h, cfg.state_dtype,
+                                          prev_scale=prev)
+        return {"h": q, "h_scale": scale}
+    return {"h": h.astype(state_quant.storage_dtype(cfg.state_dtype))}
 
 
 def mamba_block_init(cfg, key):
@@ -79,14 +100,16 @@ def mamba_block_apply(cfg, p, x, state=None):
     x_a = silu(x_c)
     dt, B, C = _ssm_inputs(cfg, p, x_a)
     A = -jnp.exp(p["A_log"])
-    h0 = None if state is None else state["h"]
+    h0 = None if state is None else read_state_h(cfg, state)
     y, h_last = ops.selective_scan(
         x_a, dt, A, B, C, D=p["D"], z=z, h0=h0,
         impl=cfg.scan_impl, chunk=cfg.scan_chunk,
         exp_impl=cfg.exp_impl, silu_impl=cfg.silu_impl)
     y = constrain(y, "act_batch", "act_seq", "act_ffn")
     out = blocks.dense(p["out_proj"], y, x.dtype)
-    return out, {"h": h_last, "conv": new_conv}
+    new_state = write_state_h(cfg, h_last, prev_state=state)
+    new_state["conv"] = new_conv
+    return out, new_state
 
 
 def mamba_block_step(cfg, p, x_t, state):
@@ -110,19 +133,39 @@ def mamba_block_step(cfg, p, x_t, state):
     x_a = silu(x_c)
     dt, B, C = _ssm_inputs(cfg, p, x_a)
     A = -jnp.exp(p["A_log"])
+    impl = resolve_step_impl(cfg.step_impl)
+    if state_quant.is_quantized(cfg.state_dtype):
+        # storage-dtype round-trip stays inside the step: dequant on
+        # read, requant on write (in-kernel for the fused impl) — the
+        # pooled h never crosses HBM at f32
+        y, hq, scale = ops.selective_state_step_q(
+            state["h"], state["h_scale"], x_a[:, 0], dt[:, 0], A,
+            B[:, 0], C[:, 0], D=p["D"], z_t=z[:, 0],
+            state_dtype=cfg.state_dtype, impl=impl,
+            exp_impl=cfg.exp_impl, silu_impl=cfg.silu_impl)
+        out = blocks.dense(p["out_proj"], y[:, None, :], x_t.dtype)
+        return out, {"h": hq, "h_scale": scale, "conv": new_conv}
     y, h = ops.selective_state_step(
-        state["h"], x_a[:, 0], dt[:, 0], A, B[:, 0], C[:, 0],
-        D=p["D"], z_t=z[:, 0], impl=resolve_step_impl(cfg.step_impl),
+        read_state_h(cfg, state), x_a[:, 0], dt[:, 0], A, B[:, 0],
+        C[:, 0], D=p["D"], z_t=z[:, 0], impl=impl,
         exp_impl=cfg.exp_impl, silu_impl=cfg.silu_impl)
     out = blocks.dense(p["out_proj"], y[:, None, :], x_t.dtype)
-    return out, {"h": h, "conv": new_conv}
+    return out, {**write_state_h(cfg, h), "conv": new_conv}
 
 
 def mamba_state_init(cfg, batch, dtype):
     di, n, k = cfg.d_inner, cfg.d_state, cfg.d_conv
-    return {
-        "h": Param(jnp.zeros((batch, di, n), jnp.float32),
+    out = {
+        "h": Param(jnp.zeros((batch, di, n),
+                             state_quant.storage_dtype(cfg.state_dtype)),
                    ("act_batch", "act_ffn", None)),
         "conv": Param(jnp.zeros((batch, k - 1, di), dtype),
                       ("act_batch", None, "act_ffn")),
     }
+    if state_quant.is_quantized(cfg.state_dtype):
+        # zero scales decode the zero init state exactly; the first
+        # write (prefill quantize or step requant) sets real scales
+        out["h_scale"] = Param(
+            jnp.zeros((batch, state_quant.n_groups(di)), jnp.float32),
+            ("act_batch", None))
+    return out

@@ -8,6 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import state_quant
 from repro.models import blocks, mamba
 from repro.parallel.sharding import Param, constrain
 
@@ -59,39 +60,76 @@ def forward(cfg, p, batch):
     return logits, {}
 
 
+def _quantized(cfg):
+    return state_quant.is_quantized(cfg.state_dtype)
+
+
 def init_cache(cfg, batch, max_seq, dtype):
     L = cfg.n_layers
     di, n, k = cfg.d_inner, cfg.d_state, cfg.d_conv
-    return {
-        "h": Param(jnp.zeros((L, batch, di, n), jnp.float32),
+    out = {
+        "h": Param(jnp.zeros((L, batch, di, n),
+                             state_quant.storage_dtype(cfg.state_dtype)),
                    ("layers", "act_batch", "act_ffn", None)),
         "conv": Param(jnp.zeros((L, batch, k - 1, di), dtype),
                       ("layers", "act_batch", None, "act_ffn")),
         "pos": Param(jnp.zeros((batch,), jnp.int32), ("act_batch",)),
     }
+    if _quantized(cfg):
+        # per-slot-per-layer-per-channel-group f32 absmax scales live in
+        # the cache pytree: gather/scatter/mask (and eviction's
+        # fresh-state reset) move payload and scale together
+        out["h_scale"] = Param(
+            jnp.zeros((L, batch, state_quant.n_groups(di)), jnp.float32),
+            ("layers", "act_batch", None))
+    return out
 
 
 def cache_slot_axes(cfg):
     """Batch/slot axis index per cache leaf (layout matches init_cache)."""
-    return {"h": 1, "conv": 1, "pos": 0}
+    ax = {"h": 1, "conv": 1, "pos": 0}
+    if _quantized(cfg):
+        ax["h_scale"] = 1
+    return ax
+
+
+def _pack_state(cfg, ns):
+    """Per-layer state dict -> the lax.scan-stacked leaf tuple."""
+    if _quantized(cfg):
+        return (ns["h"], ns["h_scale"], ns["conv"])
+    return (ns["h"], ns["conv"])
+
+
+def _cache_from_stacked(cfg, stacked, pos):
+    if _quantized(cfg):
+        nh, nscale, nc = stacked
+        return {"h": nh, "h_scale": nscale, "conv": nc, "pos": pos}
+    nh, nc = stacked
+    return {"h": nh, "conv": nc, "pos": pos}
 
 
 def decode_step(cfg, p, cache, batch):
     dtype = jnp.dtype(cfg.dtype)
     h = blocks.embed_apply(cfg, p["embed"], batch["tokens"], dtype)
     h = constrain(h, "act_batch", None, "act_embed")
+    quant = _quantized(cfg)
 
     def body(x, lp_state):
-        lp, hs, cs = lp_state
-        y, ns = _layer_apply(cfg, lp, x, state={"h": hs, "conv": cs},
-                             step=True)
-        return y, (ns["h"], ns["conv"])
+        if quant:
+            lp, hs, ss, cs = lp_state
+            state = {"h": hs, "h_scale": ss, "conv": cs}
+        else:
+            lp, hs, cs = lp_state
+            state = {"h": hs, "conv": cs}
+        y, ns = _layer_apply(cfg, lp, x, state=state, step=True)
+        return y, _pack_state(cfg, ns)
 
-    h, (nh, nc) = jax.lax.scan(body, h, (p["layers"], cache["h"],
-                                         cache["conv"]))
+    xs = ((p["layers"], cache["h"], cache["h_scale"], cache["conv"])
+          if quant else (p["layers"], cache["h"], cache["conv"]))
+    h, stacked = jax.lax.scan(body, h, xs)
     h = blocks.apply_norm(cfg, p["norm_f"], h)
     logits = blocks.unembed_apply(cfg, p.get("unembed", {}), p["embed"], h)
-    return logits, {"h": nh, "conv": nc, "pos": cache["pos"] + 1}
+    return logits, _cache_from_stacked(cfg, stacked, cache["pos"] + 1)
 
 
 def prefill(cfg, p, cache, batch):
@@ -102,11 +140,11 @@ def prefill(cfg, p, cache, batch):
 
     def body(x, lp):
         y, ns = _layer_apply(cfg, lp, x)
-        return y, (ns["h"], ns["conv"])
+        return y, _pack_state(cfg, ns)
 
-    h, (hs, cs) = jax.lax.scan(body, h, p["layers"])
+    h, stacked = jax.lax.scan(body, h, p["layers"])
     h = blocks.apply_norm(cfg, p["norm_f"], h)
     logits = blocks.unembed_apply(cfg, p.get("unembed", {}), p["embed"], h)
     b = h.shape[0]
     pos = jnp.full((b,), batch["tokens"].shape[1], jnp.int32)
-    return logits, {"h": hs, "conv": cs, "pos": pos}
+    return logits, _cache_from_stacked(cfg, stacked, pos)

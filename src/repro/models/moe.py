@@ -217,7 +217,6 @@ def moe_apply_ep(cfg, p, x, mesh):
     """Expert-parallel MoE via shard_map (tokens seq-sharded over `model`)."""
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
-    import functools
     b, s, d = x.shape
     batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     xs = P(batch_axes if batch_axes else None, "model", None)

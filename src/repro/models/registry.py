@@ -15,15 +15,11 @@ API surface used by the launcher / trainer / dry-run:
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models import jamba, mamba_lm, transformer, xlstm
-from repro.parallel import sharding
-from repro.parallel.sharding import Param
 
 
 _FAMILIES = {

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import blocks, moe
-from repro.parallel.sharding import Param, constrain, tree_values
+from repro.parallel.sharding import Param, constrain
 
 
 def _layer_init(cfg, key):

@@ -17,6 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import state_quant
 from repro.core import approx
 from repro.models import blocks
 from repro.parallel.sharding import Param, constrain
@@ -153,6 +154,26 @@ def _mlstm_inputs(cfg, p, x, conv_state):
     return q, k, v, ig, fg, g, new_conv
 
 
+def read_state_C(cfg, state):
+    """Decode the stored matrix memory to f32.  int8/fp8 dequantizes
+    with the per-(slot, head) scales in state["C_scale"]."""
+    if state_quant.is_quantized(cfg.state_dtype):
+        return state_quant.dequantize_mat(state["C"], state["C_scale"])
+    return state["C"].astype(jnp.float32)
+
+
+def write_state_C(cfg, C, prev_state=None):
+    """Encode a f32 matrix memory for storage: {"C": ...} (+"C_scale").
+    Only C is quantized — the normalizer n, stabilizer m, and conv tail
+    are O(d) per slot vs C's O(d * dh), so they stay f32."""
+    if state_quant.is_quantized(cfg.state_dtype):
+        prev = None if prev_state is None else prev_state["C_scale"]
+        q, scale = state_quant.quantize_mat(C, cfg.state_dtype,
+                                            prev_scale=prev)
+        return {"C": q, "C_scale": scale}
+    return {"C": C.astype(state_quant.storage_dtype(cfg.state_dtype))}
+
+
 def mlstm_block_apply(cfg, p, x, state=None):
     d, nh = cfg.d_model, cfg.n_heads
     di = 2 * d
@@ -161,15 +182,19 @@ def mlstm_block_apply(cfg, p, x, state=None):
     conv_state = None if state is None else state["conv"]
     q, k, v, ig, fg, g, new_conv = _mlstm_inputs(cfg, p, x, conv_state)
     if state is None:
-        state = {k2: v2 for k2, v2 in _mlstm_state(cfg, b).items()}
+        s0 = _mlstm_state(cfg, b)
+        C0, n0, m0 = s0["C"], s0["n"], s0["m"]
+    else:
+        C0, n0, m0 = read_state_C(cfg, state), state["n"], state["m"]
     h, new_rec = _mlstm_scan(q, k, v, ig, fg,
-                             {"C": state["C"], "n": state["n"],
-                              "m": state["m"]},
+                             {"C": C0, "n": n0, "m": m0},
                              cfg.scan_chunk, remat=cfg.remat)
     hf = blocks.group_norm(h.reshape(b, L, di), p["gn_scale"], nh)
     out = blocks.dense(p["down"], hf * silu(g), x.dtype)
-    new_rec["conv"] = new_conv
-    return out, new_rec
+    new_state = write_state_C(cfg, new_rec["C"], prev_state=state)
+    new_state.update({"n": new_rec["n"], "m": new_rec["m"],
+                      "conv": new_conv})
+    return out, new_state
 
 
 def mlstm_block_step(cfg, p, x_t, state):
@@ -186,12 +211,14 @@ def mlstm_block_step(cfg, p, x_t, state):
                                                  state["conv"])
     qf, kf, vf = (t[:, 0].astype(jnp.float32) for t in (q, k, v))
     (C_new, n_new, m_new), h_t = _mlstm_cell(
-        state["C"], state["n"], state["m"], qf, kf, vf,
+        read_state_C(cfg, state), state["n"], state["m"], qf, kf, vf,
         ig[:, 0], fg[:, 0], dh)
 
     hf = blocks.group_norm(h_t.reshape(b, 1, di), p["gn_scale"], nh)
     out = blocks.dense(p["down"], hf * silu(g), x_t.dtype)
-    return out, {"C": C_new, "n": n_new, "m": m_new, "conv": new_conv}
+    new_state = write_state_C(cfg, C_new, prev_state=state)
+    new_state.update({"n": n_new, "m": m_new, "conv": new_conv})
+    return out, new_state
 
 
 def _mlstm_state(cfg, batch):
@@ -208,10 +235,15 @@ def _mlstm_state(cfg, batch):
 
 def mlstm_state_init(cfg, batch, dtype):
     s = _mlstm_state(cfg, batch)
+    s["C"] = s["C"].astype(state_quant.storage_dtype(cfg.state_dtype))
     axes = {"C": ("act_batch", "act_heads", None, None),
             "n": ("act_batch", "act_heads", None),
             "m": ("act_batch", "act_heads"),
-            "conv": ("act_batch", None, "act_ffn")}
+            "conv": ("act_batch", None, "act_ffn"),
+            "C_scale": ("act_batch", "act_heads", None)}
+    if state_quant.is_quantized(cfg.state_dtype):
+        dh = 2 * cfg.d_model // cfg.n_heads
+        s["C_scale"] = jnp.zeros((batch, cfg.n_heads, dh), jnp.float32)
     return {k: Param(v, axes[k]) for k, v in s.items()}
 
 
@@ -407,12 +439,15 @@ def init_cache(cfg, batch, max_seq, dtype):
 def cache_slot_axes(cfg):
     """Batch/slot axis index per cache leaf (layout matches init_cache):
     all xLSTM state tensors are batch-leading."""
+    mlstm_keys = ["C", "n", "m", "conv"]
+    if state_quant.is_quantized(cfg.state_dtype):
+        mlstm_keys.append("C_scale")
     layers = []
     for i in range(cfg.n_layers):
         if _is_slstm(cfg, i):
             layers.append({"slstm": {k: 0 for k in ("c", "n", "h", "m")}})
         else:
-            layers.append({"mlstm": {k: 0 for k in ("C", "n", "m", "conv")}})
+            layers.append({"mlstm": {k: 0 for k in mlstm_keys}})
     return {"layers": layers, "pos": 0}
 
 

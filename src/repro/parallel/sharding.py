@@ -23,7 +23,7 @@ gradient/step all-reduce over "pod".
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional
+from typing import Any, Optional
 
 import jax
 import numpy as np

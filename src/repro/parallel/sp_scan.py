@@ -20,8 +20,6 @@ suite (tests/test_distributed.py).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P

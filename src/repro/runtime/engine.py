@@ -100,6 +100,11 @@ class EngineConfig:
     # state-update/contraction/gate chain, "xla" = unfused reference ops,
     # None = keep the model config's setting ("auto" resolves per backend).
     step_impl: Optional[str] = None
+    # override for the pooled recurrent-state storage dtype
+    # (cfg.state_dtype): "f32" | "bf16" | "int8" | "fp8".  int8/fp8
+    # multiply slot capacity ~4x (per-slot absmax scales ride along in
+    # the cache pytree); None = keep the model config's setting.
+    state_dtype: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -132,6 +137,10 @@ class Engine:
             # cfg keys the shared jit caches, so fused and unfused engines
             # compile (and benchmark) independently
             cfg = dataclasses.replace(cfg, step_impl=ecfg.step_impl)
+        if ecfg.state_dtype is not None:
+            # same reasoning: a quantized-state engine and an f32 engine
+            # have different cache pytrees and must not share compiles
+            cfg = dataclasses.replace(cfg, state_dtype=ecfg.state_dtype)
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg

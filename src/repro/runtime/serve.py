@@ -28,6 +28,9 @@ class ServeConfig:
     max_seq: int = 256
     temperature: float = 0.0
     seed: int = 0
+    # pooled recurrent-state storage dtype override (cfg.state_dtype):
+    # "int8"/"fp8" multiply slot capacity ~4x; None keeps the model cfg
+    state_dtype: Optional[str] = None
 
 
 class Server:
@@ -37,7 +40,8 @@ class Server:
         self.params = params
         self.engine = Engine(cfg, params, EngineConfig(
             n_slots=scfg.batch_slots, max_seq=scfg.max_seq,
-            temperature=scfg.temperature, seed=scfg.seed))
+            temperature=scfg.temperature, seed=scfg.seed,
+            state_dtype=scfg.state_dtype))
 
     def generate(self, prompts: np.ndarray, max_new: int = 32,
                  eos_id: Optional[int] = None) -> np.ndarray:

@@ -109,12 +109,30 @@ class SlotStatePool:
         self.cache = self._scatter_fn(self.cache, sub_cache,
                                       jnp.asarray([slot]))
 
+    # -- capacity accounting ------------------------------------------------
+
+    def state_bytes_per_slot(self) -> int:
+        """Device bytes one slot occupies across every cache leaf —
+        quantized payloads count at their storage width, and the f32
+        absmax scales (cache leaves themselves) are included, so the
+        number is the honest marginal cost of one more slot."""
+        return sum(leaf.nbytes for leaf in jax.tree.leaves(self.cache)
+                   ) // self.n_slots
+
+    def slots_per_gb(self) -> float:
+        """Slot capacity per GB of decode-state memory (the serving
+        capacity axis cfg.state_dtype multiplies)."""
+        return (1 << 30) / max(1, self.state_bytes_per_slot())
+
     def evict(self, slot: int) -> None:
         """Reset ``slot`` to the init state and return it to the free list.
 
         The scatter-of-fresh-state is what guarantees no stale-state leak:
         a later admit overwrites the slot again, so even a torn admit can
-        never observe a previous request's recurrent state.
+        never observe a previous request's recurrent state.  With a
+        quantized state_dtype the per-slot absmax scales are cache
+        leaves, so the same scatter resets them too — a freed slot
+        cannot leak a stale scale into the next admitted sequence.
         """
         assert self._active[slot], f"slot {slot} not active"
         self.cache = self._scatter_fn(self.cache, self._fresh,

@@ -12,11 +12,10 @@ import dataclasses
 import signal
 import time
 import zipfile
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.data import make_train_iterator

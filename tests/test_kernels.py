@@ -8,7 +8,6 @@ try:
 except ImportError:            # degrade to the deterministic shim
     from _hypothesis_fallback import given, settings, strategies as st
 
-from repro.core import approx
 from repro.core import selective_scan as css
 from repro.kernels import (conv1d as conv_k, fast_exp as fexp_k,
                            flash_attention as flash_k,

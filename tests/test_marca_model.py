@@ -2,7 +2,6 @@
 properties, cycle-model sanity, reproduction-claim gates (the same checks
 benchmarks/run.py prints, as hard assertions)."""
 import numpy as np
-import pytest
 
 from repro import configs
 from repro.core import buffer_manager as bm, marca_model as mm, op_graph

@@ -2,8 +2,6 @@
 logical resolution, rules overrides, Param pytree behavior."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:            # degrade to the deterministic shim

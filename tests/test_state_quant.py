@@ -1,0 +1,325 @@
+"""Quantized slot state (cfg.state_dtype): round-trip error bounds,
+scale dynamics, fused-kernel-vs-oracle parity, pool scale hygiene
+(eviction resets scales with the payload), and engine token-stream
+parity int8-vs-f32 across model families under slot churn."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # degrade to the deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro import configs
+from repro.core import state_quant
+from repro.kernels import ops, ref
+from repro.models import registry
+from repro.parallel import sharding
+from repro.runtime.engine import Engine, EngineConfig
+from repro.runtime.state_pool import SlotStatePool
+
+jax.config.update("jax_platform_name", "cpu")
+RNG = np.random.default_rng(7)
+
+QUANT_DTYPES = ("int8", "fp8")
+
+# Token-stream agreement floors for the engine parity tests.  Greedy
+# decode on random-weight smoke models sits near argmax ties, and one
+# flipped token poisons the rest of an autoregressive stream, so the
+# gate is a documented agreement fraction, not exactness: int8 state
+# keeps mamba/jamba streams (near-)exact; xLSTM's normalized matrix
+# readout (C q / max|n q|) amplifies quantization noise and gets a
+# lower floor.  Measured agreement on this platform: mamba 0.93-1.0,
+# jamba 1.0, xlstm ~0.83 — floors leave margin for jax-version drift.
+AGREEMENT_FLOOR = {"mamba-130m": 0.75, "jamba-v0.1-52b": 0.75,
+                   "xlstm-350m": 0.5}
+
+
+def _setup(name, **over):
+    cfg = configs.smoke_variant(configs.get_config(name))
+    cfg = dataclasses.replace(cfg, vocab=64, dtype="float32", **over)
+    params = sharding.tree_values(
+        registry.init_params(cfg, jax.random.key(0)))
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# Round-trip property: |dequant(quant(x)) - x| is scale-bounded
+# ---------------------------------------------------------------------------
+
+class TestRoundTrip:
+    @given(st.integers(1, 4), st.integers(8, 600),
+           st.sampled_from([1, 4, 16]), st.floats(0.01, 100.0))
+    @settings(max_examples=25, deadline=None)
+    def test_h_roundtrip_scale_bounded(self, b, d, n, mag):
+        """int8: per-element error <= scale/2 (linear symmetric code).
+        The group scale is the absmax over that (D_BLOCK, n) channel
+        group mapped to 127, so the bound is tight by construction."""
+        h = jnp.asarray(RNG.normal(size=(b, d, n)) * mag, jnp.float32)
+        q, s = state_quant.quantize_h(h, "int8")
+        assert q.shape == h.shape and q.dtype == jnp.int8
+        assert s.shape == (b, state_quant.n_groups(d))
+        back = state_quant.dequantize_h(q, s)
+        bound = np.asarray(s)[..., None] * (0.5 + 1e-4) + 1e-9
+        err = np.abs(np.asarray(back - h))
+        grouped, _ = state_quant._group_h(jnp.asarray(err))
+        per_group = np.asarray(jnp.max(grouped, axis=(-2, -1)))
+        assert (per_group <= bound[..., 0]).all(), (
+            per_group.max(), bound.min())
+
+    @given(st.integers(1, 3), st.integers(8, 600), st.floats(0.01, 10.0))
+    @settings(max_examples=15, deadline=None)
+    def test_h_roundtrip_fp8(self, b, d, mag):
+        """fp8 e4m3 carries 3 mantissa bits: worst-case error near the
+        group absmax is amax * 2^-4 = scale * 448/16 (plus the subnormal
+        floor ~scale)."""
+        n = 8
+        h = jnp.asarray(RNG.normal(size=(b, d, n)) * mag, jnp.float32)
+        q, s = state_quant.quantize_h(h, "fp8")
+        assert q.dtype == jnp.float8_e4m3fn
+        back = state_quant.dequantize_h(q, s)
+        bound = float(np.max(np.asarray(s))) * (448.0 / 16.0 + 1.0)
+        assert float(jnp.max(jnp.abs(back - h))) <= bound
+
+    @given(st.integers(1, 3), st.integers(2, 6), st.integers(4, 64))
+    @settings(max_examples=15, deadline=None)
+    def test_mat_roundtrip_per_row(self, b, nh, dh):
+        """xLSTM C path: per-row scales, error <= row_scale/2."""
+        x = jnp.asarray(RNG.normal(size=(b, nh, dh, dh)) * 5, jnp.float32)
+        q, s = state_quant.quantize_mat(x, "int8")
+        assert s.shape == (b, nh, dh)
+        back = state_quant.dequantize_mat(q, s)
+        err = np.max(np.abs(np.asarray(back - x)), axis=-1)
+        assert (err <= np.asarray(s) * (0.5 + 1e-4) + 1e-9).all()
+
+    def test_zero_state_roundtrips_to_zero(self):
+        """Fresh slots are exactly zero; quantization must keep them
+        exactly zero (scale floors at EPS_AMAX, payload at code 0)."""
+        h = jnp.zeros((2, 64, 16), jnp.float32)
+        for sd in QUANT_DTYPES:
+            q, s = state_quant.quantize_h(h, sd)
+            assert float(jnp.max(jnp.abs(
+                state_quant.dequantize_h(q, s)))) == 0.0
+            assert (np.asarray(s) > 0).all()
+
+
+class TestScaleDynamics:
+    def test_running_absmax_tracks_growth_immediately(self):
+        """A growing state must never be clipped: the write scale is
+        >= the step's true absmax, so requantization is exact-ranged."""
+        h = jnp.asarray(RNG.normal(size=(1, 32, 8)), jnp.float32)
+        _, s0 = state_quant.quantize_h(h, "int8")
+        _, s1 = state_quant.quantize_h(h * 100, "int8", prev_scale=s0)
+        amax = float(jnp.max(jnp.abs(h * 100)))
+        assert float(s1[0, 0]) * 127.0 >= amax - 1e-5
+
+    def test_running_absmax_decays_on_shrink(self):
+        """A shrinking state pulls the scale down by EMA_DECAY per step
+        (not instantly — resolution survives transient near-zeros)."""
+        h = jnp.asarray(RNG.normal(size=(1, 32, 8)) * 10, jnp.float32)
+        _, s0 = state_quant.quantize_h(h, "int8")
+        _, s1 = state_quant.quantize_h(h * 1e-3, "int8", prev_scale=s0)
+        np.testing.assert_allclose(np.asarray(s1),
+                                   np.asarray(s0) * state_quant.EMA_DECAY,
+                                   rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Fused kernel vs oracle
+# ---------------------------------------------------------------------------
+
+class TestFusedParity:
+    @pytest.mark.parametrize("state_dtype", QUANT_DTYPES)
+    @pytest.mark.parametrize("d", [96, 128])
+    def test_fused_q_step_matches_oracle(self, state_dtype, d):
+        """The in-kernel dequant/requant must match the XLA oracle:
+        same scale math, so payloads agree to within one code (XLA FMA
+        contraction can flip an exact rounding boundary), scales to
+        ~1 ulp, and y to reduction-order float error."""
+        b, n = 4, 16
+        h = jnp.asarray(RNG.normal(size=(b, d, n)) * 2, jnp.float32)
+        q, s = state_quant.quantize_h(h, state_dtype)
+        x = jnp.asarray(RNG.normal(size=(b, d)), jnp.float32)
+        dt = jnp.abs(jnp.asarray(RNG.normal(size=(b, d)), jnp.float32))
+        A = -jnp.abs(jnp.asarray(RNG.normal(size=(d, n)), jnp.float32))
+        B = jnp.asarray(RNG.normal(size=(b, n)), jnp.float32)
+        C = jnp.asarray(RNG.normal(size=(b, n)), jnp.float32)
+        D = jnp.asarray(RNG.normal(size=(d,)), jnp.float32)
+        z = jnp.asarray(RNG.normal(size=(b, d)), jnp.float32)
+        outs = {}
+        for impl in ("xla", "fused"):
+            outs[impl] = ops.selective_state_step_q(
+                q, s, x, dt, A, B, C, D=D, z_t=z,
+                state_dtype=state_dtype, impl=impl)
+        np.testing.assert_allclose(np.asarray(outs["xla"][0]),
+                                   np.asarray(outs["fused"][0]),
+                                   atol=1e-4, rtol=1e-4)
+        code_diff = np.max(np.abs(
+            np.asarray(outs["xla"][1].astype(jnp.float32))
+            - np.asarray(outs["fused"][1].astype(jnp.float32))))
+        code_unit = 1.0 if state_dtype == "int8" else 32.0
+        assert code_diff <= code_unit, code_diff
+        np.testing.assert_allclose(np.asarray(outs["xla"][2]),
+                                   np.asarray(outs["fused"][2]),
+                                   rtol=1e-5)
+
+    def test_q_step_tracks_f32_step(self):
+        """One quantized step stays within the quantization error budget
+        of the f32 step it approximates (states, then outputs)."""
+        b, d, n = 4, 128, 16
+        h = jnp.asarray(RNG.normal(size=(b, d, n)), jnp.float32)
+        q, s = state_quant.quantize_h(h, "int8")
+        x = jnp.asarray(RNG.normal(size=(b, d)), jnp.float32)
+        dt = jnp.abs(jnp.asarray(RNG.normal(size=(b, d)), jnp.float32))
+        A = -jnp.abs(jnp.asarray(RNG.normal(size=(d, n)), jnp.float32))
+        B = jnp.asarray(RNG.normal(size=(b, n)), jnp.float32)
+        C = jnp.asarray(RNG.normal(size=(b, n)), jnp.float32)
+        y_f32, h_f32 = ref.selective_state_step(h, x, dt, A, B, C)
+        y_q, qn, sn = ref.selective_state_step_q(q, s, x, dt, A, B, C)
+        h_q = state_quant.dequantize_h(qn, sn)
+        # error budget: input state error (<= s/2) carried through the
+        # decay factor (<1) plus fresh requant error (<= s'/2)
+        budget = (float(jnp.max(s)) + float(jnp.max(sn))) * 0.5 + 1e-6
+        assert float(jnp.max(jnp.abs(h_q - h_f32))) <= budget
+        # y contracts n state entries: error <= n * |C|max * budget
+        y_budget = n * float(jnp.max(jnp.abs(C))) * budget
+        assert float(jnp.max(jnp.abs(y_q - y_f32))) <= y_budget
+
+
+# ---------------------------------------------------------------------------
+# Pool hygiene: scales are part of the slot state
+# ---------------------------------------------------------------------------
+
+POOL_QUANT_ARCHS = ["mamba-130m", "jamba-v0.1-52b", "xlstm-350m"]
+
+
+def _tree_equal(a, b):
+    flat_a, flat_b = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(flat_a) == len(flat_b)
+    return all(bool(jnp.array_equal(x, y.astype(x.dtype)))
+               for x, y in zip(flat_a, flat_b))
+
+
+class TestPoolScaleHygiene:
+    @pytest.mark.parametrize("name", POOL_QUANT_ARCHS)
+    def test_quantized_cache_structure_matches_slot_axes(self, name):
+        """cache_slot_axes must stay congruent with init_cache for every
+        state_dtype — the whole gather/scatter/mask contract rides on
+        it."""
+        for sd in ("f32", "bf16") + QUANT_DTYPES:
+            cfg, _ = _setup(name, state_dtype=sd)
+            cache = sharding.tree_values(registry.init_cache(cfg, 2, 16))
+            axes = registry.cache_slot_axes(cfg)
+            jax.tree.map(lambda ax, leaf: leaf.shape[ax], axes, cache)
+
+    @pytest.mark.parametrize("name", ["mamba-130m", "xlstm-350m"])
+    def test_evict_resets_scale_entries(self, name):
+        """Regression: a freed slot's scale entries must reset with the
+        payload, so the next admitted sequence can never inherit a stale
+        scale (which would silently mis-decode its first read)."""
+        cfg, params = _setup(name, state_dtype="int8")
+        pool = SlotStatePool(cfg, n_slots=2, max_seq=32)
+        fresh = sharding.tree_values(registry.init_cache(cfg, 1, 32))
+        toks = jax.random.randint(jax.random.key(1), (1, 9), 0, cfg.vocab,
+                                  dtype=jnp.int32)
+        _, sub = registry.prefill(cfg, params, fresh, {"tokens": toks})
+        slot = pool.alloc()
+        pool.admit(slot, sub)
+        # the prefilled state has live (nonzero) scales in the pool
+        scale_leaves = [leaf for path, leaf in
+                        jax.tree_util.tree_flatten_with_path(pool.cache)[0]
+                        if "scale" in jax.tree_util.keystr(path)]
+        assert scale_leaves, "quantized cache must carry scale leaves"
+        assert any(float(jnp.max(jnp.abs(sl))) > 0 for sl in scale_leaves)
+        pool.evict(slot)
+        assert _tree_equal(pool.read([slot]), fresh)
+
+    def test_quantized_pool_capacity_gain(self):
+        """int8 state must fit >= 2x the slots of f32 in the same pool
+        memory (the acceptance criterion this PR exists for)."""
+        cfg_f32, _ = _setup("mamba-130m", state_dtype="f32")
+        cfg_i8, _ = _setup("mamba-130m", state_dtype="int8")
+        p_f32 = SlotStatePool(cfg_f32, n_slots=2, max_seq=32)
+        p_i8 = SlotStatePool(cfg_i8, n_slots=2, max_seq=32)
+        gain = (p_f32.state_bytes_per_slot()
+                / p_i8.state_bytes_per_slot())
+        assert gain >= 2.0, f"int8 capacity gain {gain:.2f}x < 2x"
+        assert p_i8.slots_per_gb() > p_f32.slots_per_gb()
+
+
+# ---------------------------------------------------------------------------
+# Engine parity: int8 vs f32 token streams over a multi-eviction trace
+# ---------------------------------------------------------------------------
+
+class TestEngineParity:
+    @pytest.mark.parametrize("name", POOL_QUANT_ARCHS)
+    def test_int8_stream_parity_under_slot_churn(self, name):
+        """Greedy-serve 6 requests through 2 slots (>= 4 evictions and
+        slot reuses) at f32 and int8; token agreement must clear the
+        documented per-family floor and every request must get all its
+        tokens at both dtypes."""
+        cfg, params = _setup(name)
+        prompts = [RNG.integers(0, cfg.vocab, size=(int(m),))
+                   .astype(np.int32)
+                   for m in RNG.choice([4, 6, 8], size=6)]
+        streams = {}
+        for sd in ("f32", "int8"):
+            eng = Engine(cfg, params,
+                         EngineConfig(n_slots=2, max_seq=40,
+                                      state_dtype=sd))
+            reqs = [eng.submit(p, max_new=8) for p in prompts]
+            done = eng.run()
+            assert len(done) == len(reqs)
+            assert all(len(r.tokens) == 8 for r in reqs)
+            streams[sd] = [r.tokens for r in reqs]
+        total = sum(len(t) for t in streams["f32"])
+        agree = sum(int(x == y)
+                    for a, b in zip(streams["f32"], streams["int8"])
+                    for x, y in zip(a, b))
+        floor = AGREEMENT_FLOOR[name]
+        assert agree / total >= floor, (
+            f"{name}: int8 agreement {agree}/{total} below floor {floor}")
+
+    def test_bf16_state_runs_and_counts(self):
+        """bf16 is the no-scale storage cast: the engine must serve the
+        full trace with exact token accounting."""
+        cfg, params = _setup("mamba-130m")
+        eng = Engine(cfg, params,
+                     EngineConfig(n_slots=2, max_seq=32,
+                                  state_dtype="bf16"))
+        reqs = [eng.submit(RNG.integers(0, cfg.vocab, size=(5,))
+                           .astype(np.int32), max_new=6)
+                for _ in range(3)]
+        eng.run()
+        assert all(len(r.tokens) == 6 for r in reqs)
+
+    def test_fp8_engine_smoke(self):
+        cfg, params = _setup("mamba-130m")
+        eng = Engine(cfg, params,
+                     EngineConfig(n_slots=2, max_seq=32,
+                                  state_dtype="fp8"))
+        req = eng.submit(RNG.integers(0, cfg.vocab, size=(5,))
+                         .astype(np.int32), max_new=6)
+        eng.run()
+        assert len(req.tokens) == 6
+
+    def test_quantized_fused_matches_quantized_xla_stream(self):
+        """step_impl routing under int8 state: the fused q-kernel and
+        the XLA q-oracle produce identical token streams on this
+        platform (same scale math; payloads agree within one code)."""
+        cfg, params = _setup("mamba-130m")
+        streams = {}
+        for impl in ("xla", "fused"):
+            eng = Engine(cfg, params,
+                         EngineConfig(n_slots=2, max_seq=32,
+                                      state_dtype="int8",
+                                      step_impl=impl))
+            reqs = [eng.submit(np.arange(1, 6, dtype=np.int32) * (i + 1)
+                               % cfg.vocab, max_new=6)
+                    for i in range(3)]
+            eng.run()
+            streams[impl] = [r.tokens for r in reqs]
+        assert streams["xla"] == streams["fused"]

@@ -209,7 +209,6 @@ class TestPrefetcher:
         assert out == items
 
     def test_make_train_iterator_end_to_end(self):
-        import dataclasses
         from repro import configs
         from repro.data import make_train_iterator
         cfg = configs.smoke_variant(configs.get_config("mamba-130m"))

@@ -4,7 +4,6 @@ detection (deliverable c: integration tier)."""
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
