@@ -22,6 +22,12 @@ exactly (greedy decode, same math); the timing ratio is the kernel's
 win.  On CPU the "fused" kernel runs under the Pallas interpreter, so
 its timing is meaningless there and is reported but never asserted.
 
+Also reported: speculative decoding (EngineConfig.draft) — the same
+trace served with fork/draft/verify/rollback passes.  Greedy token
+streams must match plain decode exactly, and the deterministic
+accepted-tokens-per-target-pass counter (not wall-clock) is the gated
+speedup proxy.
+
 Flake policy: pass/fail decisions use deterministic token counts only;
 wall-clock (CPU timing noise exceeds 20%) uses median-of-k and is
 asserted only off-CPU, with a generous margin.
@@ -305,6 +311,86 @@ def state_dtype_comparison(arch, slots, requests, max_new,
     return out
 
 
+# ---------------------------------------------------------------------------
+# Speculative decoding (EngineConfig.draft): accepted tokens per target pass
+# ---------------------------------------------------------------------------
+
+def spec_decode_comparison(arch, slots, requests, max_new, k=3,
+                           shallow_layers=None, seed=0, quiet=False):
+    """Serve one saturated greedy trace three ways — plain decode, spec
+    decode with the full-depth self-draft (every proposal accepted by
+    construction: gates the accept/rollback accounting with fully
+    deterministic counts), and spec decode with a shallow
+    ``shallow_layers``-deep draft (real speculation, real rejections) —
+    and report accepted-tokens-per-target-pass for each.
+
+    Pass/fail signals (all deterministic): the three token streams are
+    IDENTICAL (greedy spec decode is exact — speculation changes
+    throughput, never tokens), and the full-depth draft clears
+    accepted-tokens-per-target-pass > 1.0.  Wall-clock is reported but
+    never asserted (CPU noise >20%; on CPU the draft/verify jits add
+    dispatch overhead that says nothing about accelerator behavior)."""
+    from repro.runtime.spec_decode import (DraftConfig,
+                                           default_shallow_layers)
+    cfg, params = _setup_model(arch)
+    if cfg.is_moe:
+        # MoE routes tokens through shared expert capacity, so logits
+        # depend on batch composition at tight capacity_factor — and a
+        # spec engine's pool has scratch rows a plain engine lacks.
+        # Lift capacity so routing is slot-independent and the
+        # exactness contract applies (see engine.py's MoE caveat).
+        cfg = dataclasses.replace(cfg,
+                                  capacity_factor=float(cfg.n_experts))
+    if shallow_layers is None:
+        # family-aware: jamba drafts whole groups, so "half depth"
+        # rounds to a group multiple (its one-group smoke config
+        # degrades to full depth)
+        shallow_layers = default_shallow_layers(cfg)
+    rng = np.random.default_rng(seed)
+    max_seq = max(LEN_CHOICES) + max_new + 8
+    prompts = [rng.integers(0, cfg.vocab,
+                            size=(int(rng.choice(LEN_CHOICES)),))
+               .astype(np.int32) for _ in range(requests)]
+    out = {}
+    for label, draft in (("plain", None),
+                         ("spec_full", DraftConfig(k=k, layers=0)),
+                         ("spec_shallow",
+                          DraftConfig(k=k, layers=shallow_layers))):
+        eng = Engine(cfg, params,
+                     EngineConfig(n_slots=slots, max_seq=max_seq,
+                                  draft=draft))
+        reqs = [eng.submit(p, max_new=max_new) for p in prompts]
+        eng.run()
+        s = eng.stats.summary()
+        out[label] = {
+            "tokens": [list(map(int, r.tokens)) for r in reqs],
+            "useful_tokens": int(s["useful_tokens"]),
+            "tokens_per_s": float(s["tokens_per_s"]),
+            "target_passes": int(s["spec_target_passes"]),
+            "accepted_per_pass": float(s["spec_accepted_per_pass"]),
+            "acceptance_rate": float(s["spec_acceptance_rate"]),
+        }
+    for label in ("spec_full", "spec_shallow"):
+        assert out[label]["tokens"] == out["plain"]["tokens"], \
+            f"greedy {label} decode diverged from plain decode"
+    assert out["spec_full"]["accepted_per_pass"] > 1.0, \
+        out["spec_full"]["accepted_per_pass"]
+    if not quiet:
+        print(f"[serve_throughput] speculative decode, arch={arch} "
+              f"slots={slots} requests={requests} max_new={max_new} "
+              f"k={k} shallow_layers={shallow_layers}")
+        for label in ("plain", "spec_full", "spec_shallow"):
+            o = out[label]
+            extra = ("" if label == "plain" else
+                     f" | {o['accepted_per_pass']:.2f} tok/target-pass "
+                     f"({o['target_passes']} passes, accept rate "
+                     f"{o['acceptance_rate']:.2f})")
+            print(f"  {label:12s}: {o['tokens_per_s']:7.1f} tok/s{extra}")
+        print("  token streams identical across all three (greedy spec "
+              "decode is exact)")
+    return out
+
+
 def run():
     """benchmarks/run.py protocol: quick saturated comparison, CSV rows."""
     from benchmarks import common
@@ -332,6 +418,16 @@ def run():
                 sweep["int8"]["slots_per_gb"],
                 f"capacity_gain_vs_f32={gain:.2f}x;"
                 f"agreement={sweep['int8']['token_agreement_vs_f32']:.3f}")
+    # no cpu_interpret tag here: accepted-per-pass is a deterministic
+    # trace count, independent of backend/interpreter
+    spec = spec_decode_comparison(arch="mamba-130m", slots=4, requests=6,
+                                  max_new=12, k=3, quiet=True)
+    common.emit("serve_spec_accepted_per_pass",
+                spec["spec_full"]["accepted_per_pass"],
+                f"shallow={spec['spec_shallow']['accepted_per_pass']:.2f};"
+                f"shallow_accept_rate="
+                f"{spec['spec_shallow']['acceptance_rate']:.2f};"
+                f"tokens_identical=1")
 
 
 def main():
@@ -350,6 +446,9 @@ def main():
     ap.add_argument("--reps", type=int, default=3,
                     help="repetitions per side; median wall time is "
                          "scored (CPU timing noise easily exceeds 20%%)")
+    ap.add_argument("--spec-k", type=int, default=3,
+                    help="speculative draft depth for the spec-decode "
+                         "comparison")
     args = ap.parse_args()
     stats = _compare(args.arch, args.slots, args.requests, args.rate,
                      args.max_new_lo, args.max_new_hi, args.seed, args.reps)
@@ -360,6 +459,9 @@ def main():
                            requests=min(args.requests, 8),
                            max_new=16, seed=args.seed,
                            dtypes=("f32", "bf16", "int8", "fp8"))
+    spec_decode_comparison(args.arch, args.slots,
+                           requests=min(args.requests, 8),
+                           max_new=16, k=args.spec_k, seed=args.seed)
     # Exit status: deterministic token accounting already asserted above;
     # the timing ratio is only asserted off-CPU, and generously — a
     # same-order engine is not a regression, a 2x slowdown is.

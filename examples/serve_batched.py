@@ -26,6 +26,12 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--state-dtype", default=None,
                     choices=["f32", "bf16", "int8", "fp8"])
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative draft depth (0 = plain decode); "
+                         "greedy streams are identical either way")
+    ap.add_argument("--draft-layers", type=int, default=0,
+                    help="self-speculative draft depth in layers "
+                         "(0 = full depth)")
     args = ap.parse_args()
 
     cfg = configs.smoke_variant(configs.get_config(args.arch))
@@ -40,9 +46,13 @@ def main():
                for l in rng.choice([6, 10, 16, 24], size=args.requests)]
     budgets = rng.integers(8, 25, size=args.requests)
 
+    draft = None
+    if args.spec_k > 0:
+        from repro.runtime.spec_decode import DraftConfig
+        draft = DraftConfig(k=args.spec_k, layers=args.draft_layers)
     eng = Engine(cfg, params, EngineConfig(
         n_slots=args.slots, max_seq=64, temperature=args.temperature,
-        state_dtype=args.state_dtype))
+        state_dtype=args.state_dtype, draft=draft))
     reqs = [eng.submit(p, max_new=int(m))
             for p, m in zip(prompts, budgets)]
     eng.run()
@@ -53,6 +63,11 @@ def main():
     print(f"[engine] {s['useful_tokens']} tokens in {s['wall_s']:.2f}s "
           f"({s['tokens_per_s']:.1f} tok/s, occupancy {s['occupancy']:.2f}, "
           f"ttft mean {s['ttft_mean_s'] * 1e3:.0f}ms)")
+    if draft is not None:
+        print(f"[engine] speculative: "
+              f"{s['spec_accepted_per_pass']:.2f} tokens/target-pass "
+              f"over {s['spec_target_passes']} passes "
+              f"(accept rate {s['spec_acceptance_rate']:.2f})")
     for r in reqs:
         print(f"  req{r.req_id}: prompt[{r.prompt.size}] "
               f"-> {r.tokens}")

@@ -1,19 +1,21 @@
 #!/usr/bin/env python
-"""Deterministic benchmark gate for CI (writes/checks BENCH_PR3.json).
+"""Deterministic benchmark gate for CI (writes/checks BENCH_PR4.json).
 
 Runs the serving benchmarks in *count mode*: every gated number is a
 deterministic function of the code — useful-token counts, token-stream
 agreement between state dtypes, per-slot cache bytes / slots-per-GB,
-and fused-kernel-vs-oracle errors.  Wall-clock numbers are recorded
-under "informational" but never asserted: CPU timing noise exceeds 20%
-and a timing gate on shared CI runners is a flake generator.
+speculative-decode acceptance counters, and fused-kernel-vs-oracle
+errors.  Wall-clock numbers are recorded under "informational" but
+never asserted: CPU timing noise exceeds 20% and a timing gate on
+shared CI runners is a flake generator.
 
-  python scripts/bench_ci.py            # compare against BENCH_PR3.json
+  python scripts/bench_ci.py            # compare against BENCH_PR4.json
   python scripts/bench_ci.py --update   # regenerate the baseline
 
-The committed BENCH_PR3.json is the baseline; CI runs compare mode and
+The committed BENCH_PR4.json is the baseline; CI runs compare mode and
 fails on drift, so a PR that changes a count (or breaks the >= 2x int8
-capacity claim) must also regenerate — and thereby review — the file.
+capacity claim / the > 1.0 accepted-tokens-per-target-pass claim) must
+also regenerate — and thereby review — the file.
 """
 from __future__ import annotations
 
@@ -27,7 +29,7 @@ REPO = pathlib.Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(REPO / "src"))
 sys.path.insert(0, str(REPO))
 
-BASELINE = REPO / "BENCH_PR3.json"
+BASELINE = REPO / "BENCH_PR4.json"
 
 #: |fresh - baseline| tolerance for token-agreement fractions: exact on
 #: one platform, but argmax near-ties may flip across jax/BLAS builds
@@ -35,6 +37,15 @@ AGREEMENT_TOL = 0.15
 #: hard floor (acceptance criterion): int8 state fits >= 2x the slots
 #: of f32 in the same pool memory
 MIN_INT8_CAPACITY_GAIN = 2.0
+#: hard floor (acceptance criterion): the full-depth self-draft must
+#: deliver more than one token per target verify pass
+MIN_SPEC_ACCEPTED_PER_PASS = 1.0
+#: |fresh - baseline| tolerance for spec accepted-per-pass counters.
+#: The full-depth draft accepts by construction (counts are trace
+#: arithmetic — tight tol absorbs only rounding); the shallow draft's
+#: acceptance depends on argmax near-ties and gets the loose tol.
+SPEC_FULL_TOL = 0.05
+SPEC_SHALLOW_TOL = 0.5
 
 
 def _kernel_vs_oracle():
@@ -115,6 +126,9 @@ def collect():
     fused = st._fused_decode_comparison(
         arch="mamba-130m", slots=4, requests=6, max_new=8, reps=1,
         quiet=True)
+    spec = st.spec_decode_comparison(
+        arch="mamba-130m", slots=4, requests=6, max_new=12, k=3,
+        quiet=True)
     kernel = _kernel_vs_oracle()
 
     dtypes = {}
@@ -133,11 +147,33 @@ def collect():
         "state_dtypes": dtypes,
         "int8_capacity_gain_vs_f32": round(gain, 3),
         "fused_matches_unfused_tokens": True,  # asserted inside fused cmp
+        # token-identity of greedy spec decode vs plain decode is
+        # asserted inside spec_decode_comparison for both drafts
+        "spec_decode": {
+            "tokens_identical": True,
+            "full": {
+                "accepted_per_pass": round(
+                    spec["spec_full"]["accepted_per_pass"], 4),
+                "acceptance_rate": round(
+                    spec["spec_full"]["acceptance_rate"], 4),
+                "target_passes": spec["spec_full"]["target_passes"],
+                "useful_tokens": spec["spec_full"]["useful_tokens"],
+            },
+            "shallow": {
+                "accepted_per_pass": round(
+                    spec["spec_shallow"]["accepted_per_pass"], 4),
+                "acceptance_rate": round(
+                    spec["spec_shallow"]["acceptance_rate"], 4),
+                "useful_tokens": spec["spec_shallow"]["useful_tokens"],
+            },
+        },
         "kernel_vs_oracle": kernel,
         "informational": {
             "backend": jax.default_backend(),
             "fused_tps": round(fused["fused_tps"], 1),
             "unfused_tps": round(fused["unfused_tps"], 1),
+            "spec_full_tps": round(spec["spec_full"]["tokens_per_s"], 1),
+            "plain_tps": round(spec["plain"]["tokens_per_s"], 1),
             "collect_wall_s": round(time.perf_counter() - t0, 1),
         },
     }
@@ -156,6 +192,34 @@ def compare(fresh: dict, base: dict) -> list[str]:
         f"< required {MIN_INT8_CAPACITY_GAIN}x")
     chk(fresh["fused_matches_unfused_tokens"],
         "fused decode diverged from unfused token stream")
+    # speculative decode: exactness + accepted-tokens-per-target-pass
+    sp_f, sp_b = fresh.get("spec_decode"), base.get("spec_decode")
+    if sp_f is None or sp_b is None:
+        fails.append("spec_decode section present only in "
+                     f"{'baseline' if sp_f is None else 'fresh'}")
+    else:
+        chk(sp_f["tokens_identical"],
+            "greedy spec decode diverged from plain decode")
+        chk(sp_f["full"]["accepted_per_pass"]
+            > MIN_SPEC_ACCEPTED_PER_PASS,
+            f"full-draft accepted/pass "
+            f"{sp_f['full']['accepted_per_pass']} <= floor "
+            f"{MIN_SPEC_ACCEPTED_PER_PASS}")
+        for key in ("target_passes", "useful_tokens"):
+            chk(sp_f["full"][key] == sp_b["full"][key],
+                f"spec.full.{key}: fresh {sp_f['full'][key]} != "
+                f"baseline {sp_b['full'][key]}")
+        for side, tol in (("full", SPEC_FULL_TOL),
+                          ("shallow", SPEC_SHALLOW_TOL)):
+            d = abs(sp_f[side]["accepted_per_pass"]
+                    - sp_b[side]["accepted_per_pass"])
+            chk(d <= tol,
+                f"spec.{side}.accepted_per_pass drifted {d:.3f} "
+                f"(> {tol}): fresh {sp_f[side]['accepted_per_pass']} "
+                f"vs baseline {sp_b[side]['accepted_per_pass']}")
+        chk(sp_f["shallow"]["useful_tokens"]
+            == sp_b["shallow"]["useful_tokens"],
+            "spec.shallow.useful_tokens drifted")
     # union, not base-only: a dtype added to the sweep without a
     # baseline regeneration must fail, not silently pass unchecked
     all_dtypes = sorted(set(base["state_dtypes"])
@@ -220,6 +284,10 @@ def main():
     print(f"[bench_ci] int8 capacity gain "
           f"{fresh['int8_capacity_gain_vs_f32']}x "
           f"(floor {MIN_INT8_CAPACITY_GAIN}x)")
+    print(f"[bench_ci] spec decode accepted/pass: full "
+          f"{fresh['spec_decode']['full']['accepted_per_pass']} "
+          f"(floor {MIN_SPEC_ACCEPTED_PER_PASS}), shallow "
+          f"{fresh['spec_decode']['shallow']['accepted_per_pass']}")
     if fails:
         for f in fails:
             print(f"[bench_ci] FAIL: {f}", file=sys.stderr)

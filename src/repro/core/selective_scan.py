@@ -210,3 +210,71 @@ def decode_step_q(hq, h_scale, x_t, dt_t, A, B_t, C_t, D=None, z_t=None,
     return kref.selective_state_step_q(
         hq, h_scale, x_t, dt_t, A, B_t, C_t, D=D, z_t=z_t,
         state_dtype=state_dtype, exp_impl=exp_impl, silu_impl=silu_impl)
+
+
+# ---------------------------------------------------------------------------
+# K-step verify micro-scan (speculative decode)
+#
+# Verifying K drafted tokens means running the target's per-token step K
+# times from a known state and keeping EVERY intermediate state: the
+# accepted prefix length is only known after the pass, and rollback
+# needs the state after exactly that many steps.  Each micro-scan step
+# is the SAME decode_step dispatch the serving burst uses (one fused
+# Pallas launch per step under impl="fused"), so verify-pass numerics
+# are the per-token decode numerics — the property the token-identical
+# spec-decode gate rests on.
+# ---------------------------------------------------------------------------
+
+def decode_scan(h, x_seq, dt_seq, A, B_seq, C_seq, D=None, z_seq=None,
+                impl: str = "xla",
+                exp_impl: str = "exact", silu_impl: str = "exact"):
+    """Chain ``decode_step`` over a K-token window.
+
+    h (b, d, n) f32 start state; x_seq/dt_seq (b, K, d); B_seq/C_seq
+    (b, K, n); z_seq (b, K, d)|None.  Returns (y_seq (b, K, d),
+    h_all (b, K, d, n)) — h_all[:, t] is the state after consuming
+    token t (rollback picks an index into it)."""
+    has_z = z_seq is not None
+
+    def step(h_c, inp):
+        x_t, dt_t, B_t, C_t = inp[:4]
+        z_t = inp[4] if has_z else None
+        y, h_new = decode_step(h_c, x_t, dt_t, A, B_t, C_t, D=D, z_t=z_t,
+                               impl=impl, exp_impl=exp_impl,
+                               silu_impl=silu_impl)
+        return h_new, (y, h_new)
+
+    seqs = (x_seq, dt_seq, B_seq, C_seq) + ((z_seq,) if has_z else ())
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in seqs)
+    _, (ys, hs) = jax.lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1), jnp.moveaxis(hs, 0, 1)
+
+
+def decode_scan_q(hq, h_scale, x_seq, dt_seq, A, B_seq, C_seq, D=None,
+                  z_seq=None, state_dtype: str = "int8", impl: str = "xla",
+                  exp_impl: str = "exact", silu_impl: str = "exact"):
+    """Quantized-state K-step micro-scan: chains ``decode_step_q`` so the
+    storage round-trip (dequant on read, decayed-absmax requant on
+    write) happens per step exactly as in serving — the per-step
+    payloads AND scales come back stacked, because rolling back to step
+    t must restore both together.
+
+    Returns (y_seq (b, K, d), hq_all (b, K, d, n), scale_all (b, K, g)).
+    """
+    has_z = z_seq is not None
+
+    def step(carry, inp):
+        hq_c, s_c = carry
+        x_t, dt_t, B_t, C_t = inp[:4]
+        z_t = inp[4] if has_z else None
+        y, hq_new, s_new = decode_step_q(
+            hq_c, s_c, x_t, dt_t, A, B_t, C_t, D=D, z_t=z_t,
+            state_dtype=state_dtype, impl=impl, exp_impl=exp_impl,
+            silu_impl=silu_impl)
+        return (hq_new, s_new), (y, hq_new, s_new)
+
+    seqs = (x_seq, dt_seq, B_seq, C_seq) + ((z_seq,) if has_z else ())
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in seqs)
+    _, (ys, hqs, ss) = jax.lax.scan(step, (hq, h_scale), xs)
+    return (jnp.moveaxis(ys, 0, 1), jnp.moveaxis(hqs, 0, 1),
+            jnp.moveaxis(ss, 0, 1))

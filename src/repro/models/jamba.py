@@ -69,6 +69,35 @@ def _sublayer_apply(cfg, p, pos, x, positions, state=None, dpos=None):
     return constrain(x, "act_batch", "act_seq", "act_embed"), new_state, aux
 
 
+def sublayer_verify(cfg, p, pos, x, state):
+    """K-token verify pass for one jamba sublayer (speculative decode).
+
+    Mamba positions (7/8 of the stack) get the real micro-scan:
+    front-end batched over the K-token window, SSM recurrence as a
+    K-step scan of the fused decode step with every intermediate state
+    returned (mamba.mamba_block_verify); the MLP/MoE half is
+    position-wise and batches trivially.  Attention positions need a
+    K-wide cache-window attention (K kv writes + causal-within-window
+    masking) that does not exist yet — they raise, and the engine's
+    verify path for jamba chains the per-token decode_step instead.
+
+    Returns (x_out (b, K, d), states stacked per step on axis 1)."""
+    is_attn, is_moe = _pos_kind(cfg, pos)
+    if is_attn:
+        raise NotImplementedError(
+            "jamba attention sublayers have no K-token verify window; "
+            "use the chained per-token verify (registry.verify_scan)")
+    xn = blocks.apply_norm(cfg, p["norm1"], x)
+    h, states = mamba.mamba_block_verify(cfg, p["mamba"], xn, state)
+    x = x + h
+    xn = blocks.apply_norm(cfg, p["norm2"], x)
+    if is_moe:
+        hm, _ = moe.moe_apply(cfg, p["moe"], xn)
+    else:
+        hm = blocks.mlp_apply(cfg, p["mlp"], xn)
+    return x + hm, states
+
+
 def init(cfg, key):
     period = cfg.attn_every or 8
     assert cfg.n_layers % period == 0
@@ -128,9 +157,24 @@ def init_cache(cfg, batch, max_seq, dtype):
             hkv, dh = cfg.n_kv_heads, cfg.head_dim
             shape = (n_groups, batch, max_seq, hkv * dh)
             axes = ("layers", "act_batch", "act_seq", "act_ffn")
-            caches[f"pos{pos}"] = {
-                "k": Param(jnp.zeros(shape, dtype), axes),
-                "v": Param(jnp.zeros(shape, dtype), axes)}
+            if cfg.kv_cache_dtype == "int8":
+                # int8 KV strips with per-(slot, position) absmax
+                # scales living next to the payload — same
+                # payload+scale-move-together contract as the
+                # quantized recurrent state (state_dtype)
+                sshape = (n_groups, batch, max_seq, 1)
+                saxes = ("layers", "act_batch", "act_seq", None)
+                caches[f"pos{pos}"] = {
+                    "k": Param(jnp.zeros(shape, jnp.int8), axes),
+                    "v": Param(jnp.zeros(shape, jnp.int8), axes),
+                    "k_scale": Param(jnp.zeros(sshape, jnp.float32),
+                                     saxes),
+                    "v_scale": Param(jnp.zeros(sshape, jnp.float32),
+                                     saxes)}
+            else:
+                caches[f"pos{pos}"] = {
+                    "k": Param(jnp.zeros(shape, dtype), axes),
+                    "v": Param(jnp.zeros(shape, dtype), axes)}
         else:
             di, n, k = cfg.d_inner, cfg.d_state, cfg.d_conv
             mc = {
@@ -156,12 +200,53 @@ def cache_slot_axes(cfg):
     mamba_ax = {"h": 1, "conv": 1}
     if state_quant.is_quantized(cfg.state_dtype):
         mamba_ax["h_scale"] = 1
+    attn_ax = {"k": 1, "v": 1}
+    if cfg.kv_cache_dtype == "int8":
+        attn_ax.update({"k_scale": 1, "v_scale": 1})
     caches = {}
     for pos in range(period):
         is_attn, _ = _pos_kind(cfg, pos)
-        caches[f"pos{pos}"] = ({"k": 1, "v": 1} if is_attn
+        caches[f"pos{pos}"] = (dict(attn_ax) if is_attn
                                else dict(mamba_ax))
     return {"layers": caches, "pos": 0}
+
+
+# ---------------------------------------------------------------------------
+# Self-speculative draft views.  Jamba's layer stack is grouped (period =
+# attn_every layers per group), so the draft granularity is whole groups:
+# ``n`` must be a multiple of the period, and the slice keeps each
+# group's internal mamba/attn/moe pattern intact.
+# ---------------------------------------------------------------------------
+
+def _n_draft_groups(cfg, n):
+    period = cfg.attn_every or 8
+    if n % period or not (0 < n <= cfg.n_layers):
+        raise ValueError(
+            f"jamba draft layers must be a multiple of the group period "
+            f"({period}) in (0, {cfg.n_layers}]; got {n}")
+    return n // period
+
+
+def draft_params(cfg, p, n):
+    ng = _n_draft_groups(cfg, n)
+    groups = {k: jax.tree.map(lambda q: q[:ng], v)
+              for k, v in p["groups"].items()}
+    return {**p, "groups": groups}
+
+
+def draft_cache(cfg, cache, n):
+    ng = _n_draft_groups(cfg, n)
+    layers = {k: jax.tree.map(lambda q: q[:ng], v)
+              for k, v in cache["layers"].items()}
+    return {"layers": layers, "pos": cache["pos"]}
+
+
+def draft_cache_merge(cfg, full, sub, n):
+    ng = _n_draft_groups(cfg, n)
+    layers = {k: jax.tree.map(lambda f, s: f.at[:ng].set(s), v,
+                              sub["layers"][k])
+              for k, v in full["layers"].items()}
+    return {"layers": layers, "pos": sub["pos"]}
 
 
 def decode_step(cfg, p, cache, batch):
@@ -215,9 +300,19 @@ def prefill(cfg, p, cache, batch):
                     cfg, group_params[f"pos{pos}"]["attn"], xn, positions,
                     return_kv=True)
                 pad = S - l
-                new_cache[f"pos{pos}"] = {
-                    "k": jnp.pad(kv["k"], ((0, 0), (0, pad), (0, 0))),
-                    "v": jnp.pad(kv["v"], ((0, 0), (0, pad), (0, 0)))}
+
+                def _p(t):
+                    return jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+
+                if cfg.kv_cache_dtype == "int8":
+                    kq, ks = blocks._kv_quant(kv["k"])
+                    vq, vs = blocks._kv_quant(kv["v"])
+                    new_cache[f"pos{pos}"] = {
+                        "k": _p(kq), "v": _p(vq),
+                        "k_scale": _p(ks), "v_scale": _p(vs)}
+                else:
+                    new_cache[f"pos{pos}"] = {"k": _p(kv["k"]),
+                                              "v": _p(kv["v"])}
             else:
                 hh, ns = mamba.mamba_block_apply(
                     cfg, group_params[f"pos{pos}"]["mamba"], xn)

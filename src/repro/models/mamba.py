@@ -153,6 +153,62 @@ def mamba_block_step(cfg, p, x_t, state):
     return out, {**write_state_h(cfg, h), "conv": new_conv}
 
 
+def _conv_tail_states(conv_state, x_in):
+    """Per-step conv tails over a K-token window.
+
+    conv_state (b, k-1, di) entering tail; x_in (b, K, di) the window's
+    raw conv inputs.  Returns (b, K, k-1, di): entry t is exactly the
+    ``new_state`` ops.causal_conv1d would return after consuming tokens
+    0..t — so rolling back to step t restores the same conv tail a
+    per-token decode would have."""
+    k1 = conv_state.shape[1]
+    K = x_in.shape[1]
+    full = jnp.concatenate([conv_state, x_in.astype(conv_state.dtype)],
+                           axis=1)
+    idx = jnp.arange(K)[:, None] + jnp.arange(k1)[None, :] + 1
+    return full[:, idx]
+
+
+def mamba_block_verify(cfg, p, x, state):
+    """K-token verify pass (speculative decode): semantically K chained
+    ``mamba_block_step`` calls, but the block front-end (projections,
+    conv, dt/B/C) runs over the whole K-token window at once and only
+    the SSM recurrence is sequential — a K-step micro-scan
+    (core.selective_scan.decode_scan) that reuses the fused decode-step
+    kernel per step and returns every intermediate state.
+
+    x (b, K, d_model); state as in mamba_block_step.  Returns
+    (out (b, K, d_model), states) where ``states`` leaves are stacked
+    per step on axis 1: states[t] is the block state after consuming
+    token t (spec-decode rollback selects one index).
+    """
+    from repro.core.selective_scan import (decode_scan, decode_scan_q,
+                                           resolve_step_impl)
+    silu = approx.get_silu(cfg.silu_impl)
+    x_in, z = _project(cfg, p, x)                # (b,K,di)
+    x_c, _ = ops.causal_conv1d(
+        x_in, p["conv_w"], p["conv_b"], x_prev=state["conv"],
+        impl=cfg.conv_impl)
+    conv_all = _conv_tail_states(state["conv"], x_in)
+    x_a = silu(x_c)
+    dt, B, C = _ssm_inputs(cfg, p, x_a)
+    A = -jnp.exp(p["A_log"])
+    impl = resolve_step_impl(cfg.step_impl)
+    if state_quant.is_quantized(cfg.state_dtype):
+        y, hq_all, scale_all = decode_scan_q(
+            state["h"], state["h_scale"], x_a, dt, A, B, C,
+            D=p["D"], z_seq=z, state_dtype=cfg.state_dtype, impl=impl,
+            exp_impl=cfg.exp_impl, silu_impl=cfg.silu_impl)
+        out = blocks.dense(p["out_proj"], y, x.dtype)
+        return out, {"h": hq_all, "h_scale": scale_all, "conv": conv_all}
+    y, h_all = decode_scan(
+        read_state_h(cfg, state), x_a, dt, A, B, C, D=p["D"], z_seq=z,
+        impl=impl, exp_impl=cfg.exp_impl, silu_impl=cfg.silu_impl)
+    out = blocks.dense(p["out_proj"], y, x.dtype)
+    storage = state_quant.storage_dtype(cfg.state_dtype)
+    return out, {"h": h_all.astype(storage), "conv": conv_all}
+
+
 def mamba_state_init(cfg, batch, dtype):
     di, n, k = cfg.d_inner, cfg.d_state, cfg.d_conv
     out = {

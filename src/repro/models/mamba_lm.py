@@ -108,6 +108,35 @@ def _cache_from_stacked(cfg, stacked, pos):
     return {"h": nh, "conv": nc, "pos": pos}
 
 
+# ---------------------------------------------------------------------------
+# Self-speculative draft views: the draft model is the target's first
+# ``n`` layers (embed / final norm / unembed shared), so a draft needs no
+# second parameter set — just a slice of the stacked layer leaves, and a
+# matching slice of the pooled cache that merges back leaf-for-leaf.
+# ---------------------------------------------------------------------------
+
+def draft_params(cfg, p, n):
+    """First-``n``-layers view of a (plain-value) param tree."""
+    return {**p, "layers": jax.tree.map(lambda q: q[:n], p["layers"])}
+
+
+def draft_cache(cfg, cache, n):
+    """First-``n``-layers view of a pooled cache (pos shared)."""
+    keys = ["h", "conv"] + (["h_scale"] if _quantized(cfg) else [])
+    out = {k: cache[k][:n] for k in keys}
+    out["pos"] = cache["pos"]
+    return out
+
+
+def draft_cache_merge(cfg, full, sub, n):
+    """Write a draft-updated first-``n``-layers cache back into the full
+    cache (the inverse of draft_cache; layers >= n untouched)."""
+    keys = ["h", "conv"] + (["h_scale"] if _quantized(cfg) else [])
+    out = {k: full[k].at[:n].set(sub[k]) for k in keys}
+    out["pos"] = sub["pos"]
+    return out
+
+
 def decode_step(cfg, p, cache, batch):
     dtype = jnp.dtype(cfg.dtype)
     h = blocks.embed_apply(cfg, p["embed"], batch["tokens"], dtype)

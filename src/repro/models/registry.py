@@ -114,6 +114,80 @@ def decode_step(cfg, params, cache, batch):
     return family(cfg).decode_step(cfg, params, cache, batch)
 
 
+# ---------------------------------------------------------------------------
+# Speculative decode support: K-step verify micro-scan, per-slot step
+# selection (rollback), and self-speculative draft views.
+# ---------------------------------------------------------------------------
+
+def verify_scan(cfg, params, cache, tokens, active=None):
+    """Chain ``decode_step`` over K candidate tokens — the spec-decode
+    verify micro-scan.  Each scan step is the SAME per-token dispatch
+    the serving burst runs (one fused kernel launch per layer under
+    step_impl="fused", identical shapes), which is what makes greedy
+    speculative decode token-identical to plain greedy decode.
+
+    tokens (b, K) int32; ``active`` (b,) bool freezes inactive slots
+    every step (as the engine's burst does).  Returns
+    (logits (b, K, V), caches) where ``caches`` is the cache pytree
+    with a leading per-step axis: caches[t] = cache after consuming
+    tokens[:, t]."""
+    def step(c, tok_t):
+        logits, c2 = decode_step(cfg, params, c, {"tokens": tok_t})
+        if active is not None:
+            c2 = mask_slots(cfg, c, c2, active)
+        return c2, (logits[:, -1, :], c2)
+
+    xs = jnp.moveaxis(tokens[..., None], 1, 0)         # (K, b, 1)
+    _, (logits, caches) = jax.lax.scan(step, cache, xs)
+    return jnp.moveaxis(logits, 0, 1), caches
+
+
+def select_step(cfg, stacked_cache, step_idx):
+    """Per-slot rollback gather: from a ``verify_scan`` cache stack
+    (leading per-step axis, length K) pick step ``step_idx[s]`` for
+    slot ``s``.  Returns a normal cache pytree — the state each slot
+    would have had had it decoded exactly its accepted prefix."""
+    def pick(ax, leaf):
+        m = jnp.moveaxis(leaf, ax + 1, 0)              # (slots, K, ...)
+        sel = jax.vmap(lambda row, i: row[i])(m, step_idx)
+        return jnp.moveaxis(sel, 0, ax)
+    return jax.tree.map(pick, cache_slot_axes(cfg), stacked_cache)
+
+
+def supports_draft(cfg) -> bool:
+    return hasattr(family(cfg), "draft_params")
+
+
+def draft_config(cfg, n_layers: int):
+    """Model config of the first-``n_layers`` self-speculative draft
+    (embed/norm/unembed shared with the target).  Families validate
+    their own granularity (jamba: whole groups)."""
+    import dataclasses
+    if not supports_draft(cfg):
+        raise NotImplementedError(
+            f"family {cfg.family!r} has no self-speculative draft view")
+    if cfg.family == "jamba":
+        jamba._n_draft_groups(cfg, n_layers)           # validates
+    elif not (0 < n_layers <= cfg.n_layers):
+        raise ValueError(
+            f"draft layers must be in (0, {cfg.n_layers}]; got {n_layers}")
+    return dataclasses.replace(cfg, n_layers=n_layers)
+
+
+def draft_params(cfg, params, n_layers: int):
+    """First-``n_layers`` view of a plain-value param tree."""
+    return family(cfg).draft_params(cfg, params, n_layers)
+
+
+def draft_cache(cfg, cache, n_layers: int):
+    return family(cfg).draft_cache(cfg, cache, n_layers)
+
+
+def draft_cache_merge(cfg, full_cache, sub_cache, n_layers: int):
+    return family(cfg).draft_cache_merge(cfg, full_cache, sub_cache,
+                                         n_layers)
+
+
 def prefill(cfg, params, cache, batch):
     """Full-seq forward that fills the decode cache (serving entry)."""
     return family(cfg).prefill(cfg, params, cache, batch)

@@ -221,6 +221,70 @@ def mlstm_block_step(cfg, p, x_t, state):
     return out, new_state
 
 
+def mlstm_block_verify(cfg, p, x, state):
+    """K-token verify pass (speculative decode): semantically K chained
+    ``mlstm_block_step`` calls — front-end (norm, up-proj, conv, q/k/v,
+    gates) batched over the K-token window, recurrence as a K-step scan
+    of the same ``_mlstm_cell`` the decode step uses, every
+    intermediate (C, n, m) returned for rollback.
+
+    Returns (out (b, K, d), states) with state leaves stacked per step
+    on axis 1 (states[t] = block state after consuming token t)."""
+    from repro.models.mamba import _conv_tail_states
+    d, nh = cfg.d_model, cfg.n_heads
+    di = 2 * d
+    dh = di // nh
+    b, K, _ = x.shape
+    silu = approx.get_silu(cfg.silu_impl)
+    q, k, v, ig, fg, g, _ = _mlstm_inputs(cfg, p, x, state["conv"])
+    conv_all = _conv_tail_states(state["conv"], v.reshape(b, K, di))
+    quant = state_quant.is_quantized(cfg.state_dtype)
+
+    def step(carry, inp):
+        q_t, k_t, v_t, i_t, f_t = inp
+        if quant:
+            Cq, Cs, n, m = carry
+            C = state_quant.dequantize_mat(Cq, Cs)
+        else:
+            C_st, n, m = carry
+            C = C_st.astype(jnp.float32)
+        (C_new, n_new, m_new), h_t = _mlstm_cell(
+            C, n, m, q_t, k_t, v_t, i_t, f_t, dh)
+        if quant:
+            Cq_new, Cs_new = state_quant.quantize_mat(
+                C_new, cfg.state_dtype, prev_scale=Cs)
+            carry = (Cq_new, Cs_new, n_new, m_new)
+        else:
+            carry = (C_new.astype(
+                state_quant.storage_dtype(cfg.state_dtype)),
+                n_new, m_new)
+        return carry, (carry, h_t)
+
+    qf, kf, vf = (jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+                  for t in (q, k, v))
+    igs, fgs = jnp.moveaxis(ig, 1, 0), jnp.moveaxis(fg, 1, 0)
+    if quant:
+        carry0 = (state["C"], state["C_scale"], state["n"], state["m"])
+    else:
+        carry0 = (state["C"], state["n"], state["m"])
+    _, (stacked, hs) = jax.lax.scan(step, carry0, (qf, kf, vf, igs, fgs))
+    h = jnp.moveaxis(hs, 0, 1)                        # (b,K,nh,dh)
+    hf = blocks.group_norm(h.reshape(b, K, di), p["gn_scale"], nh)
+    out = blocks.dense(p["down"], hf * silu(g), x.dtype)
+    if quant:
+        Cq_all, Cs_all, n_all, m_all = stacked
+        states = {"C": jnp.moveaxis(Cq_all, 0, 1),
+                  "C_scale": jnp.moveaxis(Cs_all, 0, 1),
+                  "n": jnp.moveaxis(n_all, 0, 1),
+                  "m": jnp.moveaxis(m_all, 0, 1), "conv": conv_all}
+    else:
+        C_all, n_all, m_all = stacked
+        states = {"C": jnp.moveaxis(C_all, 0, 1),
+                  "n": jnp.moveaxis(n_all, 0, 1),
+                  "m": jnp.moveaxis(m_all, 0, 1), "conv": conv_all}
+    return out, states
+
+
 def _mlstm_state(cfg, batch):
     d, nh = cfg.d_model, cfg.n_heads
     di = 2 * d
@@ -371,6 +435,36 @@ def slstm_block_step(cfg, p, x_t, state):
     return out, {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
 
 
+def slstm_block_verify(cfg, p, x, state):
+    """K-token verify pass: K chained ``slstm_block_step`` calls with the
+    input-gate projections batched over the window; the hidden-state
+    recurrence (R h_{t-1}) is inherently sequential and runs in the
+    scan.  Returns (out (b, K, d), states) with per-step (c, n, h, m)
+    stacked on axis 1."""
+    d, nh = cfg.d_model, cfg.n_heads
+    dh = d // nh
+    b, K, _ = x.shape
+    xn = blocks.apply_norm(cfg, p["norm"], x)
+    gates_x = blocks.dense(p["wx"], xn, x.dtype)          # (b,K,4d)
+
+    def step(carry, g_t):
+        c, n, h, m = carry
+        rec = jnp.einsum("gher,bhe->bghr", p["r"], h)
+        g = (g_t.reshape(b, 4, nh, dh) + rec
+             + p["b"].reshape(4, nh, dh))
+        c_new, n_new, h_new, m_new = _slstm_cell(c, n, m, g)
+        carry = (c_new, n_new, h_new, m_new)
+        return carry, carry
+
+    gxs = jnp.moveaxis(gates_x.astype(jnp.float32), 1, 0)
+    _, stacked = jax.lax.scan(
+        step, (state["c"], state["n"], state["h"], state["m"]), gxs)
+    c_all, n_all, h_all, m_all = (jnp.moveaxis(t, 0, 1) for t in stacked)
+    hf = blocks.group_norm(h_all.reshape(b, K, d), p["gn_scale"], nh)
+    out = blocks.dense(p["out"], hf, x.dtype)
+    return out, {"c": c_all, "n": n_all, "h": h_all, "m": m_all}
+
+
 def _slstm_state(cfg, batch):
     d, nh = cfg.d_model, cfg.n_heads
     dh = d // nh
@@ -449,6 +543,25 @@ def cache_slot_axes(cfg):
         else:
             layers.append({"mlstm": {k: 0 for k in mlstm_keys}})
     return {"layers": layers, "pos": 0}
+
+
+# ---------------------------------------------------------------------------
+# Self-speculative draft views (layers is a python list, so a draft is a
+# list slice; the mLSTM/sLSTM interleave pattern of the first n layers
+# is preserved because _is_slstm is index-based).
+# ---------------------------------------------------------------------------
+
+def draft_params(cfg, p, n):
+    return {**p, "layers": p["layers"][:n]}
+
+
+def draft_cache(cfg, cache, n):
+    return {"layers": cache["layers"][:n], "pos": cache["pos"]}
+
+
+def draft_cache_merge(cfg, full, sub, n):
+    return {"layers": list(sub["layers"]) + list(full["layers"][n:]),
+            "pos": sub["pos"]}
 
 
 def decode_step(cfg, p, cache, batch):

@@ -17,4 +17,10 @@ Serving request lifecycle (engine.py + state_pool.py):
                 admitted on the same step.  Throughput/latency counters
                 (metrics.ServeStats) track useful tokens, occupancy,
                 TTFT and request latency throughout.
+
+With EngineConfig.draft (spec_decode.py), step 3 becomes a speculative
+pass instead: fork the slot state into a leased scratch slot, draft K
+cheap tokens there, verify them with one batched target micro-scan,
+and roll the slot back to its accepted prefix — 1..K+1 tokens per
+target pass, token-identical to plain decode under greedy sampling.
 """

@@ -24,6 +24,15 @@ across Engine instances per config; the prefill compiles once per
 distinct prompt length (callers that care should quantize prompt
 lengths; the benchmark draws from a small set).
 
+Speculative decoding (``EngineConfig.draft``): each scheduler iteration
+becomes one fork -> K-draft -> batched-verify -> rollback pass
+(runtime/spec_decode.py) instead of a token-by-token burst.  The pool
+gains one scratch slot per live slot for draft forks; greedy spec
+decode is token-identical to plain greedy decode (speculation changes
+throughput, never tokens), and each target pass emits 1..K+1 tokens
+per slot — accepted-tokens-per-target-pass in ServeStats is the
+speedup proxy.
+
 Caveat: MoE families route tokens across the batch through shared expert
 capacity, so slot composition can perturb logits at tight
 capacity_factor.  Pure Mamba / dense attention families are exactly
@@ -43,17 +52,9 @@ import numpy as np
 
 from repro.models import registry
 from repro.runtime import metrics as metrics_lib
+from repro.runtime.spec_decode import DraftConfig, SpecDecoder
+from repro.runtime.spec_decode import sample_last as _sample_last
 from repro.runtime.state_pool import SlotStatePool
-
-
-def _sample_last(logits, temperature: float, key):
-    """(b, L, V) logits -> (b, 1) int32 tokens off the last position.
-    Runs inside the jit'd step functions (temperature is trace-static)."""
-    last = logits.astype(jnp.float32)[:, -1:, :]
-    if temperature <= 0:
-        return jnp.argmax(last, axis=-1).astype(jnp.int32)
-    return jax.random.categorical(
-        key, last / temperature, axis=-1).astype(jnp.int32)
 
 
 # Per-config jit'd step functions, shared across Engine instances (cfg is
@@ -105,6 +106,19 @@ class EngineConfig:
     # multiply slot capacity ~4x (per-slot absmax scales ride along in
     # the cache pytree); None = keep the model config's setting.
     state_dtype: Optional[str] = None
+    # override for the attention KV-cache storage dtype
+    # (cfg.kv_cache_dtype): "model" | "int8".  Composes with
+    # state_dtype: on jamba, state_dtype covers the recurrent blocks
+    # and kv_cache_dtype the per-position KV strips (which dominate
+    # slot bytes at long max_seq).  None = keep the model config's.
+    kv_cache_dtype: Optional[str] = None
+    # speculative decoding: None = plain decode bursts; a DraftConfig
+    # turns every decode step into a fork -> K-draft -> batched-verify
+    # -> rollback pass emitting 1..K+1 tokens per slot per target pass.
+    # Greedy (temperature=0) spec decode is token-identical to plain
+    # greedy decode; sampled mode preserves the target distribution via
+    # rejection sampling.  The pool grows n_slots scratch slots.
+    draft: Optional[DraftConfig] = None
 
 
 @dataclasses.dataclass
@@ -120,6 +134,12 @@ class Request:
     t_admit: Optional[float] = None       # prefill start
     t_first: Optional[float] = None       # first token out (TTFT anchor)
     t_done: Optional[float] = None
+    # per-slot speculative-depth bookkeeping (spec decode only): how
+    # many target passes this request's slot took and how many drafted
+    # tokens were accepted — accepted/passes is the request's realized
+    # speculative depth.
+    spec_passes: int = 0
+    spec_accepted: int = 0
 
     @property
     def finished(self) -> bool:
@@ -141,10 +161,20 @@ class Engine:
             # same reasoning: a quantized-state engine and an f32 engine
             # have different cache pytrees and must not share compiles
             cfg = dataclasses.replace(cfg, state_dtype=ecfg.state_dtype)
+        if ecfg.kv_cache_dtype is not None:
+            cfg = dataclasses.replace(cfg,
+                                      kv_cache_dtype=ecfg.kv_cache_dtype)
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
-        self.pool = SlotStatePool(cfg, ecfg.n_slots, ecfg.max_seq)
+        # one scratch slot per live slot: every live slot can fork a
+        # draft in the same speculative pass
+        n_scratch = ecfg.n_slots if ecfg.draft is not None else 0
+        self.pool = SlotStatePool(cfg, ecfg.n_slots, ecfg.max_seq,
+                                  n_scratch=n_scratch)
+        self._spec = (SpecDecoder(cfg, params, ecfg.draft,
+                                  float(ecfg.temperature))
+                      if ecfg.draft is not None else None)
         self.stats = metrics_lib.ServeStats()
         self.logger = logger
         self._now = clock
@@ -154,7 +184,7 @@ class Engine:
         self._pending: list[Request] = []      # arrival-gated, sorted
         self._ready: collections.deque[Request] = collections.deque()
         self._slot_req: list[Optional[Request]] = [None] * ecfg.n_slots
-        self._next_tok = np.zeros((ecfg.n_slots, 1), np.int32)
+        self._next_tok = np.zeros((self.pool.n_total, 1), np.int32)
         self._finished: list[Request] = []
         self._next_id = 0
 
@@ -283,15 +313,107 @@ class Engine:
                                  dt=self._now() - t0,
                                  n_steps=n_steps, n_tokens=n_appended)
 
+    # ------------------------------------------------------------------
+    # Speculative decoding (EngineConfig.draft)
+    # ------------------------------------------------------------------
+
+    def _spec_pass(self) -> None:
+        """One fork -> K-draft -> batched-verify -> rollback pass over
+        the live slots, emitting 1..K+1 tokens per slot per target
+        pass.  Device work chains across fork/draft/verify; the host
+        syncs once per pass for accept/stop bookkeeping (vs once per
+        token for plain decode — the sync amortization IS part of the
+        spec win).  Scratch leases are released even if a jit raises
+        mid-pass (the pool-leak tests cover an abandoned burst)."""
+        spec = self._spec
+        active = self.pool.active_slots()
+        # clamp the draft window to the shortest remaining token budget:
+        # a slot about to hit max_new would have its whole window
+        # trimmed anyway, so drafting past it is pure wasted dispatch
+        # (EOS stays an uncertain event and is still trimmed host-side)
+        remaining = min(self._slot_req[s].max_new
+                        - len(self._slot_req[s].tokens) for s in active)
+        k_eff = min(spec.k, remaining - 1)
+        if k_eff < 1:
+            # every active slot needs exactly one more token: plain
+            # decode burst (its own burst-length logic handles this)
+            self._decode_burst()
+            return
+        t0 = self._now()
+        leases: list[int] = []
+        try:
+            for _ in active:
+                sc = self.pool.lease_scratch()
+                assert sc is not None        # n_scratch == n_slots
+                leases.append(sc)
+            self.pool.fork(active, leases)
+            total = self.pool.n_total
+            toks = np.zeros((total, 1), np.int32)
+            toks[leases, 0] = self._next_tok[active, 0]
+            scratch_mask = np.zeros((total,), bool)
+            scratch_mask[leases] = True
+            keys = []
+            for _ in range(k_eff):
+                self._key, k = jax.random.split(self._key)
+                keys.append(k)
+            cache, d_toks, d_logits = spec.propose(
+                self.pool.cache, jnp.asarray(toks),
+                jnp.asarray(scratch_mask), keys)
+            # proposals were drafted at scratch rows; the verify wants
+            # them at their live slots' rows
+            perm = np.arange(total)
+            perm[active] = leases
+            perm = jnp.asarray(perm)
+            self._key, vk = jax.random.split(self._key)
+            emit, n_acc, _, snap = spec.verify(
+                self.params, cache, jnp.asarray(self._next_tok),
+                d_toks[:, perm], d_logits[:, perm],
+                jnp.asarray(self.pool.active_mask()), vk)
+            # the rollback: every live slot's row of ``snap`` is the
+            # state after exactly its accepted prefix
+            self.pool.cache = snap
+            emit_h, n_acc_h = np.asarray(emit), np.asarray(n_acc)
+        finally:
+            for sc in leases:
+                self.pool.release_scratch(sc)
+        n_appended = 0
+        n_accepted = 0
+        for slot in active:
+            req = self._slot_req[slot]
+            n_emit = int(n_acc_h[slot]) + 1
+            n_accepted += n_emit - 1
+            req.spec_passes += 1
+            req.spec_accepted += n_emit - 1
+            for t in range(n_emit):
+                tok = int(emit_h[t, slot])
+                req.tokens.append(tok)
+                n_appended += 1
+                self._next_tok[slot, 0] = tok
+                if self._hit_stop(req):
+                    self._finish(slot)
+                    break                 # trim overshoot past EOS/budget
+        self.stats.record_decode(n_active=len(active),
+                                 n_slots=self.ecfg.n_slots,
+                                 dt=self._now() - t0,
+                                 n_steps=k_eff + 1, n_tokens=n_appended)
+        self.stats.record_spec(n_active=len(active),
+                               n_drafted=k_eff * len(active),
+                               n_accepted=n_accepted,
+                               n_emitted=n_appended)
+
     def step(self) -> bool:
         """One scheduler iteration: admit into free slots, then one decode
-        burst.  Returns False when there was nothing to do."""
+        burst (or one speculative pass).  Returns False when there was
+        nothing to do."""
         did = False
         while self._ready and self.pool.n_free:
             self._admit(self._ready.popleft())
             did = True
         if self.pool.n_active:
-            self._decode_burst()
+            if self._spec is not None:
+                self._spec_pass()
+            else:
+                self._decode_burst()
             did = True
         return did
 

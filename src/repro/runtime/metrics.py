@@ -64,6 +64,13 @@ class ServeStats:
         self.slot_steps = 0            # n_slots summed over decode steps
         self.active_steps = 0          # active slots summed (occupancy)
         self.n_requests = 0
+        # speculative decoding (deterministic counters — the bench gate
+        # diffs these, never wall-clock)
+        self.spec_passes = 0           # target verify passes
+        self.spec_slot_passes = 0      # sum of active slots over passes
+        self.spec_drafted = 0          # draft tokens proposed
+        self.spec_accepted = 0         # draft tokens accepted
+        self.spec_emitted = 0          # tokens delivered by spec passes
         self._ttft: list[float] = []
         self._latency: list[float] = []
         self._t0: Optional[float] = None
@@ -95,6 +102,18 @@ class ServeStats:
         self.active_steps += n_active * n_steps
         self.slot_steps += n_slots * n_steps
 
+    def record_spec(self, n_active: int, n_drafted: int, n_accepted: int,
+                    n_emitted: int):
+        """One speculative pass: ``n_drafted`` proposals over
+        ``n_active`` slots, ``n_accepted`` of them accepted,
+        ``n_emitted`` tokens delivered (accepted + per-slot correction/
+        bonus tokens, after EOS/budget trim)."""
+        self.spec_passes += 1
+        self.spec_slot_passes += n_active
+        self.spec_drafted += n_drafted
+        self.spec_accepted += n_accepted
+        self.spec_emitted += n_emitted
+
     def record_request(self, ttft: float, latency: float):
         self.n_requests += 1
         self._ttft.append(ttft)
@@ -118,6 +137,16 @@ class ServeStats:
             "ttft_p95_s": _percentile(ttft, 0.95),
             "latency_mean_s": sum(lat) / len(lat) if lat else 0.0,
             "latency_p95_s": _percentile(lat, 0.95),
+            # speculative decode: tokens delivered per slot per target
+            # pass (1.0 = plain decode; upper bound draft k + 1) and
+            # the draft-token acceptance fraction
+            "spec_target_passes": self.spec_passes,
+            "spec_accepted_per_pass": (
+                self.spec_emitted / self.spec_slot_passes
+                if self.spec_slot_passes else 0.0),
+            "spec_acceptance_rate": (
+                self.spec_accepted / self.spec_drafted
+                if self.spec_drafted else 0.0),
         }
 
 

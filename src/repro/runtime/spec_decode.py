@@ -1,0 +1,271 @@
+"""Speculative decoding over the slot state pool.
+
+Because an SSM's whole decode state is a fixed O(d_inner * d_state)
+block per layer, a draft fork is ONE gather+scatter of pool slots and a
+rollback is one per-slot select — no tree attention, no ragged KV
+bookkeeping.  That is the structural advantage this module exploits
+(attention-based spec decode spends most of its complexity budget
+exactly there), and the part eMamba/FastMamba leave on the table by
+targeting single-stream edge inference.
+
+One speculative pass over the live slots:
+
+  1. FORK    — lease one scratch slot per live slot and fork its pooled
+               state into it (``SlotStatePool.fork``: payload + absmax
+               scales move in the same dispatch).
+  2. DRAFT   — run K cheap decode steps on the scratch slots with the
+               self-speculative draft model: the target's first
+               ``DraftConfig.layers`` layers (embed / final norm /
+               unembed shared), optionally with a different step_impl
+               ("unfused-cheap").  Live slots are mask-frozen.
+  3. VERIFY  — one jit'd target pass: a (K+1)-step micro-scan chaining
+               the SAME per-token ``decode_step`` dispatch the normal
+               burst runs (fused kernel per layer per step) over
+               [pending token, draft_1..draft_K], keeping every
+               intermediate cache.
+  4. ACCEPT  — standard speculative rejection sampling with the greedy
+               shortcut at temperature 0 (accept while the draft equals
+               the target's argmax; the first mismatch emits the
+               target's own token), so the emitted stream is exactly
+               the target model's — speculation changes throughput,
+               never tokens.
+  5. ROLLBACK— per-slot select of the cache after each slot's accepted
+               prefix (``registry.select_step``) — the "single scatter
+               of the last-accepted state back into the live slot".
+
+Exactness contract: the verify micro-scan evaluates the target at the
+same shapes and through the same jitted per-token step as plain decode,
+so greedy spec decode is token-identical to plain greedy decode (gated
+per family / state_dtype / step_impl in tests/test_spec_decode.py).
+Each target pass emits between 1 and K+1 tokens per slot; the
+accepted-tokens-per-target-pass counter in ServeStats is the speedup
+proxy the benchmarks gate on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import registry
+
+
+def sample_last(logits, temperature: float, key):
+    """(b, L, V) logits -> (b, 1) int32 tokens off the last position.
+    Runs inside the jit'd step functions (temperature is trace-static).
+    Shared with the engine so draft, verify, and plain decode sample
+    identically."""
+    last = logits.astype(jnp.float32)[:, -1:, :]
+    if temperature <= 0:
+        return jnp.argmax(last, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, last / temperature, axis=-1).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class DraftConfig:
+    """Self-speculative draft settings (``EngineConfig.draft``).
+
+    k: draft depth — tokens proposed per target pass.  Each pass emits
+       between 1 and k+1 tokens, so k bounds the per-pass win.
+    layers: draft depth in model layers; 0 = full depth (the draft IS
+       the target: every proposal is accepted — useful for gating the
+       accounting deterministically, pointless for speed).  Jamba
+       requires a multiple of its group period.
+    step_impl: override for the draft's per-token step routing (e.g.
+       "xla" for an unfused-cheap draft while the target runs fused);
+       None inherits the target's.
+    """
+    k: int = 4
+    layers: int = 0
+    step_impl: Optional[str] = None
+
+
+def default_shallow_layers(cfg) -> int:
+    """A ~half-depth draft rounded to the family's draft granularity.
+
+    Jamba drafts whole groups (``attn_every`` layers each), so its
+    depth must be a group multiple — a config with a single group (the
+    smoke config) degrades to full depth.  Other families draft any
+    layer prefix."""
+    if cfg.family == "jamba":
+        period = cfg.attn_every or 8
+        groups = cfg.n_layers // period
+        return max(1, groups // 2) * period
+    return max(1, cfg.n_layers // 2)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance core (pure; property-tested in tests/test_spec_decode.py)
+# ---------------------------------------------------------------------------
+
+def accept_tokens(draft_toks, target_logits, temperature: float,
+                  draft_logits=None, key=None):
+    """Speculative acceptance over one verified window.
+
+    draft_toks (K, b) int32 — the draft's proposals d_1..d_K.
+    target_logits (K+1, b, V) — the target's logits from the verify
+      micro-scan: step i consumed [pending, d_1..d_K][i].
+    draft_logits (K, b, V) — the draft's logits at each proposal;
+      required when temperature > 0 (rejection-sampling ratio).
+
+    Returns (emit (K+1, b) int32, n_acc (b,), pending (b,)):
+      * n_acc[s] = j, the accepted draft prefix length (0..K);
+      * emit[:j+1, s] is the emitted stream — the j accepted drafts
+        plus one target-sampled token at the rejection point (or the
+        bonus token when all K were accepted); entries past j are
+        meaningless;
+      * pending[s] = emit[j, s], the token whose state update has not
+        been applied yet (feeds the next pass / burst).
+
+    Temperature 0 takes the greedy shortcut: accept while the draft
+    matches the target argmax.  Temperature > 0 is standard speculative
+    rejection sampling (accept w.p. min(1, p_t/p_d); on rejection,
+    resample from the normalized residual max(p_t - p_d, 0)), which
+    leaves the emitted marginal exactly the target distribution.
+    """
+    K = draft_toks.shape[0]
+    if temperature <= 0:
+        tgt = jnp.argmax(target_logits.astype(jnp.float32),
+                         axis=-1).astype(jnp.int32)         # (K+1, b)
+        ok = (draft_toks == tgt[:K])
+        acc = jnp.cumprod(ok.astype(jnp.int32), axis=0)      # (K, b)
+        n_acc = acc.sum(axis=0)                              # (b,)
+        # greedy emit: accepted positions satisfy d_i == argmax_i, and
+        # the rejection/bonus token IS the argmax — so emit = argmax
+        emit = tgt
+        pending = jnp.take_along_axis(emit, n_acc[None], axis=0)[0]
+        return emit, n_acc, pending
+
+    if draft_logits is None or key is None:
+        raise ValueError("sampled acceptance needs draft_logits and key")
+    k_u, k_res, k_bonus = jax.random.split(key, 3)
+    logp_t = jax.nn.log_softmax(
+        target_logits[:K].astype(jnp.float32) / temperature, axis=-1)
+    logp_d = jax.nn.log_softmax(
+        draft_logits.astype(jnp.float32) / temperature, axis=-1)
+    d = draft_toks[..., None]
+    lp_t = jnp.take_along_axis(logp_t, d, axis=-1)[..., 0]   # (K, b)
+    lp_d = jnp.take_along_axis(logp_d, d, axis=-1)[..., 0]
+    u = jax.random.uniform(k_u, draft_toks.shape, minval=1e-20)
+    ok = jnp.log(u) < (lp_t - lp_d)
+    acc = jnp.cumprod(ok.astype(jnp.int32), axis=0)
+    n_acc = acc.sum(axis=0)
+    # residual resample at the rejection point: max(p_t - p_d, 0),
+    # renormalized; degenerate (p_t == p_d exactly) falls back to p_t
+    res = jnp.maximum(jnp.exp(logp_t) - jnp.exp(logp_d), 0.0)
+    norm = res.sum(axis=-1, keepdims=True)
+    safe = jnp.where(norm > 0, res / jnp.maximum(norm, 1e-30),
+                     jnp.exp(logp_t))
+    corr = jax.random.categorical(
+        k_res, jnp.log(safe + 1e-30), axis=-1).astype(jnp.int32)
+    bonus = jax.random.categorical(
+        k_bonus,
+        target_logits[K].astype(jnp.float32) / temperature,
+        axis=-1).astype(jnp.int32)[None]                     # (1, b)
+    emit = jnp.concatenate(
+        [jnp.where(ok, draft_toks, corr), bonus], axis=0)    # (K+1, b)
+    pending = jnp.take_along_axis(emit, n_acc[None], axis=0)[0]
+    return emit, n_acc, pending
+
+
+# ---------------------------------------------------------------------------
+# Jit'd draft / verify passes (shared per config, as in engine.py)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _jit_draft_step(cfg, dcfg, n_layers: int, temperature: float):
+    """One draft decode step over the pool: slice the first-n-layers
+    cache view, run the draft model's decode_step, merge the updated
+    layers back, freeze everything but the scratch slots, sample."""
+    full = n_layers == cfg.n_layers and dcfg == cfg
+
+    def _fn(pd, cache, toks, scratch_mask, key):
+        cd = cache if full else registry.draft_cache(cfg, cache, n_layers)
+        logits, cd2 = registry.decode_step(dcfg, pd, cd, {"tokens": toks})
+        new_cache = (cd2 if full else
+                     registry.draft_cache_merge(cfg, cache, cd2, n_layers))
+        new_cache = registry.mask_slots(cfg, cache, new_cache,
+                                        scratch_mask)
+        tok = sample_last(logits, temperature, key)
+        return tok, logits[:, -1, :], new_cache
+    return jax.jit(_fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_verify(cfg, temperature: float, k: int):
+    """The fused verify pass: (k+1)-step micro-scan over
+    [pending, drafts], per-step freeze of inactive slots, acceptance,
+    and the per-slot rollback select — one dispatch, one host sync."""
+    sampled = temperature > 0
+
+    def _fn(p, cache, x0, draft_toks, draft_logits, active, key):
+        # x0 (total, 1) pending tokens; draft_toks (k, total) proposals
+        inputs = jnp.concatenate(
+            [x0, jnp.moveaxis(draft_toks, 0, 1)], axis=1)    # (total, k+1)
+        logits, caches = registry.verify_scan(cfg, p, cache, inputs,
+                                              active=active)
+        tl = jnp.moveaxis(logits, 1, 0)                      # (k+1, b, V)
+        emit, n_acc, pending = accept_tokens(
+            draft_toks, tl, temperature,
+            draft_logits=draft_logits if sampled else None,
+            key=key if sampled else None)
+        snap = registry.select_step(cfg, caches, n_acc)
+        return emit, n_acc, pending, snap
+    return jax.jit(_fn)
+
+
+class SpecDecoder:
+    """Per-engine speculative-decode driver (jit caches shared per
+    config across instances, like the engine's step functions)."""
+
+    def __init__(self, cfg, params, draft: DraftConfig,
+                 temperature: float):
+        if draft.k < 1:
+            raise ValueError("draft.k must be >= 1")
+        n = draft.layers or cfg.n_layers
+        dcfg = registry.draft_config(cfg, n)
+        if draft.step_impl is not None:
+            dcfg = dataclasses.replace(dcfg, step_impl=draft.step_impl)
+        self.cfg = cfg
+        self.dcfg = dcfg
+        self.k = draft.k
+        self.n_draft = n
+        self.temperature = float(temperature)
+        # slice the draft's param view once (host-side, shares buffers)
+        self.draft_params = (params if n == cfg.n_layers
+                             else registry.draft_params(cfg, params, n))
+        self._draft = _jit_draft_step(cfg, dcfg, n, self.temperature)
+        # warm the full-depth verify jit cache entry; shallower windows
+        # (end-of-request budget clamps) compile on demand, bounded by
+        # the k distinct depths
+        _jit_verify(cfg, self.temperature, draft.k)
+
+    def propose(self, cache, toks, scratch_mask, keys):
+        """Run ``len(keys)`` draft steps (<= self.k: the engine clamps
+        the window to the shortest remaining token budget) on the
+        scratch slots.  ``toks`` (total, 1) carries the forked slots'
+        pending tokens at their scratch rows.  Returns (cache,
+        draft_toks (K, total), draft_logits (K, total, V)) — all
+        device-side, indexed by POOL row (the caller maps scratch rows
+        back to their live slots)."""
+        d_toks, d_logits = [], []
+        for key in keys:
+            toks, lg, cache = self._draft(self.draft_params, cache, toks,
+                                          scratch_mask, key)
+            d_toks.append(toks[:, 0])
+            d_logits.append(lg)
+        return cache, jnp.stack(d_toks), jnp.stack(d_logits)
+
+    def verify(self, params, cache, x0, draft_toks, draft_logits,
+               active, key):
+        """One batched target pass + acceptance + rollback select.
+        Returns (emit (K+1, total), n_acc (total,), pending (total,),
+        rolled-back cache).  K is taken from draft_toks."""
+        fn = _jit_verify(self.cfg, self.temperature,
+                         int(draft_toks.shape[0]))
+        return fn(params, cache, x0, draft_toks, draft_logits,
+                  active, key)

@@ -45,22 +45,40 @@ def _jit_mask(cfg):
     return jax.jit(lambda o, n, m: registry.mask_slots(cfg, o, n, m))
 
 
+@functools.lru_cache(maxsize=None)
+def _jit_fork(cfg):
+    """Fork = gather(src) + scatter(dst) fused into one dispatch.  Every
+    cache leaf — quantized payloads AND their absmax scales — moves in
+    the same op, so a fork can never tear payload from scale."""
+    def _fn(c, src, dst):
+        return registry.scatter_slots(
+            cfg, c, registry.gather_slots(cfg, c, src), dst)
+    return jax.jit(_fn)
+
+
 class SlotStatePool:
     """Fixed-capacity pool of per-slot decode state for one model config.
 
     ``cache`` is a plain-value pytree (Param wrappers stripped) whose every
-    leaf has ``n_slots`` entries along its slot axis.  Mutation is
-    functional: admit/evict/commit rebind ``self.cache``.
+    leaf has ``n_total = n_slots + n_scratch`` entries along its slot
+    axis: ``n_slots`` live slots (request state) plus ``n_scratch``
+    scratch slots leased transiently for speculative-decode draft forks.
+    Mutation is functional: admit/evict/commit/fork rebind ``self.cache``.
     """
 
-    def __init__(self, cfg, n_slots: int, max_seq: int, dtype=None):
+    def __init__(self, cfg, n_slots: int, max_seq: int, dtype=None,
+                 n_scratch: int = 0):
         if n_slots < 1:
             raise ValueError("n_slots must be >= 1")
+        if n_scratch < 0:
+            raise ValueError("n_scratch must be >= 0")
         self.cfg = cfg
         self.n_slots = n_slots
+        self.n_scratch = n_scratch
+        self.n_total = n_slots + n_scratch
         self.max_seq = max_seq
         self.cache = sharding.tree_values(
-            registry.init_cache(cfg, n_slots, max_seq, dtype))
+            registry.init_cache(cfg, self.n_total, max_seq, dtype))
         # the init state of a single slot — eviction scatters this (NOT
         # zeros: e.g. xLSTM stabilizer state m inits to -1e30)
         self._fresh = sharding.tree_values(
@@ -68,8 +86,13 @@ class SlotStatePool:
         self._gather_fn = _jit_gather(cfg)
         self._scatter_fn = _jit_scatter(cfg)
         self._mask_fn = _jit_mask(cfg)
+        self._fork_fn = _jit_fork(cfg)
         self._free: list[int] = list(range(n_slots))
-        self._active: list[bool] = [False] * n_slots
+        # scratch ids live in [n_slots, n_total): the ranges are disjoint
+        # by construction, so a scratch lease can never collide with a
+        # live slot no matter how admission/eviction interleave.
+        self._scratch_free: list[int] = list(range(n_slots, self.n_total))
+        self._active: list[bool] = [False] * self.n_total
 
     @property
     def fresh(self):
@@ -101,6 +124,54 @@ class SlotStatePool:
         self._active[slot] = True
         return slot
 
+    # -- scratch slots (speculative-decode draft forks) ---------------------
+    #
+    # Scratch slots are extra pool rows reserved for transient state
+    # forks: the spec-decode draft leases one, receives a fork of a live
+    # slot's state, runs draft steps on it, and releases it after the
+    # verify pass.  They are invisible to the live accounting above
+    # (alloc/evict/n_free/active_*), and their id range is disjoint from
+    # live ids, so lease/release can interleave arbitrarily with
+    # admission/eviction without collisions.
+
+    @property
+    def n_scratch_free(self) -> int:
+        return len(self._scratch_free)
+
+    def lease_scratch(self) -> Optional[int]:
+        """Reserve a scratch slot id (lowest first), or None when none
+        are free.  The leased slot's state is whatever the previous
+        lease left — callers must fork real state in before reading."""
+        if not self._scratch_free:
+            return None
+        slot = min(self._scratch_free)
+        self._scratch_free.remove(slot)
+        return slot
+
+    def release_scratch(self, slot: int) -> None:
+        """Return a leased scratch slot.  No state reset: unlike evict,
+        a scratch slot is only ever read after a fork overwrote every
+        leaf (payload and scales move together in fork), so stale state
+        cannot leak into the next lease."""
+        if not (self.n_slots <= slot < self.n_total):
+            raise ValueError(f"{slot} is not a scratch slot id")
+        if slot in self._scratch_free:
+            raise ValueError(f"scratch slot {slot} is not leased")
+        self._scratch_free.append(slot)
+
+    def fork(self, src: Sequence[int], dst: Sequence[int]) -> None:
+        """Copy per-slot state src[i] -> dst[i] in one fused
+        gather+scatter dispatch.  Quantized payloads and their absmax
+        scales are both cache leaves, so they fork together — a forked
+        draft can never observe a live slot's payload under a stale
+        scale (or vice versa)."""
+        if len(src) != len(dst):
+            raise ValueError("fork src/dst length mismatch")
+        if not src:
+            return
+        self.cache = self._fork_fn(self.cache, jnp.asarray(list(src)),
+                                   jnp.asarray(list(dst)))
+
     # -- device-state operations --------------------------------------------
 
     def admit(self, slot: int, sub_cache) -> None:
@@ -117,7 +188,7 @@ class SlotStatePool:
         absmax scales (cache leaves themselves) are included, so the
         number is the honest marginal cost of one more slot."""
         return sum(leaf.nbytes for leaf in jax.tree.leaves(self.cache)
-                   ) // self.n_slots
+                   ) // self.n_total
 
     def slots_per_gb(self) -> float:
         """Slot capacity per GB of decode-state memory (the serving

@@ -258,3 +258,89 @@ def test_engine_rejects_oversized_request():
     eng = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=16))
     with pytest.raises(ValueError):
         eng.submit(np.arange(10, dtype=np.int32), max_new=10)
+
+
+# ---------------------------------------------------------------------------
+# Scratch slots (speculative-decode forks): leases never collide with
+# live slots, and no lease survives a burst — even an aborted one
+# ---------------------------------------------------------------------------
+
+def test_scratch_lease_never_collides_with_live_slots():
+    """Interleave admission/eviction with lease/release arbitrarily:
+    live ids and leased ids must stay disjoint (the id ranges are
+    disjoint by construction — this pins that invariant), and both
+    accountings must stay exact."""
+    cfg, _ = _setup("mamba-130m")
+    pool = SlotStatePool(cfg, n_slots=3, max_seq=16, n_scratch=3)
+    rng = np.random.default_rng(21)
+    live, leased = [], []
+    for _ in range(200):
+        op = rng.integers(0, 4)
+        if op == 0:
+            slot = pool.alloc()
+            if slot is not None:
+                live.append(slot)
+        elif op == 1 and live:
+            pool.evict(live.pop(rng.integers(len(live))))
+        elif op == 2:
+            sc = pool.lease_scratch()
+            if sc is not None:
+                leased.append(sc)
+        elif op == 3 and leased:
+            pool.release_scratch(leased.pop(rng.integers(len(leased))))
+        assert not (set(live) & set(leased))
+        assert all(s < pool.n_slots for s in live)
+        assert all(pool.n_slots <= s < pool.n_total for s in leased)
+        assert pool.n_active == len(live)
+        assert pool.n_scratch_free == pool.n_scratch - len(leased)
+    # scratch ids never appear in the live active mask
+    mask = pool.active_mask()
+    assert not mask[pool.n_slots:].any()
+
+
+def test_scratch_release_rejects_bad_ids():
+    cfg, _ = _setup("mamba-130m")
+    pool = SlotStatePool(cfg, n_slots=2, max_seq=16, n_scratch=1)
+    with pytest.raises(ValueError):
+        pool.release_scratch(0)            # live id, not scratch
+    with pytest.raises(ValueError):
+        pool.release_scratch(2)            # scratch id, but not leased
+
+
+def test_no_scratch_lease_leaks_after_spec_run():
+    """Every speculative pass leases scratch slots; after run() returns
+    the pool must be fully drained: all live slots free, all scratch
+    leases returned."""
+    from repro.runtime.spec_decode import DraftConfig
+    cfg, params = _setup("mamba-130m")
+    rng = np.random.default_rng(23)
+    eng = Engine(cfg, params,
+                 EngineConfig(n_slots=2, max_seq=64,
+                              draft=DraftConfig(k=2, layers=2)))
+    for m in (5, 3, 4):
+        eng.submit(rng.integers(0, cfg.vocab, size=(4,)).astype(np.int32),
+                   max_new=m)
+    eng.run()
+    assert eng.pool.n_active == 0 and eng.pool.n_free == eng.pool.n_slots
+    assert eng.pool.n_scratch_free == eng.pool.n_scratch
+
+
+def test_abandoned_lease_released_when_burst_aborts(monkeypatch):
+    """A speculative pass that dies mid-burst (here: the verify jit
+    raises) must still return its scratch leases — an abandoned lease
+    would silently halve speculation capacity forever."""
+    from repro.runtime.spec_decode import DraftConfig
+    cfg, params = _setup("mamba-130m")
+    eng = Engine(cfg, params,
+                 EngineConfig(n_slots=2, max_seq=64,
+                              draft=DraftConfig(k=2, layers=2)))
+    eng.submit(np.arange(4, dtype=np.int32), max_new=4)
+
+    def boom(*a, **k):
+        raise RuntimeError("verify died mid-burst")
+
+    monkeypatch.setattr(eng._spec, "verify", boom)
+    with pytest.raises(RuntimeError):
+        eng.run()
+    assert eng.pool.n_scratch_free == eng.pool.n_scratch, \
+        "aborted burst leaked a scratch lease"

@@ -1,0 +1,551 @@
+"""Speculative decoding: exactness-first test harness.
+
+Spec decode is notoriously easy to get *silently* wrong — an accepted
+token that doesn't match what the target model would have emitted is a
+correctness bug that no throughput metric will ever surface.  So the
+centerpiece here is the token-identity gate: greedy speculative decode
+must produce EXACTLY the token stream of plain greedy decode, for every
+model family, quantized and full-precision state, fused and unfused
+step dispatch, with both a real (shallow, mostly-rejected) draft and
+the degenerate full-depth draft.  Around it: bitwise fork/rollback
+state hygiene, property-based acceptance-math bounds (hypothesis with
+the deterministic fallback shim), the rejection-sampling marginal, and
+parity of the block-level K-token verify wrappers against chained
+single-token steps.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # degrade to the deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro import configs
+from repro.core import selective_scan as css
+from repro.models import mamba, registry, xlstm
+from repro.parallel import sharding
+from repro.runtime.engine import Engine, EngineConfig
+from repro.runtime.spec_decode import DraftConfig, accept_tokens
+from repro.runtime.state_pool import SlotStatePool
+
+jax.config.update("jax_platform_name", "cpu")
+RNG = np.random.default_rng(17)
+
+FAMILIES = ["mamba-130m", "jamba-v0.1-52b", "xlstm-350m"]
+
+
+def _setup(name, **over):
+    cfg = configs.smoke_variant(configs.get_config(name))
+    cfg = dataclasses.replace(cfg, vocab=64, dtype="float32",
+                              capacity_factor=float(max(cfg.n_experts, 1)),
+                              **over)
+    params = sharding.tree_values(
+        registry.init_params(cfg, jax.random.key(0)))
+    return cfg, params
+
+
+def _shallow_layers(cfg):
+    """A real (strict-prefix) draft depth where the family allows one:
+    jamba's granularity is whole groups, so its smoke config (one
+    group) has no strict prefix and uses full depth — the other
+    families use half depth.  Same helper the benchmark defaults to."""
+    from repro.runtime.spec_decode import default_shallow_layers
+    return default_shallow_layers(cfg)
+
+
+def _prompts(cfg, n, seed=5):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, size=(l,)).astype(np.int32)
+            for l in rng.integers(3, 10, size=n)]
+
+
+def _tree_equal(a, b):
+    flat_a, flat_b = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(flat_a) == len(flat_b)
+    return all(bool(jnp.array_equal(x, y.astype(x.dtype)))
+               for x, y in zip(flat_a, flat_b))
+
+
+# ---------------------------------------------------------------------------
+# The flagship gate: greedy spec decode == plain greedy decode,
+# token for token, across families x state dtypes x step impls.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("step_impl", ["fused", "xla"])
+@pytest.mark.parametrize("state_dtype", ["f32", "int8"])
+@pytest.mark.parametrize("name", FAMILIES)
+def test_greedy_spec_decode_token_identical(name, state_dtype, step_impl):
+    """Speculation must change throughput, never tokens: under slot
+    churn (more requests than slots), the spec engine's per-request
+    streams equal the plain engine's exactly.  The shallow draft makes
+    real proposals that are mostly rejected on these random-weight
+    models — rejection, correction-token emission, and rollback are all
+    on the tested path, not just the accept-everything fast lane."""
+    cfg, params = _setup(name)
+    prompts = _prompts(cfg, 4)
+    base = EngineConfig(n_slots=2, max_seq=64, state_dtype=state_dtype,
+                        step_impl=step_impl)
+    plain = Engine(cfg, params, base)
+    ref = [plain.submit(p, max_new=7) for p in prompts]
+    plain.run()
+    draft = DraftConfig(k=3, layers=_shallow_layers(cfg))
+    eng = Engine(cfg, params, dataclasses.replace(base, draft=draft))
+    got = [eng.submit(p, max_new=7) for p in prompts]
+    eng.run()
+    for r_ref, r_got in zip(ref, got):
+        assert r_got.tokens == r_ref.tokens, \
+            f"req {r_got.req_id} diverged under speculative decode"
+    s = eng.stats.summary()
+    assert s["spec_target_passes"] > 0
+    assert s["spec_accepted_per_pass"] >= 1.0
+    # per-slot speculative-depth bookkeeping adds up: every (pass,
+    # active slot) is attributed to exactly one resident request
+    assert (sum(r.spec_passes for r in got)
+            == eng.stats.spec_slot_passes)
+    assert (sum(r.spec_accepted for r in got)
+            == eng.stats.spec_accepted)
+    assert all(0 <= r.spec_accepted <= r.spec_passes * draft.k
+               for r in got)
+
+
+@pytest.mark.parametrize("name", ["mamba-130m", "xlstm-350m"])
+def test_full_depth_draft_accepts_everything(name):
+    """The degenerate self-draft (draft == target) must accept every
+    proposal: accepted-tokens-per-target-pass == k+1 up to end-of-
+    request trims, and the stream still equals plain greedy decode."""
+    cfg, params = _setup(name)
+    prompts = _prompts(cfg, 2)
+    plain = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=64))
+    ref = [plain.submit(p, max_new=8) for p in prompts]
+    plain.run()
+    eng = Engine(cfg, params,
+                 EngineConfig(n_slots=2, max_seq=64,
+                              draft=DraftConfig(k=3, layers=0)))
+    got = [eng.submit(p, max_new=8) for p in prompts]
+    eng.run()
+    assert [r.tokens for r in got] == [r.tokens for r in ref]
+    s = eng.stats.summary()
+    assert s["spec_acceptance_rate"] == 1.0
+    assert s["spec_accepted_per_pass"] > 1.0
+
+
+def test_spec_decode_with_eos_eviction_and_backfill():
+    """EOS inside an accepted draft window must trim the overshoot,
+    evict, and admit queued work — and every stream still equals the
+    plain engine's (which equals the sequential reference per
+    test_engine.py)."""
+    cfg, params = _setup("mamba-130m")
+    prompts = _prompts(cfg, 3, seed=9)
+    plain = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=64))
+    r = plain.submit(prompts[0], max_new=10)
+    plain.run()
+    eos = r.tokens[2]              # fires mid-window at k=3
+    plain2 = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=64))
+    ref = [plain2.submit(prompts[0], max_new=10, eos_id=eos),
+           plain2.submit(prompts[1], max_new=4),
+           plain2.submit(prompts[2], max_new=5)]
+    plain2.run()
+    eng = Engine(cfg, params,
+                 EngineConfig(n_slots=1, max_seq=64,
+                              draft=DraftConfig(k=3, layers=2)))
+    got = [eng.submit(prompts[0], max_new=10, eos_id=eos),
+           eng.submit(prompts[1], max_new=4),
+           eng.submit(prompts[2], max_new=5)]
+    eng.run()
+    assert [g.tokens for g in got] == [r.tokens for r in ref]
+    assert got[0].tokens[-1] == eos and len(got[0].tokens) == 3
+
+
+# ---------------------------------------------------------------------------
+# Fork -> K-draft -> full-reject -> rollback leaves the pooled state
+# bitwise equal to never having speculated.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("state_dtype", ["f32", "int8"])
+@pytest.mark.parametrize("name", ["mamba-130m", "xlstm-350m"])
+def test_full_reject_rollback_is_bitwise_clean(name, state_dtype,
+                                               monkeypatch):
+    """Force every draft proposal to be wrong (argmax+1): the pass must
+    emit exactly one token (the target's own) and leave the live slot's
+    pooled state — payload AND scales — bitwise identical to one plain
+    decode step.  A single leaked draft byte (stale scale, conv tail,
+    xLSTM stabilizer) fails this."""
+    cfg, params = _setup(name, state_dtype=state_dtype)
+    prompts = _prompts(cfg, 2, seed=3)
+    # reference token streams: plain engine
+    plain = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=64))
+    ref = [plain.submit(p, max_new=4) for p in prompts]
+    plain.run()
+
+    eng = Engine(cfg, params,
+                 EngineConfig(n_slots=2, max_seq=64,
+                              draft=DraftConfig(k=3, layers=0)))
+    spec = eng._spec
+    real_propose = spec.propose
+
+    def wrong_propose(cache, toks, scratch_mask, keys):
+        cache, d_toks, d_logits = real_propose(cache, toks, scratch_mask,
+                                               keys)
+        # the full-depth draft proposes the target argmax; +1 mod vocab
+        # is therefore guaranteed wrong at every step
+        return cache, (d_toks + 1) % cfg.vocab, d_logits
+
+    monkeypatch.setattr(spec, "propose", wrong_propose)
+    got = [eng.submit(p, max_new=4) for p in prompts]
+
+    # drive manually: admit both, snapshot, then one forced-full-reject
+    # speculative pass
+    while eng._ready and eng.pool.n_free:
+        eng._admit(eng._ready.popleft())
+    live = eng.pool.active_slots()
+    cache0 = eng.pool.cache                    # immutable pytree
+    toks0 = eng._next_tok.copy()
+    act0 = eng.pool.active_mask()
+    eng._spec_pass()
+    s = eng.stats.summary()
+    assert s["spec_acceptance_rate"] == 0.0
+    assert s["spec_accepted_per_pass"] == 1.0
+    # oracle: ONE plain decode step from the snapshot, through the
+    # engine's own decode dispatch — "never having speculated"
+    tok, cache1 = eng._decode(eng.params, cache0, jnp.asarray(toks0),
+                              jnp.asarray(act0), jax.random.key(0))
+    gather = lambda c: registry.gather_slots(cfg, c, jnp.asarray(live))
+    assert _tree_equal(gather(cache1), gather(eng.pool.cache)), \
+        "rollback left speculative residue in the pooled state"
+    assert np.array_equal(np.asarray(tok)[live],
+                          eng._next_tok[live])
+    # and the full runs still agree token-for-token (repeated
+    # full-reject churn all the way to completion)
+    eng.run()
+    assert [g.tokens for g in got] == [r.tokens for r in ref]
+
+
+def test_fork_then_release_leaves_live_state_untouched():
+    """Pool-level hygiene: fork to scratch, mutate nothing live, release
+    — the live slot must be bitwise unchanged and every scratch lease
+    must return to the free list."""
+    cfg, params = _setup("mamba-130m", state_dtype="int8")
+    pool = SlotStatePool(cfg, n_slots=2, max_seq=32, n_scratch=2)
+    fresh = sharding.tree_values(registry.init_cache(cfg, 1, 32))
+    toks = jnp.asarray(_prompts(cfg, 1, seed=11)[0][None])
+    _, sub = registry.prefill(cfg, params, fresh, {"tokens": toks})
+    slot = pool.alloc()
+    pool.admit(slot, sub)
+    before = pool.read([slot])
+    sc = pool.lease_scratch()
+    pool.fork([slot], [sc])
+    assert _tree_equal(pool.read([sc]), before)
+    pool.release_scratch(sc)
+    assert _tree_equal(pool.read([slot]), before)
+    assert pool.n_scratch_free == pool.n_scratch
+
+
+# ---------------------------------------------------------------------------
+# Acceptance core: property-based bounds + the rejection-sampling
+# marginal (the "is it silently wrong" check, run on raw logits).
+# ---------------------------------------------------------------------------
+
+class TestAcceptanceBounds:
+    @given(st.integers(1, 6), st.integers(1, 5), st.integers(2, 33),
+           st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_greedy_prefix_semantics(self, k, b, vocab, seed):
+        """Under random logits: n_acc is the longest draft prefix
+        matching the target argmax; emitted count is n_acc + 1 in
+        [1, k+1]; pending is the last emitted token."""
+        rng = np.random.default_rng(seed)
+        drafts = jnp.asarray(rng.integers(0, vocab, size=(k, b)), jnp.int32)
+        tl = jnp.asarray(rng.normal(size=(k + 1, b, vocab)), jnp.float32)
+        emit, n_acc, pending = accept_tokens(drafts, tl, 0.0)
+        tgt = np.argmax(np.asarray(tl), axis=-1)
+        for s in range(b):
+            j = 0
+            while j < k and int(drafts[j, s]) == int(tgt[j, s]):
+                j += 1
+            assert int(n_acc[s]) == j
+            assert 1 <= j + 1 <= k + 1
+            stream = [int(emit[t, s]) for t in range(j + 1)]
+            # accepted prefix is the draft's, the last token the target's
+            assert stream[:j] == [int(drafts[t, s]) for t in range(j)]
+            assert stream[-1] == int(tgt[j, s])
+            assert int(pending[s]) == stream[-1]
+
+    @given(st.integers(1, 6), st.integers(1, 4), st.floats(0.25, 3.0),
+           st.integers(0, 10_000))
+    @settings(max_examples=15, deadline=None)
+    def test_sampled_identical_distributions_accept_all(self, k, b, temp,
+                                                        seed):
+        """p_draft == p_target => accept probability min(1, 1) = 1:
+        every proposal is accepted regardless of temperature."""
+        rng = np.random.default_rng(seed)
+        dl = jnp.asarray(rng.normal(size=(k, b, 16)), jnp.float32)
+        tl = jnp.concatenate(
+            [dl, jnp.asarray(rng.normal(size=(1, b, 16)), jnp.float32)])
+        drafts = jnp.asarray(rng.integers(0, 16, size=(k, b)), jnp.int32)
+        _, n_acc, _ = accept_tokens(drafts, tl, float(temp),
+                                    draft_logits=dl,
+                                    key=jax.random.key(seed))
+        assert (np.asarray(n_acc) == k).all()
+
+    @given(st.integers(1, 6), st.integers(1, 4), st.integers(0, 10_000))
+    @settings(max_examples=15, deadline=None)
+    def test_sampled_counts_in_bounds(self, k, b, seed):
+        rng = np.random.default_rng(seed)
+        dl = jnp.asarray(rng.normal(size=(k, b, 8)) * 3, jnp.float32)
+        tl = jnp.asarray(rng.normal(size=(k + 1, b, 8)) * 3, jnp.float32)
+        drafts = jnp.asarray(rng.integers(0, 8, size=(k, b)), jnp.int32)
+        emit, n_acc, pending = accept_tokens(
+            drafts, tl, 1.0, draft_logits=dl, key=jax.random.key(seed))
+        na = np.asarray(n_acc)
+        assert ((0 <= na) & (na <= k)).all()
+        assert emit.shape == (k + 1, b)
+        for s in range(b):
+            assert int(pending[s]) == int(emit[int(na[s]), s])
+
+    def test_sampled_marginal_matches_target(self):
+        """The silent-wrongness check: over many trials with a SKEWED
+        draft, the emitted first token's empirical distribution must
+        match the target softmax (rejection sampling's whole point),
+        within a generous total-variation budget."""
+        vocab, trials = 6, 4000
+        rng = np.random.default_rng(0)
+        tl_row = rng.normal(size=(vocab,)).astype(np.float32)
+        dl_row = rng.normal(size=(vocab,)).astype(np.float32) * 2.0
+        tl = jnp.asarray(np.tile(tl_row, (2, trials, 1)), jnp.float32)
+        dl = jnp.asarray(np.tile(dl_row, (1, trials, 1)), jnp.float32)
+        p_d = np.exp(dl_row) / np.exp(dl_row).sum()
+        drafts = jnp.asarray(
+            rng.choice(vocab, size=(1, trials), p=p_d), jnp.int32)
+        emit, n_acc, _ = accept_tokens(drafts, tl, 1.0, draft_logits=dl,
+                                       key=jax.random.key(42))
+        first = np.asarray(emit[0])
+        counts = np.bincount(first, minlength=vocab) / trials
+        p_t = np.exp(tl_row) / np.exp(tl_row).sum()
+        tv = 0.5 * np.abs(counts - p_t).sum()
+        assert tv < 0.05, (tv, counts, p_t)
+
+
+# ---------------------------------------------------------------------------
+# Block-level K-token verify wrappers == chained single-token steps
+# (the batched-front-end fast path the engine can adopt once validated
+# on real TPU; gated here against the chained oracle).
+# ---------------------------------------------------------------------------
+
+def _chain_steps(step_fn, cfg, p, x_seq, state):
+    outs, states = [], []
+    for t in range(x_seq.shape[1]):
+        y, state = step_fn(cfg, p, x_seq[:, t:t + 1], state)
+        outs.append(y)
+        states.append(state)
+    return jnp.concatenate(outs, axis=1), states
+
+
+@pytest.mark.parametrize("state_dtype", ["f32", "int8"])
+@pytest.mark.parametrize("step_impl", ["fused", "xla"])
+def test_mamba_block_verify_matches_chained_steps(step_impl, state_dtype):
+    cfg, params = _setup("mamba-130m", step_impl=step_impl,
+                         state_dtype=state_dtype)
+    p = jax.tree.map(lambda q: q[0], params["layers"])["mixer"]
+    b, K = 2, 4
+    di, n, kcv = cfg.d_inner, cfg.d_state, cfg.d_conv
+    state = {"conv": jnp.asarray(RNG.normal(size=(b, kcv - 1, di)),
+                                 jnp.float32)}
+    h0 = jnp.asarray(RNG.normal(size=(b, di, n)), jnp.float32)
+    if state_dtype == "int8":
+        from repro.core import state_quant
+        q, s = state_quant.quantize_h(h0, "int8")
+        state.update({"h": q, "h_scale": s})
+    else:
+        state["h"] = h0
+    x = jnp.asarray(RNG.normal(size=(b, K, cfg.d_model)), jnp.float32)
+    y_ref, states_ref = _chain_steps(mamba.mamba_block_step, cfg, p, x,
+                                     dict(state))
+    y_v, st_v = mamba.mamba_block_verify(cfg, p, x, dict(state))
+    np.testing.assert_allclose(np.asarray(y_v), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    for t in range(K):
+        for key in states_ref[t]:
+            np.testing.assert_allclose(
+                np.asarray(st_v[key][:, t], dtype=np.float32),
+                np.asarray(states_ref[t][key], dtype=np.float32),
+                rtol=1e-5, atol=1e-5,
+                err_msg=f"verify state {key} diverged at step {t}")
+
+
+@pytest.mark.parametrize("state_dtype", ["f32", "int8"])
+def test_mlstm_block_verify_matches_chained_steps(state_dtype):
+    cfg, params = _setup("xlstm-350m", state_dtype=state_dtype)
+    li = next(i for i in range(cfg.n_layers)
+              if not xlstm._is_slstm(cfg, i))
+    p = params["layers"][li]["mlstm"]
+    b, K = 2, 4
+    state = sharding.tree_values(
+        xlstm.mlstm_state_init(cfg, b, jnp.float32))
+    x = jnp.asarray(RNG.normal(size=(b, K, cfg.d_model)), jnp.float32)
+    # prime the state so the window starts mid-sequence
+    _, state = xlstm.mlstm_block_step(cfg, p, x[:, :1] * 0.7, state)
+    y_ref, states_ref = _chain_steps(xlstm.mlstm_block_step, cfg, p, x,
+                                     state)
+    y_v, st_v = xlstm.mlstm_block_verify(cfg, p, x, state)
+    np.testing.assert_allclose(np.asarray(y_v), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    for t in range(K):
+        for key in states_ref[t]:
+            np.testing.assert_allclose(
+                np.asarray(st_v[key][:, t], dtype=np.float32),
+                np.asarray(states_ref[t][key], dtype=np.float32),
+                rtol=1e-5, atol=1e-5,
+                err_msg=f"verify state {key} diverged at step {t}")
+
+
+def test_slstm_block_verify_matches_chained_steps():
+    cfg, params = _setup("xlstm-350m")
+    li = next(i for i in range(cfg.n_layers) if xlstm._is_slstm(cfg, i))
+    p = params["layers"][li]["slstm"]
+    b, K = 2, 4
+    state = sharding.tree_values(
+        xlstm.slstm_state_init(cfg, b, jnp.float32))
+    x = jnp.asarray(RNG.normal(size=(b, K, cfg.d_model)), jnp.float32)
+    _, state = xlstm.slstm_block_step(cfg, p, x[:, :1] * 0.7, state)
+    y_ref, states_ref = _chain_steps(xlstm.slstm_block_step, cfg, p, x,
+                                     state)
+    y_v, st_v = xlstm.slstm_block_verify(cfg, p, x, state)
+    np.testing.assert_allclose(np.asarray(y_v), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    for t in range(K):
+        for key in states_ref[t]:
+            np.testing.assert_allclose(
+                np.asarray(st_v[key][:, t]),
+                np.asarray(states_ref[t][key]),
+                rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("impl", ["fused", "xla"])
+def test_decode_scan_matches_chained_decode_steps(impl):
+    """core.selective_scan.decode_scan (the K-step micro-scan entry
+    point) chains the same kernel as K separate decode_step dispatches
+    — per-step outputs and states must agree."""
+    b, K, d, n = 2, 5, 24, 8
+    h = jnp.asarray(RNG.normal(size=(b, d, n)), jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(b, K, d)), jnp.float32)
+    dt = jnp.abs(jnp.asarray(RNG.normal(size=(b, K, d)), jnp.float32)) * .1
+    A = -jnp.abs(jnp.asarray(RNG.normal(size=(d, n)), jnp.float32))
+    B = jnp.asarray(RNG.normal(size=(b, K, n)), jnp.float32)
+    C = jnp.asarray(RNG.normal(size=(b, K, n)), jnp.float32)
+    D = jnp.asarray(RNG.normal(size=(d,)), jnp.float32)
+    z = jnp.asarray(RNG.normal(size=(b, K, d)), jnp.float32)
+    ys, hs = css.decode_scan(h, x, dt, A, B, C, D=D, z_seq=z, impl=impl)
+    # tolerance, not bit-equality: XLA may contract da*h + dbx into an
+    # FMA differently inside the scan body than in the standalone step
+    # (same reassociation caveat as the q-kernel payload gate)
+    h_c = h
+    for t in range(K):
+        y_t, h_c = css.decode_step(h_c, x[:, t], dt[:, t], A, B[:, t],
+                                   C[:, t], D=D, z_t=z[:, t], impl=impl)
+        np.testing.assert_allclose(np.asarray(ys[:, t]), np.asarray(y_t),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(hs[:, t]), np.asarray(h_c),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("impl", ["fused", "xla"])
+def test_decode_scan_q_matches_chained_steps(impl):
+    """Quantized micro-scan vs chained decode_step_q.  The fused kernel
+    runs the identical kernel body either way -> bit-exact payloads
+    and scales.  The XLA oracle may be FMA-contracted differently
+    inside the scan body, which can move an absmax (hence a scale) by
+    an ulp and a payload by one code — the same "within one code"
+    contract the fused-vs-oracle gate uses."""
+    from repro.core import state_quant
+    b, K, d, n = 2, 4, 32, 8
+    h = jnp.asarray(RNG.normal(size=(b, d, n)) * 2, jnp.float32)
+    hq, hs0 = state_quant.quantize_h(h, "int8")
+    x = jnp.asarray(RNG.normal(size=(b, K, d)), jnp.float32)
+    dt = jnp.abs(jnp.asarray(RNG.normal(size=(b, K, d)), jnp.float32)) * .1
+    A = -jnp.abs(jnp.asarray(RNG.normal(size=(d, n)), jnp.float32))
+    B = jnp.asarray(RNG.normal(size=(b, K, n)), jnp.float32)
+    C = jnp.asarray(RNG.normal(size=(b, K, n)), jnp.float32)
+    ys, hqs, sss = css.decode_scan_q(hq, hs0, x, dt, A, B, C,
+                                     state_dtype="int8", impl=impl)
+    hq_c, s_c = hq, hs0
+    for t in range(K):
+        y_t, hq_c, s_c = css.decode_step_q(
+            hq_c, s_c, x[:, t], dt[:, t], A, B[:, t], C[:, t],
+            state_dtype="int8", impl=impl)
+        if impl == "fused":
+            assert bool(jnp.array_equal(hqs[:, t], hq_c)), f"payload @ {t}"
+            assert bool(jnp.array_equal(sss[:, t], s_c)), f"scales @ {t}"
+        else:
+            code = float(jnp.max(sss[:, t]))
+            pay_err = np.max(np.abs(
+                np.asarray(hqs[:, t], np.float32) * np.asarray(sss[:, t])[:, :, None]
+                - np.asarray(hq_c, np.float32) * np.asarray(s_c)[:, :, None]))
+            assert pay_err <= 2.5 * code, (t, pay_err, code)
+            np.testing.assert_allclose(np.asarray(sss[:, t]),
+                                       np.asarray(s_c), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(ys[:, t]), np.asarray(y_t),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_jamba_sublayer_verify_mamba_position():
+    """Jamba's mamba sublayers get the real block-level verify; its
+    attention positions explicitly refuse (chained verify covers them
+    in the engine)."""
+    cfg, params = _setup("jamba-v0.1-52b")
+    from repro.models import jamba
+    period = cfg.attn_every or 8
+    mamba_pos = next(p for p in range(period)
+                     if not jamba._pos_kind(cfg, p)[0])
+    attn_pos = next(p for p in range(period)
+                    if jamba._pos_kind(cfg, p)[0])
+    gp = jax.tree.map(lambda q: q[0], params["groups"][f"pos{mamba_pos}"])
+    b, K = 2, 3
+    di, n, kcv = cfg.d_inner, cfg.d_state, cfg.d_conv
+    state = {"h": jnp.asarray(RNG.normal(size=(b, di, n)), jnp.float32),
+             "conv": jnp.asarray(RNG.normal(size=(b, kcv - 1, di)),
+                                 jnp.float32)}
+    x = jnp.asarray(RNG.normal(size=(b, K, cfg.d_model)), jnp.float32)
+    y, states = jamba.sublayer_verify(cfg, gp, mamba_pos, x, state)
+    assert y.shape == (b, K, cfg.d_model)
+    assert states["h"].shape[1] == K
+    with pytest.raises(NotImplementedError):
+        jamba.sublayer_verify(cfg, gp, attn_pos, x, state)
+
+
+# ---------------------------------------------------------------------------
+# Draft views: slicing + merging round-trips the full cache
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_draft_view_merge_roundtrip(name):
+    cfg, params = _setup(name)
+    n = _shallow_layers(cfg)
+    cache = sharding.tree_values(registry.init_cache(cfg, 3, 32))
+    sub = registry.draft_cache(cfg, cache, n)
+    merged = registry.draft_cache_merge(cfg, cache, sub, n)
+    assert _tree_equal(merged, cache)
+    dcfg = registry.draft_config(cfg, n)
+    dp = registry.draft_params(cfg, params, n)
+    logits, sub2 = registry.decode_step(
+        dcfg, dp, sub, {"tokens": jnp.zeros((3, 1), jnp.int32)})
+    assert logits.shape == (3, 1, cfg.vocab)
+    merged2 = registry.draft_cache_merge(cfg, cache, sub2, n)
+    assert jax.tree.structure(merged2) == jax.tree.structure(cache)
+
+
+def test_draft_config_validation():
+    cfg, _ = _setup("jamba-v0.1-52b")
+    period = cfg.attn_every or 8
+    with pytest.raises(ValueError):
+        registry.draft_config(cfg, period - 1)   # not a group multiple
+    cfg2, _ = _setup("mamba-130m")
+    with pytest.raises(ValueError):
+        registry.draft_config(cfg2, cfg2.n_layers + 1)
+    tcfg, _ = _setup("qwen2-7b")
+    with pytest.raises(NotImplementedError):
+        registry.draft_config(tcfg, 1)

@@ -306,6 +306,48 @@ class TestEngineParity:
         eng.run()
         assert len(req.tokens) == 6
 
+    def test_jamba_kv_int8_stream_parity_under_slot_churn(self):
+        """kv_cache_dtype="int8" composes with state_dtype through the
+        same engine knob: jamba's attention KV strips store int8 with
+        per-(slot, position) absmax scales as cache leaves (slot ops
+        move payload and scales together, like the recurrent state).
+        Greedy-serve 6 requests through 2 slots at every dtype combo;
+        token agreement vs the all-f32 engine must clear the jamba
+        floor, and the composed combo must beat 2x bytes-per-slot."""
+        name = "jamba-v0.1-52b"
+        cfg, params = _setup(name)
+        prompts = [RNG.integers(0, cfg.vocab, size=(int(m),))
+                   .astype(np.int32)
+                   for m in RNG.choice([4, 6, 8], size=6)]
+        streams, bytes_per_slot = {}, {}
+        for kv, sd in (("model", "f32"), ("int8", "f32"),
+                       ("int8", "int8")):
+            eng = Engine(cfg, params,
+                         EngineConfig(n_slots=2, max_seq=40,
+                                      kv_cache_dtype=kv, state_dtype=sd))
+            reqs = [eng.submit(p, max_new=8) for p in prompts]
+            done = eng.run()
+            assert len(done) == len(reqs)
+            assert all(len(r.tokens) == 8 for r in reqs)
+            streams[(kv, sd)] = [r.tokens for r in reqs]
+            bytes_per_slot[(kv, sd)] = eng.pool.state_bytes_per_slot()
+        base = streams[("model", "f32")]
+        total = sum(len(t) for t in base)
+        floor = AGREEMENT_FLOOR[name]
+        for combo, toks in streams.items():
+            agree = sum(int(x == y) for a, b in zip(base, toks)
+                        for x, y in zip(a, b))
+            assert agree / total >= floor, (
+                f"kv/state {combo}: agreement {agree}/{total} "
+                f"below floor {floor}")
+        # KV strips quantize (strictly smaller slots), and composing
+        # both knobs clears the 2x capacity bar on jamba too
+        assert (bytes_per_slot[("int8", "f32")]
+                < bytes_per_slot[("model", "f32")])
+        gain = (bytes_per_slot[("model", "f32")]
+                / bytes_per_slot[("int8", "int8")])
+        assert gain >= 2.0, f"composed capacity gain {gain:.2f}x < 2x"
+
     def test_quantized_fused_matches_quantized_xla_stream(self):
         """step_impl routing under int8 state: the fused q-kernel and
         the XLA q-oracle produce identical token streams on this
