@@ -28,6 +28,13 @@ streams must match plain decode exactly, and the deterministic
 accepted-tokens-per-target-pass counter (not wall-clock) is the gated
 speedup proxy.
 
+Also reported: heterogeneous sampling (per-request SamplingParams) —
+a mixed greedy/temperature/top-k/top-p trace served by ONE jit cache:
+zero retraces after a greedy warmup (jit cache-miss counting via
+sampling.TRACE_COUNTS), greedy rows bitwise vs the all-greedy engine,
+and seeded sampled streams reproduced independent of batch
+composition.
+
 Flake policy: pass/fail decisions use deterministic token counts only;
 wall-clock (CPU timing noise exceeds 20%) uses median-of-k and is
 asserted only off-CPU, with a generous margin.
@@ -312,6 +319,105 @@ def state_dtype_comparison(arch, slots, requests, max_new,
 
 
 # ---------------------------------------------------------------------------
+# Heterogeneous sampling (per-request SamplingParams): one jit cache
+# ---------------------------------------------------------------------------
+
+def hetero_sampling_comparison(arch, slots, requests, max_new, seed=0,
+                               quiet=False):
+    """Serve one saturated trace whose requests cycle through greedy /
+    temperature / top-k / top-p SamplingParams and gate the redesign's
+    deterministic claims:
+
+      * single compile — after a greedy warmup, the mixed trace
+        retraces NOTHING (sampling.TRACE_COUNTS deltas are zero for
+        decode and prefill; prompt lengths are drawn from LEN_CHOICES
+        so every prefill shape is warmed);
+      * greedy rows bitwise — each greedy request's stream equals the
+        all-greedy engine's for the same prompt;
+      * seeded reproducibility — a seeded sampled request re-served
+        alone reproduces its in-crowd stream bit-for-bit;
+      * full token accounting — every request receives max_new tokens.
+
+    All four are deterministic counts/booleans (CI-gateable); tok/s is
+    reported only."""
+    from repro.runtime import sampling
+    from repro.runtime.sampling import SamplingParams
+
+    cfg, params = _setup_model(arch)
+    rng = np.random.default_rng(seed)
+    max_seq = max(LEN_CHOICES) + max_new + 8
+    prompts = [rng.integers(0, cfg.vocab,
+                            size=(int(rng.choice(LEN_CHOICES)),))
+               .astype(np.int32) for _ in range(requests)]
+    cycle = [SamplingParams(),
+             SamplingParams(temperature=0.8),
+             SamplingParams(temperature=1.1, top_k=8),
+             SamplingParams(temperature=0.7, top_p=0.9)]
+    mix = [dataclasses.replace(cycle[i % len(cycle)], seed=100 + i)
+           for i in range(requests)]
+
+    # all-greedy reference (doubles as the jit warmup for every prompt
+    # length in the trace)
+    ref_eng = Engine(cfg, params, EngineConfig(n_slots=slots,
+                                               max_seq=max_seq))
+    ref = [ref_eng.submit(p, max_new=max_new) for p in prompts]
+    ref_eng.run()
+
+    before = dict(sampling.TRACE_COUNTS)
+    eng = Engine(cfg, params, EngineConfig(n_slots=slots,
+                                           max_seq=max_seq))
+    reqs = [eng.submit(p, params=sp, max_new=max_new)
+            for p, sp in zip(prompts, mix)]
+    eng.run()
+    after = dict(sampling.TRACE_COUNTS)
+    retraces = sum(after.get(k, 0) - before.get(k, 0)
+                   for k in ("decode_step", "prefill_admit"))
+    assert retraces == 0, \
+        f"heterogeneous SamplingParams forced {retraces} retraces"
+
+    greedy_idx = [i for i in range(requests) if i % len(cycle) == 0]
+    greedy_bitwise = all(reqs[i].tokens == ref[i].tokens
+                         for i in greedy_idx)
+    assert greedy_bitwise, "greedy rows diverged in the mixed batch"
+
+    # seeded reproducibility: re-serve one sampled request alone
+    probe = next(i for i in range(requests) if i % len(cycle) == 1)
+    solo = Engine(cfg, params, EngineConfig(n_slots=slots,
+                                            max_seq=max_seq))
+    r_solo = solo.submit(prompts[probe], params=mix[probe],
+                         max_new=max_new)
+    solo.run()
+    seeded_repro = r_solo.tokens == reqs[probe].tokens
+    assert seeded_repro, "seeded stream depended on batch composition"
+
+    s = eng.stats.summary()
+    assert s["useful_tokens"] == requests * max_new
+    sampled_distinct = sum(int(reqs[i].tokens != ref[i].tokens)
+                           for i in range(requests)
+                           if i not in greedy_idx)
+    out = {"useful_tokens": int(s["useful_tokens"]),
+           "decode_retraces": int(retraces),
+           "greedy_rows_bitwise": bool(greedy_bitwise),
+           "seeded_repro": bool(seeded_repro),
+           "n_greedy": len(greedy_idx),
+           "sampled_rows_distinct_from_greedy": int(sampled_distinct),
+           "tokens_per_s": float(s["tokens_per_s"])}
+    if not quiet:
+        print(f"[serve_throughput] heterogeneous sampling, arch={arch} "
+              f"slots={slots} requests={requests} max_new={max_new}")
+        print(f"  mixed greedy/temp/top-k/top-p trace: "
+              f"{out['useful_tokens']} useful tok at "
+              f"{out['tokens_per_s']:.1f} tok/s")
+        print(f"  jit retraces after greedy warmup : "
+              f"{out['decode_retraces']} (one compile serves all "
+              "SamplingParams)")
+        print(f"  greedy rows bitwise vs all-greedy: "
+              f"{out['greedy_rows_bitwise']}; seeded stream "
+              f"batch-independent: {out['seeded_repro']}")
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Speculative decoding (EngineConfig.draft): accepted tokens per target pass
 # ---------------------------------------------------------------------------
 
@@ -418,6 +524,13 @@ def run():
                 sweep["int8"]["slots_per_gb"],
                 f"capacity_gain_vs_f32={gain:.2f}x;"
                 f"agreement={sweep['int8']['token_agreement_vs_f32']:.3f}")
+    hetero = hetero_sampling_comparison(arch="mamba-130m", slots=4,
+                                        requests=8, max_new=16,
+                                        quiet=True)
+    common.emit("serve_hetero_sampling_retraces",
+                float(hetero["decode_retraces"]),
+                f"greedy_bitwise={int(hetero['greedy_rows_bitwise'])};"
+                f"seeded_repro={int(hetero['seeded_repro'])}")
     # no cpu_interpret tag here: accepted-per-pass is a deterministic
     # trace count, independent of backend/interpreter
     spec = spec_decode_comparison(arch="mamba-130m", slots=4, requests=6,
@@ -459,6 +572,9 @@ def main():
                            requests=min(args.requests, 8),
                            max_new=16, seed=args.seed,
                            dtypes=("f32", "bf16", "int8", "fp8"))
+    hetero_sampling_comparison(args.arch, args.slots,
+                               requests=min(args.requests, 8),
+                               max_new=16, seed=args.seed)
     spec_decode_comparison(args.arch, args.slots,
                            requests=min(args.requests, 8),
                            max_new=16, k=args.spec_k, seed=args.seed)

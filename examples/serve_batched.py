@@ -1,6 +1,9 @@
-"""Continuous-batching serving example: variable-length prompts with
-per-request token budgets stream through the slot-pool engine; the static
-Server wrapper is shown for comparison.
+"""Continuous-batching serving example: the per-request generation API.
+
+A heterogeneous batch — greedy, temperature, top-k and top-p requests
+side by side — streams through one jit cache; one request streams its
+tokens through a callback and another is cancelled mid-stream.  The
+legacy static Server wrapper is shown for comparison.
 
   PYTHONPATH=src python examples/serve_batched.py --arch mamba-130m
   PYTHONPATH=src python examples/serve_batched.py --arch olmo-1b
@@ -15,6 +18,7 @@ from repro import configs
 from repro.models import registry
 from repro.parallel import sharding
 from repro.runtime.engine import Engine, EngineConfig
+from repro.runtime.sampling import SamplingParams
 from repro.runtime.serve import ServeConfig, Server
 
 
@@ -22,8 +26,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mamba-130m")
     ap.add_argument("--slots", type=int, default=2)
-    ap.add_argument("--requests", type=int, default=5)
-    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--state-dtype", default=None,
                     choices=["f32", "bf16", "int8", "fp8"])
     ap.add_argument("--spec-k", type=int, default=0,
@@ -32,6 +35,9 @@ def main():
     ap.add_argument("--draft-layers", type=int, default=0,
                     help="self-speculative draft depth in layers "
                          "(0 = full depth)")
+    ap.add_argument("--adaptive-draft", action="store_true",
+                    help="clamp each slot's draft window to its "
+                         "realized acceptance")
     args = ap.parse_args()
 
     cfg = configs.smoke_variant(configs.get_config(args.arch))
@@ -39,38 +45,65 @@ def main():
     params = sharding.tree_values(
         registry.init_params(cfg, jax.random.key(0)))
 
-    # variable-length prompts + per-request budgets: the case the static
-    # batch loop could not serve without padding every request
+    # variable-length prompts, per-request budgets AND per-request
+    # sampling: the heterogeneous-traffic case a single engine-wide
+    # temperature could not serve without a recompile per setting
     rng = np.random.default_rng(7)
     prompts = [rng.integers(0, cfg.vocab, size=(int(l),)).astype(np.int32)
                for l in rng.choice([6, 10, 16, 24], size=args.requests)]
-    budgets = rng.integers(8, 25, size=args.requests)
+    cycle = [SamplingParams(),                                  # greedy
+             SamplingParams(temperature=0.8, seed=1),
+             SamplingParams(temperature=1.1, top_k=16, seed=2),
+             SamplingParams(temperature=0.7, top_p=0.9, seed=3)]
+    plist = [dataclasses.replace(cycle[i % len(cycle)],
+                                 max_new=int(rng.integers(8, 25)))
+             for i in range(args.requests)]
 
     draft = None
     if args.spec_k > 0:
         from repro.runtime.spec_decode import DraftConfig
-        draft = DraftConfig(k=args.spec_k, layers=args.draft_layers)
+        draft = DraftConfig(k=args.spec_k, layers=args.draft_layers,
+                            adaptive=args.adaptive_draft)
     eng = Engine(cfg, params, EngineConfig(
-        n_slots=args.slots, max_seq=64, temperature=args.temperature,
+        n_slots=args.slots, max_seq=64,
         state_dtype=args.state_dtype, draft=draft))
-    reqs = [eng.submit(p, max_new=int(m))
-            for p, m in zip(prompts, budgets)]
+
+    # request 0 streams its tokens as they decode; request 1 cancels
+    # itself after 5 tokens (its slot is reclaimed for the queue)
+    def stream(req, toks):
+        print(f"  [stream] req{req.req_id} += {toks}"
+              f"{' (done)' if req.finished else ''}")
+
+    def cancel_after_5(req, toks):
+        if len(req.tokens) >= 5:
+            eng.cancel(req.req_id)
+
+    cbs = {0: stream, 1: cancel_after_5}
+    reqs = [eng.submit(p, params=sp, stream_cb=cbs.get(i),
+                       priority=(5 if i == args.requests - 1 else 0))
+            for i, (p, sp) in enumerate(zip(prompts, plist))]
     eng.run()
 
     s = eng.stats.summary()
     print(f"[engine] arch={args.arch} slots={args.slots} "
-          f"requests={args.requests}")
+          f"requests={args.requests} (last one high-priority)")
     print(f"[engine] {s['useful_tokens']} tokens in {s['wall_s']:.2f}s "
           f"({s['tokens_per_s']:.1f} tok/s, occupancy {s['occupancy']:.2f}, "
-          f"ttft mean {s['ttft_mean_s'] * 1e3:.0f}ms)")
+          f"ttft mean {s['ttft_mean_s'] * 1e3:.0f}ms, "
+          f"cancelled {s['cancelled']})")
     if draft is not None:
         print(f"[engine] speculative: "
               f"{s['spec_accepted_per_pass']:.2f} tokens/target-pass "
               f"over {s['spec_target_passes']} passes "
               f"(accept rate {s['spec_acceptance_rate']:.2f})")
-    for r in reqs:
-        print(f"  req{r.req_id}: prompt[{r.prompt.size}] "
-              f"-> {r.tokens}")
+    for r, sp in zip(reqs, plist):
+        kind = ("greedy" if sp.temperature <= 0 else
+                f"T={sp.temperature}"
+                + (f",top_k={sp.top_k}" if sp.top_k else "")
+                + (f",top_p={sp.top_p}" if sp.top_p < 1 else ""))
+        tag = " CANCELLED" if r.cancelled else ""
+        print(f"  req{r.req_id} [{kind}] prompt[{r.prompt.size}] "
+              f"-> {r.tokens}{tag}")
 
     # the legacy rectangular API still works, now engine-backed
     srv = Server(cfg, params, ServeConfig(batch_slots=args.slots,

@@ -1,18 +1,19 @@
 #!/usr/bin/env python
-"""Deterministic benchmark gate for CI (writes/checks BENCH_PR4.json).
+"""Deterministic benchmark gate for CI (writes/checks BENCH_PR5.json).
 
 Runs the serving benchmarks in *count mode*: every gated number is a
 deterministic function of the code — useful-token counts, token-stream
 agreement between state dtypes, per-slot cache bytes / slots-per-GB,
-speculative-decode acceptance counters, and fused-kernel-vs-oracle
-errors.  Wall-clock numbers are recorded under "informational" but
+speculative-decode acceptance counters, heterogeneous-sampling jit
+retrace counts (one compile must serve mixed greedy/temperature/top-k/
+top-p traffic), and fused-kernel-vs-oracle errors.  Wall-clock numbers are recorded under "informational" but
 never asserted: CPU timing noise exceeds 20% and a timing gate on
 shared CI runners is a flake generator.
 
-  python scripts/bench_ci.py            # compare against BENCH_PR4.json
+  python scripts/bench_ci.py            # compare against BENCH_PR5.json
   python scripts/bench_ci.py --update   # regenerate the baseline
 
-The committed BENCH_PR4.json is the baseline; CI runs compare mode and
+The committed BENCH_PR5.json is the baseline; CI runs compare mode and
 fails on drift, so a PR that changes a count (or breaks the >= 2x int8
 capacity claim / the > 1.0 accepted-tokens-per-target-pass claim) must
 also regenerate — and thereby review — the file.
@@ -29,7 +30,7 @@ REPO = pathlib.Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(REPO / "src"))
 sys.path.insert(0, str(REPO))
 
-BASELINE = REPO / "BENCH_PR4.json"
+BASELINE = REPO / "BENCH_PR5.json"
 
 #: |fresh - baseline| tolerance for token-agreement fractions: exact on
 #: one platform, but argmax near-ties may flip across jax/BLAS builds
@@ -129,6 +130,8 @@ def collect():
     spec = st.spec_decode_comparison(
         arch="mamba-130m", slots=4, requests=6, max_new=12, k=3,
         quiet=True)
+    hetero = st.hetero_sampling_comparison(
+        arch="mamba-130m", slots=4, requests=8, max_new=16, quiet=True)
     kernel = _kernel_vs_oracle()
 
     dtypes = {}
@@ -166,6 +169,16 @@ def collect():
                     spec["spec_shallow"]["acceptance_rate"], 4),
                 "useful_tokens": spec["spec_shallow"]["useful_tokens"],
             },
+        },
+        # heterogeneous per-request sampling: the PR 5 API-redesign
+        # gate — one jit cache, greedy rows bitwise, seeded repro
+        "hetero_sampling": {
+            "useful_tokens": hetero["useful_tokens"],
+            "decode_retraces": hetero["decode_retraces"],
+            "greedy_rows_bitwise": hetero["greedy_rows_bitwise"],
+            "seeded_repro": hetero["seeded_repro"],
+            "sampled_rows_distinct_from_greedy":
+                hetero["sampled_rows_distinct_from_greedy"],
         },
         "kernel_vs_oracle": kernel,
         "informational": {
@@ -220,6 +233,24 @@ def compare(fresh: dict, base: dict) -> list[str]:
         chk(sp_f["shallow"]["useful_tokens"]
             == sp_b["shallow"]["useful_tokens"],
             "spec.shallow.useful_tokens drifted")
+    # heterogeneous sampling: the one-jit-cache redesign gate — all
+    # hard invariants, no tolerances (counts and booleans only)
+    ht_f, ht_b = fresh.get("hetero_sampling"), base.get("hetero_sampling")
+    if ht_f is None or ht_b is None:
+        fails.append("hetero_sampling section present only in "
+                     f"{'baseline' if ht_f is None else 'fresh'}")
+    else:
+        chk(ht_f["decode_retraces"] == 0,
+            f"heterogeneous SamplingParams retraced the jit "
+            f"{ht_f['decode_retraces']} times (must be 0)")
+        chk(ht_f["greedy_rows_bitwise"],
+            "greedy rows diverged inside a mixed-sampling batch")
+        chk(ht_f["seeded_repro"],
+            "seeded sampled stream depended on batch composition")
+        chk(ht_f["useful_tokens"] == ht_b["useful_tokens"],
+            f"hetero_sampling.useful_tokens: fresh "
+            f"{ht_f['useful_tokens']} != baseline "
+            f"{ht_b['useful_tokens']}")
     # union, not base-only: a dtype added to the sweep without a
     # baseline regeneration must fail, not silently pass unchecked
     all_dtypes = sorted(set(base["state_dtypes"])
@@ -288,6 +319,11 @@ def main():
           f"{fresh['spec_decode']['full']['accepted_per_pass']} "
           f"(floor {MIN_SPEC_ACCEPTED_PER_PASS}), shallow "
           f"{fresh['spec_decode']['shallow']['accepted_per_pass']}")
+    ht = fresh["hetero_sampling"]
+    print(f"[bench_ci] hetero sampling: {ht['decode_retraces']} "
+          f"retraces (must be 0), greedy bitwise "
+          f"{ht['greedy_rows_bitwise']}, seeded repro "
+          f"{ht['seeded_repro']}")
     if fails:
         for f in fails:
             print(f"[bench_ci] FAIL: {f}", file=sys.stderr)

@@ -29,6 +29,10 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="sample from the k highest logits (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 = off)")
     ap.add_argument("--state-dtype", default=None,
                     choices=["f32", "bf16", "int8", "fp8"],
                     help="pooled decode-state storage dtype; int8 "
@@ -50,6 +54,7 @@ def main():
         batch_slots=args.batch_slots,
         max_seq=args.prompt_len + args.max_new + 8,
         temperature=args.temperature,
+        top_k=args.top_k, top_p=args.top_p,
         state_dtype=args.state_dtype))
 
     ds = SyntheticLM(vocab=cfg.vocab, seq_len=args.prompt_len, seed=1)

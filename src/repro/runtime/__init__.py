@@ -1,26 +1,39 @@
 """Runtime: training loop (resume/preemption/straggler), serving engine,
 metrics.
 
-Serving request lifecycle (engine.py + state_pool.py):
+Serving request lifecycle (engine.py + state_pool.py + sampling.py):
 
-  1. queue    — Engine.submit() enqueues a Request; arrival-gated
-                requests wait in a pending list until their trace time.
+  1. queue    — Engine.submit(prompt, SamplingParams) enqueues a
+                Request; arrival-gated requests wait in a pending list
+                until their trace time, ready requests sit in a
+                priority queue (highest priority admits first).  Every
+                sampling knob — temperature, top-k, top-p, seed, stop
+                ids, budget — is per-request DATA: it lands in
+                per-slot device arrays, never in a jit cache key, so
+                one compiled step serves heterogeneous traffic.
   2. prefill  — when a pool slot is free, the request's prompt runs one
                 exact-length batch-1 prefill; the resulting per-layer
                 recurrent state (SSM h, conv tail, or KV strip) is
-                scattered into the slot and the first token is sampled.
+                scattered into the slot and the first token is sampled
+                with the request's own params + seeded key stream.
   3. decode   — the slot joins the fixed-shape pooled decode batch; every
                 engine step advances all active slots one token, with
                 inactive slots masked so their state stays frozen.
-  4. evict    — on EOS or max_new the slot is reset to the init state and
-                returned to the free list; the next queued request is
-                admitted on the same step.  Throughput/latency counters
-                (metrics.ServeStats) track useful tokens, occupancy,
-                TTFT and request latency throughout.
+                ``stream_cb`` callbacks deliver each request's new
+                tokens at every scheduler sync; Engine.cancel()
+                reclaims a slot (and any scratch lease) at the next
+                sync, without perturbing co-resident streams.
+  4. evict    — on a stop token, max_new, or cancellation the slot is
+                reset to the init state (sampling-params row included)
+                and returned to the free list; the next queued request
+                is admitted on the same step.  Throughput/latency
+                counters (metrics.ServeStats) track useful tokens,
+                occupancy, TTFT, request latency, and cancellations.
 
 With EngineConfig.draft (spec_decode.py), step 3 becomes a speculative
 pass instead: fork the slot state into a leased scratch slot, draft K
-cheap tokens there, verify them with one batched target micro-scan,
-and roll the slot back to its accepted prefix — 1..K+1 tokens per
-target pass, token-identical to plain decode under greedy sampling.
+cheap tokens there with the slot's own sampling params, verify them
+with one batched target micro-scan, and roll the slot back to its
+accepted prefix — 1..K+1 tokens per target pass, token-identical to
+plain decode for greedy slots (even in a mixed greedy+sampled batch).
 """

@@ -2,22 +2,38 @@
 
 Request lifecycle (see also runtime/__init__.py):
 
-  submit() -> [pending until arrival] -> ready queue -> prefill-into-slot
-  -> joins the running decode batch -> per-slot EOS / max-token finish
-  -> evict (slot reset + freed) -> Request returned with tokens + timings.
+  submit(prompt, SamplingParams) -> [pending until arrival] -> ready
+  queue (priority-ordered) -> prefill-into-slot -> joins the running
+  decode batch -> per-slot stop-token / max-token finish (or cancel())
+  -> evict (slot reset + freed) -> Request returned with tokens +
+  timings.  A ``stream_cb`` receives each request's new tokens at every
+  scheduler sync.
 
-Scheduling policy: admit-eagerly FIFO.  Each engine ``step()`` first
-admits ready requests into every free slot (one fused exact-length
-prefill-scatter-sample dispatch per request), then runs a pooled decode
-BURST over all ``n_slots`` slots with inactive slots masked.  Sampling
-is fused into the decode jit so tokens chain on-device; the host syncs
-once per burst.  A burst runs to the next *certain* scheduling event
-(the shortest remaining token budget = the next guaranteed eviction),
-capped by ``sched_quantum`` only when an uncertain event could act
-sooner (an active EOS, or a free slot with queued work).  Because an
-SSM slot is O(d_inner * d_state) regardless of sequence length,
-admission/eviction are O(1) scatters and the decode batch shape never
-changes — no ragged-batch re-bucketing between steps.
+Scheduling policy: admit-eagerly, highest priority first (FIFO within a
+priority).  Each engine ``step()`` first admits ready requests into
+every free slot (one fused exact-length prefill-scatter-sample dispatch
+per request), then runs a pooled decode BURST over all ``n_slots``
+slots with inactive slots masked.  Sampling is fused into the decode
+jit so tokens chain on-device; the host syncs once per burst.  A burst
+runs to the next *certain* scheduling event (the shortest remaining
+token budget = the next guaranteed eviction), capped by
+``sched_quantum`` only when an uncertain event could act sooner (an
+active stop token, a streaming callback that must be serviced — it may
+cancel — or a free slot with queued work).  Because an SSM slot is
+O(d_inner * d_state) regardless of sequence length, admission/eviction
+are O(1) scatters and the decode batch shape never changes — no
+ragged-batch re-bucketing between steps.
+
+Sampling discipline (runtime/sampling.py): every per-request knob —
+temperature, top-k, top-p, seed, stop ids, budget — is DATA.  The pool
+carries per-slot parameter arrays that enter the jit'd steps as traced
+arguments, so ONE compiled prefill/decode/verify signature serves a
+batch mixing greedy and sampled requests and changing any
+SamplingParams field never retraces (``sampling.TRACE_COUNTS`` is the
+proof hook).  Randomness is per-slot counter-based: token i of request
+r is drawn with fold_in(key(seed_r), i), so a sampled stream is
+bitwise reproducible regardless of slot placement, batch composition,
+or co-resident cancellations.
 
 jit discipline: decode compiles once (fixed pool shape) and is shared
 across Engine instances per config; the prefill compiles once per
@@ -27,11 +43,11 @@ lengths; the benchmark draws from a small set).
 Speculative decoding (``EngineConfig.draft``): each scheduler iteration
 becomes one fork -> K-draft -> batched-verify -> rollback pass
 (runtime/spec_decode.py) instead of a token-by-token burst.  The pool
-gains one scratch slot per live slot for draft forks; greedy spec
-decode is token-identical to plain greedy decode (speculation changes
-throughput, never tokens), and each target pass emits 1..K+1 tokens
-per slot — accepted-tokens-per-target-pass in ServeStats is the
-speedup proxy.
+gains one scratch slot per live slot for draft forks; a greedy slot's
+spec decode is token-identical to plain greedy decode — even in a
+mixed greedy+sampled batch — and each target pass emits 1..K+1 tokens
+per slot.  ``DraftConfig.adaptive`` clamps each slot's window to its
+realized acceptance (Request.spec_accepted / spec_passes).
 
 Caveat: MoE families route tokens across the batch through shared expert
 capacity, so slot composition can perturb logits at tight
@@ -40,9 +56,11 @@ slot-independent (the engine's correctness tests assert this).
 """
 from __future__ import annotations
 
-import collections
+import bisect
 import dataclasses
 import functools
+import heapq
+import math
 import time
 from typing import Callable, Optional
 
@@ -52,37 +70,45 @@ import numpy as np
 
 from repro.models import registry
 from repro.runtime import metrics as metrics_lib
+from repro.runtime import sampling
+from repro.runtime.sampling import SamplingParams
 from repro.runtime.spec_decode import DraftConfig, SpecDecoder
-from repro.runtime.spec_decode import sample_last as _sample_last
 from repro.runtime.state_pool import SlotStatePool
 
 
 # Per-config jit'd step functions, shared across Engine instances (cfg is
 # a frozen dataclass, hence hashable).  Without this every Engine would
 # carry its own jit cache and re-trace/compile prefill and decode that an
-# earlier engine — or the warmup pass — already compiled.
+# earlier engine — or the warmup pass — already compiled.  Sampling
+# parameters are traced ARRAY arguments, never part of the cache key:
+# heterogeneous per-request settings share one compile.
 @functools.lru_cache(maxsize=None)
-def _jit_prefill_admit(cfg, temperature: float):
+def _jit_prefill_admit(cfg):
     """Fused prefill-into-slot: full-seq prefill of one request, scatter
-    of its state into the pool slot, and first-token sampling — one
-    dispatch per admission."""
-    def _fn(p, fresh, tokens, pool_cache, slot_id, key):
+    of its state into the pool slot, and first-token sampling with the
+    request's own params — one dispatch per admission."""
+    def _fn(p, fresh, tokens, pool_cache, slot_id, sp, step):
+        sampling.TRACE_COUNTS["prefill_admit"] += 1
         logits, sub = registry.prefill(cfg, p, fresh, {"tokens": tokens})
         new_pool = registry.scatter_slots(cfg, pool_cache, sub, slot_id)
-        return _sample_last(logits, temperature, key), new_pool
+        tok = sampling.sample(logits[:, -1, :], sp, step)
+        return tok[:, None], new_pool
     return jax.jit(_fn)
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_decode_sample(cfg, temperature: float):
-    """Fused decode + sample: tokens stay on device so consecutive steps
-    chain without a host round-trip (the burst loop syncs once per
-    scheduling quantum, keeping XLA dispatch pipelined)."""
-    def _decode_fn(p, cache, toks, active, key):
+def _jit_decode_sample(cfg):
+    """Fused decode + per-slot sample: tokens stay on device so
+    consecutive steps chain without a host round-trip (the burst loop
+    syncs once per scheduling quantum, keeping XLA dispatch
+    pipelined)."""
+    def _decode_fn(p, cache, toks, active, sp, step):
+        sampling.TRACE_COUNTS["decode_step"] += 1
         logits, new_cache = registry.decode_step(cfg, p, cache,
                                                  {"tokens": toks})
         new_cache = registry.mask_slots(cfg, cache, new_cache, active)
-        return _sample_last(logits, temperature, key), new_cache
+        tok = sampling.sample(logits[:, -1, :], sp, step)
+        return tok[:, None], new_cache
     return jax.jit(_decode_fn)
 
 
@@ -90,11 +116,17 @@ def _jit_decode_sample(cfg, temperature: float):
 class EngineConfig:
     n_slots: int = 4
     max_seq: int = 256
-    temperature: float = 0.0
+    # engine seed: derives per-request seeds for requests whose
+    # SamplingParams.seed is None (deterministically from the request
+    # id, so unseeded streams are still reproducible per trace)
     seed: int = 0
+    # default per-request params when submit() gets none (greedy)
+    default_params: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams)
     # scheduling quantum: max decode steps per burst between host syncs /
     # admission checks.  Larger = fewer syncs (throughput), smaller =
-    # faster admission + tighter EOS eviction (latency).
+    # faster admission + tighter stop-token eviction + lower streaming /
+    # cancellation latency.
     sched_quantum: int = 8
     # override for the model's per-token step routing (cfg.step_impl):
     # "fused" = one kernel launch per layer per token for the whole SSM
@@ -115,9 +147,9 @@ class EngineConfig:
     # speculative decoding: None = plain decode bursts; a DraftConfig
     # turns every decode step into a fork -> K-draft -> batched-verify
     # -> rollback pass emitting 1..K+1 tokens per slot per target pass.
-    # Greedy (temperature=0) spec decode is token-identical to plain
-    # greedy decode; sampled mode preserves the target distribution via
-    # rejection sampling.  The pool grows n_slots scratch slots.
+    # Greedy slots are token-identical to plain greedy decode; sampled
+    # slots preserve their target distribution via per-slot rejection
+    # sampling.  The pool grows n_slots scratch slots.
     draft: Optional[DraftConfig] = None
 
 
@@ -126,8 +158,15 @@ class Request:
     """One generation request; engine fills tokens + timing fields."""
     req_id: int
     prompt: np.ndarray                    # (Lp,) int32
-    max_new: int = 32
-    eos_id: Optional[int] = None
+    params: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams)
+    seed: int = 0                         # resolved per-request PRNG seed
+    max_new: int = 32                     # mirrors params.max_new
+    stop_ids: frozenset = frozenset()     # params.stop (+ eos_id)
+    eos_id: Optional[int] = None          # convenience mirror
+    priority: int = 0                     # higher admits earlier
+    stream_cb: Optional[Callable] = None  # (req, new_tokens) per sync
+    cancelled: bool = False
     arrival: float = 0.0                  # offset (s) from run() start
     tokens: list = dataclasses.field(default_factory=list)
     t_submit: float = 0.0
@@ -137,7 +176,7 @@ class Request:
     # per-slot speculative-depth bookkeeping (spec decode only): how
     # many target passes this request's slot took and how many drafted
     # tokens were accepted — accepted/passes is the request's realized
-    # speculative depth.
+    # speculative depth (and drives DraftConfig.adaptive).
     spec_passes: int = 0
     spec_accepted: int = 0
 
@@ -164,6 +203,7 @@ class Engine:
         if ecfg.kv_cache_dtype is not None:
             cfg = dataclasses.replace(cfg,
                                       kv_cache_dtype=ecfg.kv_cache_dtype)
+        ecfg.default_params.validate()
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
@@ -172,17 +212,18 @@ class Engine:
         n_scratch = ecfg.n_slots if ecfg.draft is not None else 0
         self.pool = SlotStatePool(cfg, ecfg.n_slots, ecfg.max_seq,
                                   n_scratch=n_scratch)
-        self._spec = (SpecDecoder(cfg, params, ecfg.draft,
-                                  float(ecfg.temperature))
+        self._spec = (SpecDecoder(cfg, params, ecfg.draft)
                       if ecfg.draft is not None else None)
         self.stats = metrics_lib.ServeStats()
         self.logger = logger
         self._now = clock
-        self._prefill = _jit_prefill_admit(cfg, float(ecfg.temperature))
-        self._decode = _jit_decode_sample(cfg, float(ecfg.temperature))
-        self._key = jax.random.key(ecfg.seed)
+        self._prefill = _jit_prefill_admit(cfg)
+        self._decode = _jit_decode_sample(cfg)
         self._pending: list[Request] = []      # arrival-gated, sorted
-        self._ready: collections.deque[Request] = collections.deque()
+        self._ready: list[tuple] = []          # (-priority, seq, Request)
+        self._seq = 0                          # FIFO tiebreak in _ready
+        self._by_id: dict[int, Request] = {}   # unfinished requests
+        self._cancel_dirty = False
         self._slot_req: list[Optional[Request]] = [None] * ecfg.n_slots
         self._next_tok = np.zeros((self.pool.n_total, 1), np.int32)
         self._finished: list[Request] = []
@@ -192,44 +233,145 @@ class Engine:
     # Request intake
     # ------------------------------------------------------------------
 
-    def submit(self, prompt, max_new: int = 32,
+    def submit(self, prompt, params: Optional[SamplingParams] = None,
+               max_new: Optional[int] = None,
                eos_id: Optional[int] = None,
-               arrival: Optional[float] = None) -> Request:
-        """Enqueue a request.  ``arrival`` (seconds from run() start)
-        gates admission for trace replay; None means ready immediately."""
+               arrival: Optional[float] = None,
+               priority: int = 0,
+               stream_cb: Optional[Callable] = None) -> Request:
+        """Enqueue a request.
+
+        params: per-request SamplingParams (None = the engine's
+          default_params, greedy unless configured).  ``max_new`` /
+          ``eos_id`` are conveniences layered onto it: max_new
+          overrides params.max_new, eos_id extends params.stop.
+        arrival: seconds from run() start; gates admission for trace
+          replay (None = ready immediately).
+        priority: higher admits earlier among ready requests (FIFO
+          within a priority level).
+        stream_cb: ``cb(req, new_tokens)`` called at every scheduler
+          sync with the >= 1 tokens appended since the last call; the
+          final call has ``req.finished`` True.  The callback may call
+          ``Engine.cancel`` (including on its own request); it must not
+          raise (an exception aborts ``run()``).
+        """
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size < 1:
             raise ValueError("empty prompt")
-        if max_new < 1:
-            raise ValueError("max_new must be >= 1")
-        if prompt.size + max_new > self.ecfg.max_seq:
+        params = params if params is not None else self.ecfg.default_params
+        if max_new is not None:
+            params = dataclasses.replace(params, max_new=max_new)
+        if eos_id is not None:
+            params = dataclasses.replace(
+                params, stop=tuple(params.stop) + (eos_id,))
+        params.validate()
+        if prompt.size + params.max_new > self.ecfg.max_seq:
             raise ValueError(
-                f"prompt ({prompt.size}) + max_new ({max_new}) exceeds "
-                f"max_seq ({self.ecfg.max_seq})")
-        req = Request(req_id=self._next_id, prompt=prompt, max_new=max_new,
-                      eos_id=eos_id, arrival=arrival or 0.0,
-                      t_submit=self._now())
+                f"prompt ({prompt.size}) + max_new ({params.max_new}) "
+                f"exceeds max_seq ({self.ecfg.max_seq})")
+        req_id = self._next_id
         self._next_id += 1
+        seed = (params.seed if params.seed is not None
+                else self._derive_seed(req_id))
+        req = Request(req_id=req_id, prompt=prompt, params=params,
+                      seed=seed, max_new=params.max_new,
+                      stop_ids=frozenset(params.stop), eos_id=eos_id,
+                      priority=priority, stream_cb=stream_cb,
+                      arrival=arrival or 0.0, t_submit=self._now())
+        self._by_id[req_id] = req
         if arrival is None:
-            self._ready.append(req)
+            self._push_ready(req)
         else:
-            self._pending.append(req)
-            self._pending.sort(key=lambda r: r.arrival)
+            # bisect keeps the arrival-sorted invariant in O(n) per
+            # insert — re-sorting on every submit was O(n^2 log n)
+            # across a heavy trace replay
+            bisect.insort(self._pending, req, key=lambda r: r.arrival)
         return req
+
+    def _derive_seed(self, req_id: int) -> int:
+        """Deterministic per-request seed for unseeded requests: a
+        function of (engine seed, request id) only, so streams stay
+        reproducible per trace and distinct across requests."""
+        return (self.ecfg.seed * 1_000_003 + req_id) & 0x7FFFFFFF
+
+    def _push_ready(self, req: Request) -> None:
+        heapq.heappush(self._ready, (-req.priority, self._seq, req))
+        self._seq += 1
+
+    def cancel(self, req_id: int) -> bool:
+        """Cancel a request.  Queued requests are dropped before
+        admission; a running request's slot (and, mid-speculation, its
+        scratch lease) is reclaimed at the next scheduler sync — any
+        tokens already delivered stand, no further tokens are produced.
+        Safe to call from a ``stream_cb`` (including the request's
+        own).  Returns False for unknown / already-finished ids."""
+        req = self._by_id.get(req_id)
+        if req is None or req.finished or req.cancelled:
+            return False
+        req.cancelled = True
+        self._cancel_dirty = True
+        return True
 
     # ------------------------------------------------------------------
     # Scheduler core
     # ------------------------------------------------------------------
+
+    def _drop_cancelled(self, req: Request) -> None:
+        """Retire a request cancelled before admission (no slot held)."""
+        req.t_done = self._now()
+        self.stats.record_cancelled()
+        self._finished.append(req)
+        self._by_id.pop(req.req_id, None)
+        if self.logger:
+            self.logger.log(event="cancel", req=req.req_id, slot=None,
+                            n_tokens=len(req.tokens))
+
+    def _sweep_cancelled(self) -> bool:
+        """Reclaim every cancelled request at a sync point: evict
+        running ones (slot + params row reset), purge queued ones."""
+        if not self._cancel_dirty:
+            return False
+        self._cancel_dirty = False
+        did = False
+        for slot, req in enumerate(self._slot_req):
+            if req is not None and req.cancelled:
+                self._finish(slot)
+                did = True
+        if any(r.cancelled for r in self._pending):
+            keep = []
+            for r in self._pending:
+                (keep.append(r) if not r.cancelled
+                 else self._drop_cancelled(r))
+            self._pending = keep
+            did = True
+        if any(e[2].cancelled for e in self._ready):
+            for e in self._ready:
+                if e[2].cancelled:
+                    self._drop_cancelled(e[2])
+            # keep the ORIGINAL (priority, seq) tuples: re-pushing with
+            # fresh seqs would reassign FIFO order from raw heap-array
+            # order and let later submissions jump earlier ones
+            self._ready = [e for e in self._ready if not e[2].cancelled]
+            heapq.heapify(self._ready)
+            did = True
+        return did
+
+    def _deliver(self, req: Request, new_toks: list) -> None:
+        """Stream delivery at a scheduler sync; the callback may flag a
+        cancellation, which the caller reclaims right after."""
+        if req.stream_cb is not None and new_toks:
+            req.stream_cb(req, new_toks)
 
     def _admit(self, req: Request) -> None:
         slot = self.pool.alloc()
         assert slot is not None
         t0 = self._now()
         req.t_admit = t0
-        self._key, k = jax.random.split(self._key)
+        self.pool.params.set(slot, req.params, req.seed)
         tok_dev, new_pool = self._prefill(
             self.params, self.pool.fresh, jnp.asarray(req.prompt[None]),
-            self.pool.cache, jnp.asarray([slot]), k)
+            self.pool.cache, jnp.asarray([slot]),
+            self.pool.params.row(slot), jnp.zeros((1,), jnp.int32))
         tok = int(np.asarray(tok_dev)[0, 0])
         self.pool.cache = new_pool
         req.t_first = self._now()
@@ -242,24 +384,40 @@ class Engine:
                             prompt_len=int(req.prompt.size))
         if self._hit_stop(req):
             self._finish(slot)
+        self._deliver(req, [tok])
+        if req.cancelled and not req.finished:
+            self._finish(slot)
 
     def _hit_stop(self, req: Request) -> bool:
         return (len(req.tokens) >= req.max_new
-                or (req.eos_id is not None
-                    and req.tokens[-1] == req.eos_id))
+                or (bool(req.stop_ids) and req.tokens[-1] in req.stop_ids))
 
     def _finish(self, slot: int) -> None:
         req = self._slot_req[slot]
         req.t_done = self._now()
-        self.stats.record_request(ttft=req.t_first - req.t_submit,
-                                  latency=req.t_done - req.t_submit)
+        if req.cancelled:
+            self.stats.record_cancelled()
+        else:
+            self.stats.record_request(ttft=req.t_first - req.t_submit,
+                                      latency=req.t_done - req.t_submit)
         self.pool.evict(slot)
         self._slot_req[slot] = None
         self._next_tok[slot, 0] = 0
         self._finished.append(req)
+        self._by_id.pop(req.req_id, None)
         if self.logger:
-            self.logger.log(event="finish", req=req.req_id, slot=slot,
-                            n_tokens=len(req.tokens))
+            self.logger.log(
+                event="cancel" if req.cancelled else "finish",
+                req=req.req_id, slot=slot, n_tokens=len(req.tokens))
+
+    def _base_steps(self, active) -> np.ndarray:
+        """Per-slot stream positions at sync start: tokens already
+        emitted — the fold_in counter that keys each slot's next
+        draws."""
+        base = np.zeros((self.pool.n_total,), np.int32)
+        for s in active:
+            base[s] = len(self._slot_req[s].tokens)
+        return base
 
     def _burst_len(self, active) -> int:
         """Decode steps until the next scheduling event.
@@ -270,14 +428,18 @@ class Engine:
         the eviction — zero intermediate host syncs, matching a static
         loop's dispatch pipelining with none of its wasted steps.  The
         quantum caps the burst only when an *uncertain* event could act
-        sooner: an EOS may evict any step (overshoot is trimmed but
-        wastes the slot until the burst ends), and a free slot plus
-        queued/pending work means an admission check is worth taking."""
+        sooner: a stop token may evict any step (overshoot is trimmed
+        but wastes the slot until the burst ends), a streaming callback
+        must be serviced regularly (it may cancel mid-stream), and a
+        free slot plus queued/pending work means an admission check is
+        worth taking."""
         remaining = min(self._slot_req[s].max_new - len(self._slot_req[s].tokens)
                         for s in active)
-        has_eos = any(self._slot_req[s].eos_id is not None for s in active)
+        uncertain = any(self._slot_req[s].stop_ids
+                        or self._slot_req[s].stream_cb is not None
+                        for s in active)
         may_admit = self.pool.n_free > 0 and (self._ready or self._pending)
-        if has_eos or may_admit:
+        if uncertain or may_admit:
             return max(1, min(remaining, self.ecfg.sched_quantum))
         return max(1, remaining)
 
@@ -287,11 +449,13 @@ class Engine:
         t0 = self._now()
         toks = jnp.asarray(self._next_tok)
         act = jnp.asarray(self.pool.active_mask())
+        sp = self.pool.params.device()
+        base = jnp.asarray(self._base_steps(active))
         cache = self.pool.cache
         outs = []
-        for _ in range(n_steps):
-            self._key, k = jax.random.split(self._key)
-            toks, cache = self._decode(self.params, cache, toks, act, k)
+        for t in range(n_steps):
+            toks, cache = self._decode(self.params, cache, toks, act,
+                                       sp, base + t)
             outs.append(toks)
         self.pool.cache = cache
         # one host sync per burst; device_get on the list avoids compiling
@@ -300,14 +464,19 @@ class Engine:
         n_appended = 0
         for slot in active:
             req = self._slot_req[slot]
+            new_toks = []
             for t in range(n_steps):
                 tok = int(burst[slot, t])
                 req.tokens.append(tok)
+                new_toks.append(tok)
                 n_appended += 1
                 self._next_tok[slot, 0] = tok
                 if self._hit_stop(req):
                     self._finish(slot)
-                    break                 # trim overshoot past EOS
+                    break                 # trim overshoot past a stop
+            self._deliver(req, new_toks)
+            if req.cancelled and not req.finished:
+                self._finish(slot)
         self.stats.record_decode(n_active=len(active),
                                  n_slots=self.ecfg.n_slots,
                                  dt=self._now() - t0,
@@ -316,6 +485,19 @@ class Engine:
     # ------------------------------------------------------------------
     # Speculative decoding (EngineConfig.draft)
     # ------------------------------------------------------------------
+
+    def _slot_depth(self, req: Request) -> int:
+        """Per-slot speculative window (DraftConfig.adaptive): after
+        warmup, clamp to the request's realized acceptance + 1 token of
+        optimism — pure depth arithmetic, never touches token values,
+        so greedy identity survives."""
+        dc = self.ecfg.draft
+        # warmup floors at 1 pass: the clamp needs at least one realized
+        # pass or the division below has nothing to divide by
+        if not dc.adaptive or req.spec_passes < max(1, dc.adapt_warmup):
+            return self._spec.k
+        realized = req.spec_accepted / req.spec_passes
+        return int(min(self._spec.k, max(1, math.ceil(realized) + 1)))
 
     def _spec_pass(self) -> None:
         """One fork -> K-draft -> batched-verify -> rollback pass over
@@ -330,10 +512,13 @@ class Engine:
         # clamp the draft window to the shortest remaining token budget:
         # a slot about to hit max_new would have its whole window
         # trimmed anyway, so drafting past it is pure wasted dispatch
-        # (EOS stays an uncertain event and is still trimmed host-side)
+        # (stop tokens stay an uncertain event and are still trimmed
+        # host-side); adaptive per-slot depth shrinks it further when
+        # every slot's realized acceptance is low
         remaining = min(self._slot_req[s].max_new
                         - len(self._slot_req[s].tokens) for s in active)
-        k_eff = min(spec.k, remaining - 1)
+        depths = {s: self._slot_depth(self._slot_req[s]) for s in active}
+        k_eff = min(max(depths.values()), remaining - 1)
         if k_eff < 1:
             # every active slot needs exactly one more token: plain
             # decode burst (its own burst-length logic handles this)
@@ -346,29 +531,31 @@ class Engine:
                 sc = self.pool.lease_scratch()
                 assert sc is not None        # n_scratch == n_slots
                 leases.append(sc)
-            self.pool.fork(active, leases)
+            self.pool.fork(active, leases)   # state + sampling params
             total = self.pool.n_total
             toks = np.zeros((total, 1), np.int32)
             toks[leases, 0] = self._next_tok[active, 0]
             scratch_mask = np.zeros((total,), bool)
             scratch_mask[leases] = True
-            keys = []
-            for _ in range(k_eff):
-                self._key, k = jax.random.split(self._key)
-                keys.append(k)
+            base = self._base_steps(active)
+            base[leases] = base[active]      # draft keys mirror live
+            limit = np.full((total,), k_eff, np.int32)
+            for s in active:
+                limit[s] = min(depths[s], k_eff)
+            sp = self.pool.params.device()
             cache, d_toks, d_logits = spec.propose(
                 self.pool.cache, jnp.asarray(toks),
-                jnp.asarray(scratch_mask), keys)
+                jnp.asarray(scratch_mask), sp, jnp.asarray(base), k_eff)
             # proposals were drafted at scratch rows; the verify wants
             # them at their live slots' rows
             perm = np.arange(total)
             perm[active] = leases
             perm = jnp.asarray(perm)
-            self._key, vk = jax.random.split(self._key)
             emit, n_acc, _, snap = spec.verify(
                 self.params, cache, jnp.asarray(self._next_tok),
                 d_toks[:, perm], d_logits[:, perm],
-                jnp.asarray(self.pool.active_mask()), vk)
+                jnp.asarray(self.pool.active_mask()), sp,
+                jnp.asarray(base), jnp.asarray(limit))
             # the rollback: every live slot's row of ``snap`` is the
             # state after exactly its accepted prefix
             self.pool.cache = snap
@@ -384,14 +571,19 @@ class Engine:
             n_accepted += n_emit - 1
             req.spec_passes += 1
             req.spec_accepted += n_emit - 1
+            new_toks = []
             for t in range(n_emit):
                 tok = int(emit_h[t, slot])
                 req.tokens.append(tok)
+                new_toks.append(tok)
                 n_appended += 1
                 self._next_tok[slot, 0] = tok
                 if self._hit_stop(req):
                     self._finish(slot)
-                    break                 # trim overshoot past EOS/budget
+                    break                 # trim overshoot past stop/budget
+            self._deliver(req, new_toks)
+            if req.cancelled and not req.finished:
+                self._finish(slot)
         self.stats.record_decode(n_active=len(active),
                                  n_slots=self.ecfg.n_slots,
                                  dt=self._now() - t0,
@@ -402,12 +594,17 @@ class Engine:
                                n_emitted=n_appended)
 
     def step(self) -> bool:
-        """One scheduler iteration: admit into free slots, then one decode
-        burst (or one speculative pass).  Returns False when there was
-        nothing to do."""
-        did = False
+        """One scheduler iteration: reclaim cancellations, admit into
+        free slots (highest priority first), then one decode burst (or
+        one speculative pass).  Returns False when there was nothing
+        to do."""
+        did = self._sweep_cancelled()
         while self._ready and self.pool.n_free:
-            self._admit(self._ready.popleft())
+            req = heapq.heappop(self._ready)[2]
+            if req.cancelled:
+                self._drop_cancelled(req)
+                continue
+            self._admit(req)
             did = True
         if self.pool.n_active:
             if self._spec is not None:
@@ -422,10 +619,10 @@ class Engine:
     # ------------------------------------------------------------------
 
     def run(self) -> list[Request]:
-        """Run until every submitted request is finished; replays
-        arrival-gated requests against a wall clock starting now.
-        Returns the requests finished during THIS call, in completion
-        order (the engine keeps no reference afterwards)."""
+        """Run until every submitted request is finished or cancelled;
+        replays arrival-gated requests against a wall clock starting
+        now.  Returns the requests retired during THIS call, in
+        completion order (the engine keeps no reference afterwards)."""
         self.stats.start()
         self._finished = []
         t0 = self._now()
@@ -433,10 +630,13 @@ class Engine:
             now = self._now() - t0
             while self._pending and self._pending[0].arrival <= now:
                 req = self._pending.pop(0)
+                if req.cancelled:
+                    self._drop_cancelled(req)
+                    continue
                 # TTFT/latency are measured from the (simulated) arrival,
                 # not from when the trace was queued before run()
                 req.t_submit = self._now()
-                self._ready.append(req)
+                self._push_ready(req)
             if not self.step() and self._pending:
                 wait = self._pending[0].arrival - (self._now() - t0)
                 if wait > 0:

@@ -64,6 +64,7 @@ class ServeStats:
         self.slot_steps = 0            # n_slots summed over decode steps
         self.active_steps = 0          # active slots summed (occupancy)
         self.n_requests = 0
+        self.n_cancelled = 0           # requests retired via cancel()
         # speculative decoding (deterministic counters — the bench gate
         # diffs these, never wall-clock)
         self.spec_passes = 0           # target verify passes
@@ -119,6 +120,13 @@ class ServeStats:
         self._ttft.append(ttft)
         self._latency.append(latency)
 
+    def record_cancelled(self):
+        """A cancelled request: its slot time already counted in the
+        decode counters, but it never completed — kept out of the
+        TTFT/latency distributions so cancellations can't flatter the
+        percentiles."""
+        self.n_cancelled += 1
+
     def summary(self) -> dict:
         wall = self.wall if self.wall > 0 else (
             self.prefill_time + self.decode_time)
@@ -126,6 +134,7 @@ class ServeStats:
         lat = sorted(self._latency)
         return {
             "requests": self.n_requests,
+            "cancelled": self.n_cancelled,
             "useful_tokens": self.useful_tokens,
             "prefill_tokens": self.prefill_tokens,
             "decode_steps": self.decode_steps,

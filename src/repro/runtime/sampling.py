@@ -1,0 +1,230 @@
+"""Per-request sampling parameters as DATA, not compile-time constants.
+
+MARCA's core idea is one reconfigurable datapath that serves
+heterogeneous operations without rewiring.  The serving analogue: ONE
+jit'd prefill/decode/verify signature must serve a batch whose slots
+mix greedy, temperature, top-k and top-p requests — so every sampling
+knob lives in per-slot device arrays (``SlotParams``) that are traced
+jit *arguments*, never Python constants baked into the jit cache key.
+Changing any request's ``SamplingParams`` therefore changes array
+VALUES, not traced shapes/consts: zero retracing for heterogeneous
+traffic (``TRACE_COUNTS`` below is the proof hook the tests and the
+bench gate assert on).
+
+Randomness is per-slot counter-based: each request carries its own PRNG
+key (from ``SamplingParams.seed``), and the token at stream position
+``i`` is drawn with ``fold_in(key, i)``.  A request's sampled stream
+is therefore a pure function of (params, prompt, weights) — bitwise
+reproducible no matter which slot it lands in, what else shares the
+batch, or when co-resident requests are admitted/evicted/cancelled.
+
+Greedy contract: a slot with ``temperature <= 0`` emits
+``argmax(float32 logits)`` — bitwise the pre-redesign engine's greedy
+path, and bitwise identical whether the surrounding batch is greedy or
+sampled (slot independence is the engine's existing exactness
+contract).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: jit re-trace counters.  The step functions in engine.py/spec_decode.py
+#: bump these with a Python side effect, which runs only when jax traces
+#: (never on a cache hit) — so a test can snapshot, serve heterogeneous
+#: traffic, and assert the delta is zero: one compile serves all
+#: SamplingParams.  Keyed by step name ("decode_step", "prefill_admit",
+#: "draft_step", "verify").
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request generation knobs (``Engine.submit(prompt, params)``).
+
+    temperature: 0 = greedy argmax (exact, reproducible); > 0 samples
+        from the temperature-scaled, top-k/top-p-filtered softmax.
+    top_k: keep only the k highest logits (0 = disabled).  Ties at the
+        k-th value are all kept (deterministic, version-stable).
+    top_p: keep the smallest prefix of the sorted distribution whose
+        cumulative probability reaches ``top_p`` (1.0 = disabled); the
+        crossing token is included, and at least one token always
+        survives.
+    seed: per-request PRNG seed; the sampled stream is a pure function
+        of (seed, params, prompt, weights), independent of batch
+        composition.  None derives a deterministic seed from the
+        engine seed and the request id.
+    stop: token ids, ANY of which ends the stream (the stop token is
+        delivered, then the slot is evicted).  ``Engine.submit``'s
+        ``eos_id`` convenience appends to this.
+    max_new: token budget including the prefill-sampled first token.
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: Optional[int] = None
+    stop: tuple = ()
+    max_new: int = 32
+
+    def validate(self) -> None:
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0; "
+                             f"got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0 (0 disables); "
+                             f"got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1]; got {self.top_p}")
+        if self.max_new < 1:
+            raise ValueError(f"max_new must be >= 1; got {self.max_new}")
+
+
+#: the engine-wide default: greedy argmax, 32-token budget
+GREEDY = SamplingParams()
+
+
+def seed_key_data(seed: int) -> np.ndarray:
+    """Raw uint32 key data for ``jax.random.key(seed)`` — the host-side
+    representation SlotParams stores per slot (wrapped back into a
+    typed key inside the jit, so key material is ordinary array data
+    that never keys a jit cache)."""
+    return np.asarray(jax.random.key_data(jax.random.key(seed)))
+
+
+class SlotParams:
+    """Per-slot sampling-parameter arrays over a pool's rows.
+
+    Host-side numpy mirrors (mutated O(1) on admit/evict/fork — the
+    slot lifecycle never touches the device) with ``device()``
+    producing the dict of jnp arrays the jit'd step functions take as
+    traced arguments.  Rows are the pool's rows (live + scratch); a
+    speculative fork copies the live row onto the scratch row so the
+    draft samples with the request's own knobs and key stream.
+    """
+
+    FIELDS = ("temperature", "top_k", "top_p", "key_data")
+
+    def __init__(self, n: int):
+        kd = seed_key_data(0)
+        self.n = n
+        self.temperature = np.zeros((n,), np.float32)
+        self.top_k = np.zeros((n,), np.int32)
+        self.top_p = np.ones((n,), np.float32)
+        self.key_data = np.zeros((n,) + kd.shape, kd.dtype)
+
+    def set(self, slot: int, sp: SamplingParams, seed: int) -> None:
+        self.temperature[slot] = sp.temperature
+        self.top_k[slot] = sp.top_k
+        self.top_p[slot] = sp.top_p
+        self.key_data[slot] = seed_key_data(seed)
+
+    def clear(self, slot: int) -> None:
+        """Reset a row to the greedy default (eviction hygiene: a freed
+        slot can never leak its request's temperature or key into the
+        next admission)."""
+        self.temperature[slot] = 0.0
+        self.top_k[slot] = 0
+        self.top_p[slot] = 1.0
+        self.key_data[slot] = 0
+
+    def copy(self, src: Sequence[int], dst: Sequence[int]) -> None:
+        """Mirror a state fork: dst rows take src rows' params."""
+        src, dst = list(src), list(dst)
+        for f in self.FIELDS:
+            a = getattr(self, f)
+            a[dst] = a[src]
+
+    def row(self, slot: int) -> dict:
+        """Single-row device view (batch-1 prefill sampling)."""
+        return {f: jnp.asarray(getattr(self, f)[slot:slot + 1])
+                for f in self.FIELDS}
+
+    def device(self) -> dict:
+        """All rows as jnp arrays — the traced jit argument."""
+        return {f: jnp.asarray(getattr(self, f)) for f in self.FIELDS}
+
+
+# ---------------------------------------------------------------------------
+# Device-side sampling (runs inside the jit'd step functions)
+# ---------------------------------------------------------------------------
+
+def slot_keys(key_data, idx):
+    """Per-slot derived keys: wrap row r's key data and fold in
+    ``idx[r]`` (the slot's stream position / pass counter) — the
+    counter-based key schedule that makes streams batch-independent."""
+    keys = jax.random.wrap_key_data(key_data)
+    return jax.vmap(jax.random.fold_in)(keys, idx)
+
+
+def fold_tag(keys, tag: int):
+    """Derive a sub-stream (accept / residual / bonus draws in the
+    speculative pass) from already-folded per-slot keys."""
+    return jax.vmap(lambda k: jax.random.fold_in(k, tag))(keys)
+
+
+def filter_logits(scaled, top_k, top_p):
+    """Vectorized per-row top-k + top-p masking.
+
+    scaled (b, V) f32 logits (already temperature-scaled);
+    top_k (b,) int32 (0 disables); top_p (b,) f32 (1.0 ~disables).
+    Returns logits with masked-out entries at -inf.  Ties at either
+    threshold are kept (a deterministic superset — stable across
+    platforms, and harmless: tied logits are interchangeable).
+    """
+    v = scaled.shape[-1]
+    srt = jnp.sort(scaled, axis=-1)[..., ::-1]            # descending
+    k = jnp.where(top_k > 0, jnp.clip(top_k, 1, v), v)
+    kth = jnp.take_along_axis(srt, k[:, None] - 1, axis=-1)
+    probs = jax.nn.softmax(srt, axis=-1)
+    csum = jnp.cumsum(probs, axis=-1)
+    # keep sorted position j iff the mass strictly before it is < top_p
+    # (includes the crossing token); clamp so >= 1 token survives
+    n_keep = jnp.maximum(((csum - probs) < top_p[:, None]).sum(-1), 1)
+    pth = jnp.take_along_axis(srt, n_keep[:, None] - 1, axis=-1)
+    return jnp.where((scaled >= kth) & (scaled >= pth), scaled, -jnp.inf)
+
+
+def sample_dist(logits, sp):
+    """(b, V) raw logits -> the per-slot SAMPLING distribution's logits:
+    temperature-scaled then top-k/top-p filtered.  Shared between the
+    burst sampler and speculative acceptance so the draft's proposal
+    distribution and the acceptance ratio use identical math (greedy
+    rows get a neutral scale of 1; callers select argmax for them)."""
+    lg = logits.astype(jnp.float32)
+    t = jnp.where(sp["temperature"] > 0, sp["temperature"], 1.0)
+    return filter_logits(lg / t[:, None], sp["top_k"], sp["top_p"])
+
+
+def sample(logits, sp, step):
+    """Vectorized per-slot sampling: (b, V) logits -> (b,) int32 tokens.
+
+    ``sp`` is a SlotParams.device()/row() dict with b rows; ``step``
+    (b,) int32 is each slot's stream position (tokens already emitted),
+    folded into the slot key so position i's draw is reproducible
+    independent of batch composition.  Rows with temperature <= 0 take
+    the greedy argmax (bitwise the pre-redesign path); a mixed batch
+    costs one dispatch and heterogeneous params never retrace.
+
+    The sampled battery (sort/softmax/cumsum/categorical) sits behind a
+    ``lax.cond`` on ``any(temperature > 0)``: an all-greedy batch pays
+    one argmax plus the predicate at runtime — the pre-redesign greedy
+    cost — while keeping a single compiled program (a static host flag
+    would fork the jit cache and retrace when traffic turns mixed).
+    """
+    lg = logits.astype(jnp.float32)
+    greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+
+    def _mixed(_):
+        dist = sample_dist(logits, sp)
+        keys = slot_keys(sp["key_data"], step)
+        drawn = jax.vmap(jax.random.categorical)(keys,
+                                                 dist).astype(jnp.int32)
+        return jnp.where(sp["temperature"] > 0, drawn, greedy)
+
+    return jax.lax.cond(jnp.any(sp["temperature"] > 0),
+                        _mixed, lambda _: greedy, None)

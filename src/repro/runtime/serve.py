@@ -4,9 +4,21 @@ batching Engine (runtime/engine.py).
 ``Server.generate`` keeps the original static-batch API — same-length
 prompts, b <= batch_slots, (b, max_new) output — but internally submits
 each row as an independent request to the engine, so the same jit'd
-prefill/decode functions and slot pool serve both entry points.  New code
-should use ``Engine`` directly (variable-length prompts, per-request
-max_new/EOS, arrival traces).
+prefill/decode functions and slot pool serve both entry points.  New
+code should use ``Engine`` directly: per-request ``SamplingParams``
+(temperature / top-k / top-p / seed / stop ids / budget as data — one
+jit cache for heterogeneous traffic), streaming callbacks,
+cancellation, priorities, variable-length prompts, arrival traces.
+
+Migration notes (PR 5 generation-API redesign):
+  * ``EngineConfig.temperature`` is gone — sampling is per request via
+    ``Engine.submit(prompt, SamplingParams(...))``.  ``ServeConfig``
+    keeps its engine-wide ``temperature``/``top_k``/``top_p`` fields
+    and maps them onto a per-request SamplingParams here, so existing
+    Server callers see unchanged behavior (greedy by default).
+  * Sampled streams are per-request-seeded (derived from
+    ``ServeConfig.seed`` and the row index), so a Server batch is
+    reproducible regardless of slot scheduling.
 
 Behavioral note vs the old static loop: with an ``eos_id`` the engine
 stops each row at its own EOS and frees the slot; rows that finish early
@@ -20,13 +32,19 @@ from typing import Optional
 import numpy as np
 
 from repro.runtime.engine import Engine, EngineConfig
+from repro.runtime.sampling import SamplingParams
 
 
 @dataclasses.dataclass
 class ServeConfig:
     batch_slots: int = 4
     max_seq: int = 256
+    # engine-wide sampling defaults, applied to every generate() row as
+    # its per-request SamplingParams (legacy surface; per-request
+    # control lives on Engine.submit)
     temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
     seed: int = 0
     # pooled recurrent-state storage dtype override (cfg.state_dtype):
     # "int8"/"fp8" multiply slot capacity ~4x; None keeps the model cfg
@@ -40,8 +58,7 @@ class Server:
         self.params = params
         self.engine = Engine(cfg, params, EngineConfig(
             n_slots=scfg.batch_slots, max_seq=scfg.max_seq,
-            temperature=scfg.temperature, seed=scfg.seed,
-            state_dtype=scfg.state_dtype))
+            seed=scfg.seed, state_dtype=scfg.state_dtype))
 
     def generate(self, prompts: np.ndarray, max_new: int = 32,
                  eos_id: Optional[int] = None) -> np.ndarray:
@@ -51,7 +68,10 @@ class Server:
         if b > self.scfg.batch_slots:
             raise ValueError(f"batch {b} > batch_slots "
                              f"{self.scfg.batch_slots}")
-        reqs = [self.engine.submit(row, max_new=max_new, eos_id=eos_id)
+        sp = SamplingParams(temperature=self.scfg.temperature,
+                            top_k=self.scfg.top_k, top_p=self.scfg.top_p,
+                            max_new=max_new)
+        reqs = [self.engine.submit(row, params=sp, eos_id=eos_id)
                 for row in np.asarray(prompts)]
         self.engine.run()
         width = max(len(r.tokens) for r in reqs)

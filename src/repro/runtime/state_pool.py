@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.models import registry
 from repro.parallel import sharding
+from repro.runtime import sampling
 
 
 # Shared per-config jit caches (cfg is frozen/hashable): every pool for a
@@ -87,6 +88,11 @@ class SlotStatePool:
         self._scatter_fn = _jit_scatter(cfg)
         self._mask_fn = _jit_mask(cfg)
         self._fork_fn = _jit_fork(cfg)
+        # per-slot sampling parameters (temperature/top-k/top-p/key) ride
+        # with the slot: set on admission, copied on fork, reset on
+        # eviction — the engine passes params.device() into the jit'd
+        # steps as traced arrays, so heterogeneous values never retrace
+        self.params = sampling.SlotParams(self.n_total)
         self._free: list[int] = list(range(n_slots))
         # scratch ids live in [n_slots, n_total): the ranges are disjoint
         # by construction, so a scratch lease can never collide with a
@@ -171,6 +177,9 @@ class SlotStatePool:
             return
         self.cache = self._fork_fn(self.cache, jnp.asarray(list(src)),
                                    jnp.asarray(list(dst)))
+        # the fork's sampling params move with the state: the draft must
+        # propose with the request's own temperature/top-k/top-p and key
+        self.params.copy(src, dst)
 
     # -- device-state operations --------------------------------------------
 
@@ -208,6 +217,7 @@ class SlotStatePool:
         assert self._active[slot], f"slot {slot} not active"
         self.cache = self._scatter_fn(self.cache, self._fresh,
                                       jnp.asarray([slot]))
+        self.params.clear(slot)
         self._active[slot] = False
         self._free.append(slot)
 

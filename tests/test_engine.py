@@ -325,6 +325,154 @@ def test_no_scratch_lease_leaks_after_spec_run():
     assert eng.pool.n_scratch_free == eng.pool.n_scratch
 
 
+# ---------------------------------------------------------------------------
+# Cancellation: aborting a request mid-burst / mid-spec-pass reclaims
+# its slot (and scratch leases) and leaves every survivor's stream
+# bitwise unchanged — per-slot keys make sampling independent of
+# co-resident evictions.
+# ---------------------------------------------------------------------------
+
+def _cancel_fixture(cfg):
+    from repro.runtime.sampling import SamplingParams
+    rng = np.random.default_rng(41)
+    pa, pb, pc = (rng.integers(0, cfg.vocab, size=(l,)).astype(np.int32)
+                  for l in (4, 6, 5))
+    # the survivor is SAMPLED: bitwise survival is only guaranteed
+    # because randomness is per-slot counter-based, never shared
+    sp = SamplingParams(temperature=0.9, seed=7, max_new=12)
+    return pa, pb, pc, sp
+
+
+def test_cancel_mid_burst_reclaims_slot_and_preserves_survivors():
+    cfg, params = _setup("mamba-130m")
+    pa, pb, pc, sp = _cancel_fixture(cfg)
+    # reference: the same trace with the victim never submitted
+    ref = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=64,
+                                           sched_quantum=2))
+    a0 = ref.submit(pa, params=sp)
+    c0 = ref.submit(pc, max_new=6)
+    ref.run()
+
+    eng = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=64,
+                                           sched_quantum=2))
+
+    def cb(req, toks):
+        if len(req.tokens) >= 3:
+            assert eng.cancel(req.req_id)
+
+    a = eng.submit(pa, params=sp)
+    b = eng.submit(pb, max_new=12, stream_cb=cb)
+    c = eng.submit(pc, max_new=6)          # backfills the freed slot
+    eng.run()
+    assert b.cancelled and b.finished
+    assert 3 <= len(b.tokens) < 12          # stopped well short of budget
+    assert a.tokens == a0.tokens, \
+        "sampled survivor perturbed by a co-resident cancellation"
+    assert c.tokens == c0.tokens
+    # no pool leak: every slot free, params rows reset
+    assert eng.pool.n_active == 0 and eng.pool.n_free == eng.pool.n_slots
+    assert not eng.pool.params.temperature.any()
+    assert eng.stats.n_cancelled == 1
+    assert eng.stats.summary()["cancelled"] == 1
+    assert eng.stats.n_requests == 2        # cancelled req not counted
+
+
+def test_cancel_mid_spec_pass_reclaims_scratch_and_preserves_survivors():
+    from repro.runtime.spec_decode import DraftConfig
+    cfg, params = _setup("mamba-130m")
+    pa, pb, pc, sp = _cancel_fixture(cfg)
+    draft = DraftConfig(k=3, layers=2)
+    ref = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=64,
+                                           draft=draft))
+    a0 = ref.submit(pa, params=sp)
+    c0 = ref.submit(pc, max_new=6)
+    ref.run()
+
+    eng = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=64,
+                                           draft=draft))
+
+    def cb(req, toks):
+        if len(req.tokens) >= 3:
+            eng.cancel(req.req_id)
+
+    a = eng.submit(pa, params=sp)
+    b = eng.submit(pb, max_new=12, stream_cb=cb)
+    c = eng.submit(pc, max_new=6)
+    eng.run()
+    assert b.cancelled and len(b.tokens) < 12
+    assert a.tokens == a0.tokens and c.tokens == c0.tokens
+    assert eng.pool.n_active == 0 and eng.pool.n_free == eng.pool.n_slots
+    assert eng.pool.n_scratch_free == eng.pool.n_scratch, \
+        "cancellation leaked a scratch lease"
+    assert eng.stats.n_cancelled == 1
+
+
+def test_cancel_queued_request_never_admitted():
+    cfg, params = _setup("mamba-130m")
+    pa, pb, _, _ = _cancel_fixture(cfg)
+    eng = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=64))
+    r1 = eng.submit(pa, max_new=4)
+    r2 = eng.submit(pb, max_new=4)
+    assert eng.cancel(r2.req_id)
+    assert not eng.cancel(r2.req_id)        # idempotent: already flagged
+    eng.run()
+    assert r2.cancelled and r2.finished and r2.tokens == []
+    assert r1.tokens and not r1.cancelled
+    assert eng.stats.n_cancelled == 1 and eng.stats.n_requests == 1
+    assert not eng.cancel(12345)            # unknown id
+
+
+def test_cancel_sweep_preserves_fifo_order_of_survivors():
+    """The cancel sweep rebuilds the ready heap from the ORIGINAL
+    (priority, seq) tuples: queued survivors keep their FIFO order
+    even though raw heap-array order is scrambled after a pop."""
+    cfg, params = _setup("mamba-130m")
+    rng = np.random.default_rng(43)
+    prompts = [rng.integers(0, cfg.vocab, size=(4,)).astype(np.int32)
+               for _ in range(4)]
+    eng = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=64))
+
+    def cb(req, toks):
+        if len(req.tokens) >= 2:
+            eng.cancel(rb.req_id)      # cancel a QUEUED request
+
+    ra = eng.submit(prompts[0], max_new=4, stream_cb=cb)
+    rb = eng.submit(prompts[1], max_new=4)
+    rc = eng.submit(prompts[2], max_new=4)
+    rd = eng.submit(prompts[3], max_new=4)
+    done = eng.run()
+    assert rb.cancelled and rb.tokens == []
+    # submission order among survivors must hold: a, then c, then d
+    completed = [r.req_id for r in done if not r.cancelled]
+    assert completed == [ra.req_id, rc.req_id, rd.req_id], completed
+
+
+def test_adaptive_draft_warmup_zero_does_not_crash():
+    """adapt_warmup=0 floors at one pass (the clamp needs a realized
+    pass before it can divide by the pass count)."""
+    from repro.runtime.spec_decode import DraftConfig
+    cfg, params = _setup("mamba-130m")
+    eng = Engine(cfg, params,
+                 EngineConfig(n_slots=1, max_seq=64,
+                              draft=DraftConfig(k=3, layers=2,
+                                                adaptive=True,
+                                                adapt_warmup=0)))
+    r = eng.submit(np.arange(4, dtype=np.int32), max_new=8)
+    eng.run()
+    assert len(r.tokens) == 8
+
+
+def test_cancel_pending_arrival_gated_request():
+    cfg, params = _setup("mamba-130m")
+    pa, pb, _, _ = _cancel_fixture(cfg)
+    eng = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=64))
+    r1 = eng.submit(pa, max_new=3)
+    r2 = eng.submit(pb, max_new=3, arrival=0.01)
+    eng.cancel(r2.req_id)
+    eng.run()
+    assert r2.cancelled and r2.tokens == [] and r1.finished
+
+
 def test_abandoned_lease_released_when_burst_aborts(monkeypatch):
     """A speculative pass that dies mid-burst (here: the verify jit
     raises) must still return its scratch leases — an abandoned lease

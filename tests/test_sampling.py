@@ -1,0 +1,359 @@
+"""Per-request generation API: vectorized sampling, one jit cache for
+heterogeneous traffic, seeded reproducibility, streaming, cancellation,
+priority, stop ids.
+
+The contract under test (ISSUE 5 / PR 5):
+
+  * SamplingParams are DATA — a batch mixing greedy, temperature,
+    top-k and top-p requests is served by ONE compiled
+    prefill/decode signature; changing any field never retraces
+    (sampling.TRACE_COUNTS deltas are asserted to be zero).
+  * Greedy slots are bitwise identical to an all-greedy engine — and
+    to the pre-redesign engine — no matter what shares the batch.
+  * A sampled stream is a pure function of (seed, params, prompt,
+    weights): independent of slot placement, batch composition, and
+    co-resident admissions/evictions/cancellations.
+  * Streaming callbacks deliver every token exactly once, in order,
+    at scheduler syncs; cancellation reclaims the slot (and scratch
+    leases) without perturbing survivors.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import registry
+from repro.parallel import sharding
+from repro.runtime import sampling
+from repro.runtime.engine import Engine, EngineConfig
+from repro.runtime.sampling import SamplingParams
+
+jax.config.update("jax_platform_name", "cpu")
+RNG = np.random.default_rng(31)
+
+
+def _setup(name="mamba-130m"):
+    cfg = configs.smoke_variant(configs.get_config(name))
+    cfg = dataclasses.replace(cfg, vocab=64, dtype="float32",
+                              capacity_factor=float(max(cfg.n_experts, 1)))
+    params = sharding.tree_values(
+        registry.init_params(cfg, jax.random.key(0)))
+    return cfg, params
+
+
+def _prompts(n, vocab=64, seed=5, lo=3, hi=10):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, size=(l,)).astype(np.int32)
+            for l in rng.integers(lo, hi, size=n)]
+
+
+MIXED = [SamplingParams(),
+         SamplingParams(temperature=0.8, seed=11),
+         SamplingParams(temperature=1.2, top_k=8, seed=12),
+         SamplingParams(temperature=0.7, top_p=0.9, seed=13)]
+
+
+# ---------------------------------------------------------------------------
+# filter_logits / sample units
+# ---------------------------------------------------------------------------
+
+def test_filter_logits_top_k_per_row():
+    lg = jnp.asarray([[1.0, 4.0, 2.0, 3.0],
+                      [1.0, 4.0, 2.0, 3.0],
+                      [1.0, 4.0, 2.0, 3.0]])
+    top_k = jnp.asarray([0, 1, 2], jnp.int32)          # disabled, 1, 2
+    top_p = jnp.ones((3,), jnp.float32)
+    out = np.asarray(sampling.filter_logits(lg, top_k, top_p))
+    assert np.isfinite(out[0]).all()                   # k=0 keeps all
+    assert np.isfinite(out[1]).sum() == 1 and out[1, 1] == 4.0
+    assert np.isfinite(out[2]).sum() == 2              # keeps {4, 3}
+    assert np.isfinite(out[2, [1, 3]]).all()
+
+
+def test_filter_logits_top_p_crossing_token_included():
+    # softmax of [2, 1, 0, -9] ~ [0.705, 0.259, 0.095, ...]: top_p=0.5
+    # keeps the crossing token (the first), top_p=0.8 keeps two
+    lg = jnp.asarray([[2.0, 1.0, 0.0, -9.0],
+                      [2.0, 1.0, 0.0, -9.0]])
+    top_p = jnp.asarray([0.5, 0.8], jnp.float32)
+    out = np.asarray(sampling.filter_logits(
+        lg, jnp.zeros((2,), jnp.int32), top_p))
+    assert np.isfinite(out[0]).sum() == 1 and np.isfinite(out[0, 0])
+    assert np.isfinite(out[1]).sum() == 2
+    assert np.isfinite(out[1, [0, 1]]).all()
+
+
+def test_filter_logits_always_keeps_one_token():
+    # tiny top_p must still keep the argmax, never an empty support
+    lg = jnp.asarray(RNG.normal(size=(4, 16)), jnp.float32)
+    out = np.asarray(sampling.filter_logits(
+        lg, jnp.zeros((4,), jnp.int32),
+        jnp.full((4,), 1e-9, jnp.float32)))
+    for r in range(4):
+        assert np.isfinite(out[r]).sum() == 1
+        assert np.isfinite(out[r, np.argmax(np.asarray(lg)[r])])
+
+
+def test_sample_greedy_rows_are_argmax():
+    b, v = 5, 32
+    lg = jnp.asarray(RNG.normal(size=(b, v)), jnp.float32)
+    sp = {"temperature": jnp.zeros((b,), jnp.float32),
+          "top_k": jnp.zeros((b,), jnp.int32),
+          "top_p": jnp.ones((b,), jnp.float32),
+          "key_data": jnp.asarray(
+              np.stack([sampling.seed_key_data(i) for i in range(b)]))}
+    toks = np.asarray(sampling.sample(lg, sp, jnp.zeros((b,), jnp.int32)))
+    np.testing.assert_array_equal(toks, np.argmax(np.asarray(lg), -1))
+
+
+def test_sample_respects_per_row_support():
+    """Sampled tokens always land inside each row's own top-k/top-p
+    support — per-row filtering really is per-row."""
+    b, v = 3, 32
+    lg = jnp.asarray(RNG.normal(size=(b, v)) * 2, jnp.float32)
+    sp = {"temperature": jnp.full((b,), 1.5, jnp.float32),
+          "top_k": jnp.asarray([4, 0, 2], jnp.int32),
+          "top_p": jnp.asarray([1.0, 0.5, 1.0], jnp.float32),
+          "key_data": jnp.asarray(
+              np.stack([sampling.seed_key_data(i) for i in range(b)]))}
+    support = np.isfinite(np.asarray(sampling.sample_dist(lg, sp)))
+    assert support[0].sum() == 4 and support[2].sum() == 2
+    for step in range(50):
+        toks = np.asarray(sampling.sample(
+            lg, sp, jnp.full((b,), step, jnp.int32)))
+        for r in range(b):
+            assert support[r, toks[r]], (step, r, toks[r])
+
+
+def test_sample_batch_matches_per_row_calls():
+    """Vectorization is sound: sampling a batch equals sampling each
+    row alone with the same key/step — the property that makes streams
+    batch-composition-independent."""
+    b, v = 4, 24
+    lg = jnp.asarray(RNG.normal(size=(b, v)), jnp.float32)
+    sp = {"temperature": jnp.asarray([0.0, 0.9, 1.3, 0.6], jnp.float32),
+          "top_k": jnp.asarray([0, 0, 5, 0], jnp.int32),
+          "top_p": jnp.asarray([1.0, 1.0, 1.0, 0.8], jnp.float32),
+          "key_data": jnp.asarray(
+              np.stack([sampling.seed_key_data(7 + i) for i in range(b)]))}
+    step = jnp.asarray([3, 1, 4, 1], jnp.int32)
+    full = np.asarray(sampling.sample(lg, sp, step))
+    for r in range(b):
+        row = {k: val[r:r + 1] for k, val in sp.items()}
+        one = np.asarray(sampling.sample(lg[r:r + 1], row,
+                                         step[r:r + 1]))
+        assert one[0] == full[r], (r, one, full)
+
+
+def test_sampling_params_validation():
+    with pytest.raises(ValueError):
+        SamplingParams(temperature=-0.1).validate()
+    with pytest.raises(ValueError):
+        SamplingParams(top_k=-1).validate()
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0).validate()
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=1.5).validate()
+    with pytest.raises(ValueError):
+        SamplingParams(max_new=0).validate()
+
+
+def test_engine_rejects_invalid_params():
+    cfg, params = _setup()
+    eng = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=32))
+    with pytest.raises(ValueError):
+        eng.submit(np.arange(4, dtype=np.int32),
+                   params=SamplingParams(top_p=2.0))
+
+
+# ---------------------------------------------------------------------------
+# One jit cache for heterogeneous traffic
+# ---------------------------------------------------------------------------
+
+def test_mixed_sampling_batch_zero_retrace_and_greedy_bitwise():
+    """The tentpole gate: after a greedy warmup, serving a batch that
+    mixes greedy / temperature / top-k / top-p retraces NOTHING
+    (decode and prefill compile counts unchanged), and the greedy
+    rows' streams are bitwise the all-greedy engine's."""
+    cfg, params = _setup()
+    prompts = [p[:4] for p in _prompts(4, lo=4, hi=5)]   # one length ->
+    # the per-prompt-length prefill compile is warmed by the first run
+    ref_eng = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=64))
+    ref = [ref_eng.submit(p, max_new=6) for p in prompts]
+    ref_eng.run()
+
+    before = dict(sampling.TRACE_COUNTS)
+    eng = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=64))
+    got = [eng.submit(p, params=sp, max_new=6)
+           for p, sp in zip(prompts, MIXED)]
+    eng.run()
+    after = dict(sampling.TRACE_COUNTS)
+    assert after.get("decode_step", 0) == before.get("decode_step", 0), \
+        "heterogeneous SamplingParams retraced the decode step"
+    assert after.get("prefill_admit", 0) == before.get("prefill_admit", 0), \
+        "heterogeneous SamplingParams retraced the prefill"
+    # greedy slots bitwise vs the all-greedy engine
+    assert got[0].tokens == ref[0].tokens
+    # sampled slots actually sample (streams differ from greedy)
+    assert any(got[i].tokens != ref[i].tokens for i in (1, 2, 3))
+    # deterministic accounting: every request got its full budget
+    assert all(len(r.tokens) == 6 for r in got)
+
+
+def test_seeded_stream_independent_of_batch_composition():
+    """The same seeded request produces the identical token stream
+    alone, among greedy fillers, and among other sampled requests —
+    sampling randomness is per-slot counter-based, never shared."""
+    cfg, params = _setup()
+    prompts = _prompts(4)
+    sp = SamplingParams(temperature=0.9, seed=42, max_new=8)
+    alone = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=64))
+    r_alone = alone.submit(prompts[0], params=sp)
+    alone.run()
+    crowd = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=64))
+    fillers = [crowd.submit(p, params=q, max_new=5)
+               for p, q in zip(prompts[1:], MIXED[1:])]
+    r_crowd = crowd.submit(prompts[0], params=sp)
+    crowd.run()
+    assert r_alone.tokens == r_crowd.tokens, \
+        "seeded stream depended on batch composition"
+    assert all(f.finished for f in fillers)
+
+
+def test_same_seed_same_stream_distinct_seeds_differ():
+    cfg, params = _setup()
+    p = _prompts(1)[0]
+    eng = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=64))
+    a = eng.submit(p, params=SamplingParams(temperature=1.5, seed=3,
+                                            max_new=8))
+    b = eng.submit(p, params=SamplingParams(temperature=1.5, seed=3,
+                                            max_new=8))
+    c = eng.submit(p, params=SamplingParams(temperature=1.5, seed=4,
+                                            max_new=8))
+    eng.run()
+    assert a.tokens == b.tokens
+    assert a.tokens != c.tokens
+
+
+def test_unseeded_requests_get_deterministic_derived_seeds():
+    """seed=None derives from (engine seed, request id): two runs of
+    the same trace agree; distinct requests differ."""
+    cfg, params = _setup()
+    p = _prompts(1)[0]
+    sp = SamplingParams(temperature=1.2, max_new=8)      # no seed
+    runs = []
+    for _ in range(2):
+        eng = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=64,
+                                               seed=9))
+        a = eng.submit(p, params=sp)
+        b = eng.submit(p, params=sp)
+        eng.run()
+        runs.append((list(a.tokens), list(b.tokens)))
+    assert runs[0] == runs[1]
+    assert runs[0][0] != runs[0][1]
+
+
+# ---------------------------------------------------------------------------
+# Streaming front-end
+# ---------------------------------------------------------------------------
+
+def test_stream_cb_delivers_every_token_once_in_order():
+    cfg, params = _setup()
+    prompts = _prompts(3)
+    eng = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=64,
+                                           sched_quantum=3))
+    seen: dict[int, list] = {}
+    finished_at_last: dict[int, bool] = {}
+
+    def cb(req, toks):
+        assert len(toks) >= 1
+        seen.setdefault(req.req_id, []).extend(toks)
+        finished_at_last[req.req_id] = req.finished
+
+    reqs = [eng.submit(p, params=sp, max_new=7, stream_cb=cb)
+            for p, sp in zip(prompts, MIXED)]
+    eng.run()
+    for r in reqs:
+        assert seen[r.req_id] == r.tokens, \
+            "stream deliveries diverged from the final token list"
+        assert finished_at_last[r.req_id], \
+            "final delivery did not see req.finished"
+
+
+def test_stream_cb_first_token_delivered_at_admit():
+    cfg, params = _setup()
+    first: dict[int, int] = {}
+
+    def cb(req, toks):
+        first.setdefault(req.req_id, toks[0])
+
+    eng = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=64))
+    r = eng.submit(_prompts(1)[0], max_new=5, stream_cb=cb)
+    eng.run()
+    assert first[r.req_id] == r.tokens[0]
+
+
+# ---------------------------------------------------------------------------
+# Priority-aware admission
+# ---------------------------------------------------------------------------
+
+def test_priority_admits_before_earlier_fifo_submissions():
+    cfg, params = _setup()
+    prompts = _prompts(3)
+    eng = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=64))
+    lo1 = eng.submit(prompts[0], max_new=3)
+    lo2 = eng.submit(prompts[1], max_new=3)
+    hi = eng.submit(prompts[2], max_new=3, priority=5)
+    done = eng.run()
+    order = [r.req_id for r in done]
+    # all three were ready at run(): the high-priority request admits
+    # first, then FIFO among the equal-priority rest
+    assert order == [hi.req_id, lo1.req_id, lo2.req_id]
+
+
+def test_arrival_trace_inserts_sorted_out_of_order():
+    """bisect.insort keeps the pending list arrival-sorted however the
+    trace is submitted; replay completes every request."""
+    cfg, params = _setup()
+    prompts = _prompts(4)
+    eng = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=64))
+    arrivals = [0.03, 0.0, 0.02, 0.01]
+    reqs = [eng.submit(p, max_new=3, arrival=a)
+            for p, a in zip(prompts, arrivals)]
+    assert [r.arrival for r in eng._pending] == sorted(arrivals)
+    eng.run()
+    assert all(r.finished for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# Stop token ids
+# ---------------------------------------------------------------------------
+
+def test_stop_ids_any_of_set_stops_stream():
+    cfg, params = _setup()
+    p = _prompts(1)[0]
+    ref_eng = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=64))
+    ref = ref_eng.submit(p, max_new=10)
+    ref_eng.run()
+    stop = (ref.tokens[4], ref.tokens[2])     # second one fires first
+    eng = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=64))
+    r = eng.submit(p, params=SamplingParams(stop=stop, max_new=10))
+    eng.run()
+    assert r.tokens == ref.tokens[:3] and r.tokens[-1] == stop[1]
+
+
+def test_eos_id_composes_with_params_stop():
+    cfg, params = _setup()
+    p = _prompts(1)[0]
+    ref_eng = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=64))
+    ref = ref_eng.submit(p, max_new=10)
+    ref_eng.run()
+    eng = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=64))
+    r = eng.submit(p, params=SamplingParams(stop=(ref.tokens[5],),
+                                            max_new=10),
+                   eos_id=ref.tokens[1])
+    eng.run()
+    assert r.tokens == ref.tokens[:2]         # eos_id fired first

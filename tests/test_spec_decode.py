@@ -113,6 +113,77 @@ def test_greedy_spec_decode_token_identical(name, state_dtype, step_impl):
                for r in got)
 
 
+def test_spec_mixed_batch_greedy_slots_token_identical():
+    """Per-slot temperatures in the acceptance math: a batch mixing
+    greedy and sampled requests runs through ONE verify jit, and the
+    greedy slots' streams are bitwise the all-greedy spec engine's
+    (which is bitwise plain greedy decode)."""
+    from repro.runtime import sampling
+    from repro.runtime.sampling import SamplingParams
+    cfg, params = _setup("mamba-130m")
+    prompts = _prompts(cfg, 4)
+    plain = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=64))
+    ref = [plain.submit(p, max_new=7) for p in prompts]
+    plain.run()
+    draft = DraftConfig(k=3, layers=_shallow_layers(cfg))
+    # warm the spec jits with an all-greedy run, then assert the mixed
+    # batch retraces nothing (params are traced arrays, never keys)
+    warm = Engine(cfg, params,
+                  EngineConfig(n_slots=2, max_seq=64, draft=draft))
+    for p in prompts:
+        warm.submit(p, max_new=7)
+    warm.run()
+    before = dict(sampling.TRACE_COUNTS)
+    eng = Engine(cfg, params,
+                 EngineConfig(n_slots=2, max_seq=64, draft=draft))
+    mix = [None,
+           SamplingParams(temperature=0.8, seed=21),
+           None,
+           SamplingParams(temperature=1.1, top_k=8, seed=22)]
+    got = [eng.submit(p, params=sp, max_new=7)
+           for p, sp in zip(prompts, mix)]
+    eng.run()
+    after = dict(sampling.TRACE_COUNTS)
+    for k in ("draft_step", "verify", "decode_step"):
+        assert after.get(k, 0) == before.get(k, 0), \
+            f"mixed-batch spec decode retraced {k}"
+    for i in (0, 2):
+        assert got[i].tokens == ref[i].tokens, \
+            f"greedy slot {i} diverged in a mixed spec batch"
+    assert all(len(r.tokens) == 7 for r in got)
+    assert eng.pool.n_scratch_free == eng.pool.n_scratch
+
+
+def test_adaptive_depth_bitwise_greedy_and_fewer_drafts():
+    """DraftConfig.adaptive clamps each slot's window to its realized
+    acceptance: on a mostly-rejecting shallow draft the drafted-token
+    count drops, while every greedy stream stays bitwise identical
+    (the clamp changes depth arithmetic, never token values)."""
+    cfg, params = _setup("mamba-130m")
+    prompts = _prompts(cfg, 3)
+    layers = _shallow_layers(cfg)
+    fixed = Engine(cfg, params,
+                   EngineConfig(n_slots=2, max_seq=64,
+                                draft=DraftConfig(k=4, layers=layers)))
+    rf = [fixed.submit(p, max_new=12) for p in prompts]
+    fixed.run()
+    adap = Engine(cfg, params,
+                  EngineConfig(n_slots=2, max_seq=64,
+                               draft=DraftConfig(k=4, layers=layers,
+                                                 adaptive=True)))
+    ra = [adap.submit(p, max_new=12) for p in prompts]
+    adap.run()
+    assert [r.tokens for r in ra] == [r.tokens for r in rf], \
+        "adaptive draft depth changed the greedy token stream"
+    # realized acceptance on random smoke weights is low, so the
+    # adaptive windows shrink and fewer draft tokens are proposed
+    assert adap.stats.spec_drafted < fixed.stats.spec_drafted, \
+        (adap.stats.spec_drafted, fixed.stats.spec_drafted)
+    # the bookkeeping driving the clamp stays exact
+    assert (sum(r.spec_accepted for r in ra)
+            == adap.stats.spec_accepted)
+
+
 @pytest.mark.parametrize("name", ["mamba-130m", "xlstm-350m"])
 def test_full_depth_draft_accepts_everything(name):
     """The degenerate self-draft (draft == target) must accept every
@@ -188,9 +259,8 @@ def test_full_reject_rollback_is_bitwise_clean(name, state_dtype,
     spec = eng._spec
     real_propose = spec.propose
 
-    def wrong_propose(cache, toks, scratch_mask, keys):
-        cache, d_toks, d_logits = real_propose(cache, toks, scratch_mask,
-                                               keys)
+    def wrong_propose(*args):
+        cache, d_toks, d_logits = real_propose(*args)
         # the full-depth draft proposes the target argmax; +1 mod vocab
         # is therefore guaranteed wrong at every step
         return cache, (d_toks + 1) % cfg.vocab, d_logits
@@ -200,8 +270,9 @@ def test_full_reject_rollback_is_bitwise_clean(name, state_dtype,
 
     # drive manually: admit both, snapshot, then one forced-full-reject
     # speculative pass
+    import heapq
     while eng._ready and eng.pool.n_free:
-        eng._admit(eng._ready.popleft())
+        eng._admit(heapq.heappop(eng._ready)[2])
     live = eng.pool.active_slots()
     cache0 = eng.pool.cache                    # immutable pytree
     toks0 = eng._next_tok.copy()
@@ -213,7 +284,9 @@ def test_full_reject_rollback_is_bitwise_clean(name, state_dtype,
     # oracle: ONE plain decode step from the snapshot, through the
     # engine's own decode dispatch — "never having speculated"
     tok, cache1 = eng._decode(eng.params, cache0, jnp.asarray(toks0),
-                              jnp.asarray(act0), jax.random.key(0))
+                              jnp.asarray(act0),
+                              eng.pool.params.device(),
+                              jnp.asarray(eng._base_steps(live)))
     gather = lambda c: registry.gather_slots(cfg, c, jnp.asarray(live))
     assert _tree_equal(gather(cache1), gather(eng.pool.cache)), \
         "rollback left speculative residue in the pooled state"
