@@ -35,6 +35,13 @@ sampling.TRACE_COUNTS), greedy rows bitwise vs the all-greedy engine,
 and seeded sampled streams reproduced independent of batch
 composition.
 
+Also reported: prefix cache (EngineConfig.prefix_cache) — a shared-
+system-prompt trace served with and without the prompt-prefix state
+cache.  Token streams must match exactly (f32 cached admission is
+bitwise the cold prefill) and the cache must strictly reduce the
+prefill tokens actually computed (suffix-only prefill); a best-of-n
+rider on the same fork primitive checks branch divergence + ranking.
+
 Flake policy: pass/fail decisions use deterministic token counts only;
 wall-clock (CPU timing noise exceeds 20%) uses median-of-k and is
 asserted only off-CPU, with a generous margin.
@@ -497,6 +504,103 @@ def spec_decode_comparison(arch, slots, requests, max_new, k=3,
     return out
 
 
+# ---------------------------------------------------------------------------
+# Prefix cache (EngineConfig.prefix_cache): shared-system-prompt trace
+# ---------------------------------------------------------------------------
+
+def prefix_cache_comparison(arch, slots, requests, max_new, block=8,
+                            sys_len=24, seed=0, quiet=False):
+    """Serve one shared-system-prompt trace (every prompt = the same
+    ``sys_len``-token system prefix + a short distinct user suffix)
+    twice — prefix cache off vs on — and report the cache's win as
+    prefill-compute savings.
+
+    Pass/fail signals (all deterministic): token streams IDENTICAL
+    between the two serves (the benchmark model is f32, where cached
+    admission is bitwise the single-shot prefill), cache hits > 0 on
+    the shared trace, prefill_tokens (tokens actually computed) with
+    the cache STRICTLY below without, and prefix_cached_tokens > 0.
+    Wall-clock is reported only.
+
+    Rider on the same fork primitive: one best-of-n request (sampled,
+    n > 1) must return n distinct ranked branches — cum_logprobs
+    non-increasing — while consuming a single queue slot.
+    """
+    from repro.runtime.prefix_cache import PrefixCacheConfig
+    from repro.runtime.sampling import SamplingParams
+
+    cfg, params = _setup_model(arch)
+    rng = np.random.default_rng(seed)
+    sys_prompt = rng.integers(0, cfg.vocab,
+                              size=(sys_len,)).astype(np.int32)
+    prompts = [np.concatenate([sys_prompt, rng.integers(
+        0, cfg.vocab, size=(int(rng.integers(3, 9)),)).astype(np.int32)])
+        for _ in range(requests)]
+    max_seq = sys_len + 16 + max_new + 8
+    out = {}
+    for label, pcc in (("off", None),
+                       ("on", PrefixCacheConfig(block=block,
+                                                max_entries=32))):
+        eng = Engine(cfg, params,
+                     EngineConfig(n_slots=slots, max_seq=max_seq,
+                                  prefix_cache=pcc))
+        reqs = [eng.submit(p, max_new=max_new) for p in prompts]
+        eng.run()
+        s = eng.stats.summary()
+        out[label] = {
+            "tokens": [list(map(int, r.tokens)) for r in reqs],
+            "prefill_tokens": int(s["prefill_tokens"]),
+            "tokens_per_s": float(s["tokens_per_s"]),
+            "hits": int(s["prefix_hits"]),
+            "hit_rate": float(s["prefix_hit_rate"]),
+            "cached_tokens": int(s["prefix_cached_tokens"]),
+        }
+    assert out["on"]["tokens"] == out["off"]["tokens"], \
+        "prefix cache changed the token streams"
+    assert out["on"]["hits"] > 0, "shared-prefix trace produced no hits"
+    assert out["on"]["cached_tokens"] > 0
+    assert out["on"]["prefill_tokens"] < out["off"]["prefill_tokens"], \
+        (out["on"]["prefill_tokens"], out["off"]["prefill_tokens"])
+
+    n = min(slots, 3)
+    bo = Engine(cfg, params,
+                EngineConfig(n_slots=slots, max_seq=max_seq,
+                             prefix_cache=PrefixCacheConfig(block=block)))
+    rq = bo.submit(prompts[0],
+                   params=SamplingParams(temperature=0.9, seed=7, n=n,
+                                         max_new=max_new))
+    bo.run()
+    streams = [tuple(c.tokens) for c in rq.branches]
+    cums = [c.cum_logprob for c in rq.branches]
+    assert len(streams) == n
+    distinct = len(set(streams))
+    assert distinct > 1, "best-of-n branches collapsed to one stream"
+    assert all(a >= b for a, b in zip(cums, cums[1:])), \
+        "best-of-n branches not ranked by cumulative logprob"
+    assert rq.tokens == list(rq.branches[0].tokens)
+    out["bestofn"] = {"n": n, "distinct": distinct,
+                      "cum_logprobs": [float(c) for c in cums]}
+
+    if not quiet:
+        saved = out["off"]["prefill_tokens"] - out["on"]["prefill_tokens"]
+        print(f"[serve_throughput] prefix cache, arch={arch} "
+              f"slots={slots} requests={requests} sys_len={sys_len} "
+              f"block={block}")
+        print(f"  cache off: {out['off']['prefill_tokens']:5d} prefill "
+              f"tok computed | {out['off']['tokens_per_s']:7.1f} tok/s")
+        print(f"  cache on : {out['on']['prefill_tokens']:5d} prefill "
+              f"tok computed | {out['on']['tokens_per_s']:7.1f} tok/s | "
+              f"{out['on']['hits']} hits "
+              f"(rate {out['on']['hit_rate']:.2f})")
+        print(f"  suffix-only prefill saved {saved} prompt tokens "
+              f"({out['on']['cached_tokens']} restored from snapshots); "
+              "token streams identical")
+        print(f"  best-of-{n} rider: {distinct}/{n} distinct branches, "
+              f"ranked cum_logprobs "
+              f"{[round(c, 2) for c in out['bestofn']['cum_logprobs']]}")
+    return out
+
+
 def run():
     """benchmarks/run.py protocol: quick saturated comparison, CSV rows."""
     from benchmarks import common
@@ -541,6 +645,17 @@ def run():
                 f"shallow_accept_rate="
                 f"{spec['spec_shallow']['acceptance_rate']:.2f};"
                 f"tokens_identical=1")
+    # prefill-token savings are a deterministic count (no cpu_interpret
+    # tag needed); tokens_identical=1 is asserted inside the comparison
+    pc = prefix_cache_comparison(arch="mamba-130m", slots=4, requests=8,
+                                 max_new=12, quiet=True)
+    common.emit("serve_prefix_cached_tokens",
+                float(pc["on"]["cached_tokens"]),
+                f"hit_rate={pc['on']['hit_rate']:.2f};"
+                f"prefill_saved="
+                f"{pc['off']['prefill_tokens'] - pc['on']['prefill_tokens']};"
+                f"bestofn_distinct={pc['bestofn']['distinct']};"
+                "tokens_identical=1")
 
 
 def main():
@@ -578,6 +693,9 @@ def main():
     spec_decode_comparison(args.arch, args.slots,
                            requests=min(args.requests, 8),
                            max_new=16, k=args.spec_k, seed=args.seed)
+    prefix_cache_comparison(args.arch, args.slots,
+                            requests=min(args.requests, 8),
+                            max_new=16, seed=args.seed)
     # Exit status: deterministic token accounting already asserted above;
     # the timing ratio is only asserted off-CPU, and generously — a
     # same-order engine is not a regression, a 2x slowdown is.

@@ -1,19 +1,21 @@
 #!/usr/bin/env python
-"""Deterministic benchmark gate for CI (writes/checks BENCH_PR5.json).
+"""Deterministic benchmark gate for CI (writes/checks BENCH_PR6.json).
 
 Runs the serving benchmarks in *count mode*: every gated number is a
 deterministic function of the code — useful-token counts, token-stream
 agreement between state dtypes, per-slot cache bytes / slots-per-GB,
 speculative-decode acceptance counters, heterogeneous-sampling jit
 retrace counts (one compile must serve mixed greedy/temperature/top-k/
-top-p traffic), and fused-kernel-vs-oracle errors.  Wall-clock numbers are recorded under "informational" but
-never asserted: CPU timing noise exceeds 20% and a timing gate on
-shared CI runners is a flake generator.
+top-p traffic), prefix-cache hit/prefill-savings counts on a shared-
+system-prompt trace (plus best-of-n branch divergence), and
+fused-kernel-vs-oracle errors.  Wall-clock numbers are recorded under
+"informational" but never asserted: CPU timing noise exceeds 20% and a
+timing gate on shared CI runners is a flake generator.
 
-  python scripts/bench_ci.py            # compare against BENCH_PR5.json
+  python scripts/bench_ci.py            # compare against BENCH_PR6.json
   python scripts/bench_ci.py --update   # regenerate the baseline
 
-The committed BENCH_PR5.json is the baseline; CI runs compare mode and
+The committed BENCH_PR6.json is the baseline; CI runs compare mode and
 fails on drift, so a PR that changes a count (or breaks the >= 2x int8
 capacity claim / the > 1.0 accepted-tokens-per-target-pass claim) must
 also regenerate — and thereby review — the file.
@@ -30,7 +32,7 @@ REPO = pathlib.Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(REPO / "src"))
 sys.path.insert(0, str(REPO))
 
-BASELINE = REPO / "BENCH_PR5.json"
+BASELINE = REPO / "BENCH_PR6.json"
 
 #: |fresh - baseline| tolerance for token-agreement fractions: exact on
 #: one platform, but argmax near-ties may flip across jax/BLAS builds
@@ -132,6 +134,8 @@ def collect():
         quiet=True)
     hetero = st.hetero_sampling_comparison(
         arch="mamba-130m", slots=4, requests=8, max_new=16, quiet=True)
+    prefix = st.prefix_cache_comparison(
+        arch="mamba-130m", slots=4, requests=8, max_new=12, quiet=True)
     kernel = _kernel_vs_oracle()
 
     dtypes = {}
@@ -179,6 +183,20 @@ def collect():
             "seeded_repro": hetero["seeded_repro"],
             "sampled_rows_distinct_from_greedy":
                 hetero["sampled_rows_distinct_from_greedy"],
+        },
+        # prefix cache + best-of-n: the PR 6 gate — shared-system-prompt
+        # trace must hit, suffix-only prefill must strictly reduce the
+        # prompt tokens computed, and token identity vs the cache-off
+        # serve is asserted inside the comparison (f32 benchmark model)
+        "prefix_cache": {
+            "tokens_identical": True,
+            "hits": prefix["on"]["hits"],
+            "hit_rate": round(prefix["on"]["hit_rate"], 4),
+            "cached_tokens": prefix["on"]["cached_tokens"],
+            "prefill_tokens_on": prefix["on"]["prefill_tokens"],
+            "prefill_tokens_off": prefix["off"]["prefill_tokens"],
+            "bestofn_n": prefix["bestofn"]["n"],
+            "bestofn_distinct": prefix["bestofn"]["distinct"],
         },
         "kernel_vs_oracle": kernel,
         "informational": {
@@ -251,6 +269,30 @@ def compare(fresh: dict, base: dict) -> list[str]:
             f"hetero_sampling.useful_tokens: fresh "
             f"{ht_f['useful_tokens']} != baseline "
             f"{ht_b['useful_tokens']}")
+    # prefix cache + best-of-n: hard invariants (hits, strict prefill
+    # reduction, identity, branch divergence) plus exact count equality
+    # with the baseline — all deterministic, no tolerances
+    pc_f, pc_b = fresh.get("prefix_cache"), base.get("prefix_cache")
+    if pc_f is None or pc_b is None:
+        fails.append("prefix_cache section present only in "
+                     f"{'baseline' if pc_f is None else 'fresh'}")
+    else:
+        chk(pc_f["tokens_identical"],
+            "prefix cache changed the token streams")
+        chk(pc_f["hits"] > 0,
+            "shared-system-prompt trace produced no prefix-cache hits")
+        chk(pc_f["prefill_tokens_on"] < pc_f["prefill_tokens_off"],
+            f"suffix-only prefill did not reduce prefill compute "
+            f"({pc_f['prefill_tokens_on']} vs "
+            f"{pc_f['prefill_tokens_off']} without the cache)")
+        chk(pc_f["bestofn_distinct"] > 1,
+            "best-of-n branches collapsed to one stream")
+        for key in ("hits", "cached_tokens", "prefill_tokens_on",
+                    "prefill_tokens_off", "bestofn_n",
+                    "bestofn_distinct"):
+            chk(pc_f[key] == pc_b[key],
+                f"prefix_cache.{key}: fresh {pc_f[key]} != "
+                f"baseline {pc_b[key]}")
     # union, not base-only: a dtype added to the sweep without a
     # baseline regeneration must fail, not silently pass unchecked
     all_dtypes = sorted(set(base["state_dtypes"])
@@ -324,6 +366,13 @@ def main():
           f"retraces (must be 0), greedy bitwise "
           f"{ht['greedy_rows_bitwise']}, seeded repro "
           f"{ht['seeded_repro']}")
+    pc = fresh["prefix_cache"]
+    print(f"[bench_ci] prefix cache: {pc['hits']} hits "
+          f"(rate {pc['hit_rate']}), prefill tokens "
+          f"{pc['prefill_tokens_on']} vs {pc['prefill_tokens_off']} "
+          f"without (must be strictly less), best-of-"
+          f"{pc['bestofn_n']}: {pc['bestofn_distinct']} distinct "
+          f"branches")
     if fails:
         for f in fails:
             print(f"[bench_ci] FAIL: {f}", file=sys.stderr)

@@ -36,4 +36,16 @@ cheap tokens there with the slot's own sampling params, verify them
 with one batched target micro-scan, and roll the slot back to its
 accepted prefix — 1..K+1 tokens per target pass, token-identical to
 plain decode for greedy slots (even in a mixed greedy+sampled batch).
+
+With EngineConfig.prefix_cache (prefix_cache.py), step 2 consults a
+bounded LRU store of prompt-prefix state snapshots (taken at block
+boundaries; payload + scales + position move together, like fork): a
+hit restores the snapshot and prefills only the suffix via a
+decode-step micro-scan — token-identical to the cold prefill.  With
+SamplingParams.n > 1 (best-of-n), step 2 prefills once and forks n
+branches whose sampling keys are re-derived per branch
+(fork(branch_tags=...)); the parent Request returns the highest-
+cumulative-logprob branch with all branches ranked in ``branches``.
+Per-token logprob surfaces (SamplingParams.logprobs / top_logprobs)
+ride every decode path without touching token math.
 """

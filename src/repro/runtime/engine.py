@@ -49,6 +49,28 @@ mixed greedy+sampled batch — and each target pass emits 1..K+1 tokens
 per slot.  ``DraftConfig.adaptive`` clamps each slot's window to its
 realized acceptance (Request.spec_accepted / spec_passes).
 
+Prefix-state cache (``EngineConfig.prefix_cache``): because an SSM
+slot's decode state is a fixed-size block, a prompt prefix is cacheable
+as a tiny state *snapshot* — the batch-1 cache pytree (quantized
+payload + absmax scales + stream position together, the same invariant
+``fork`` keeps) captured at block boundaries into a bounded LRU store
+(runtime/prefix_cache.py).  Admission of a prompt sharing a cached
+prefix restores the snapshot and prefills only the suffix via a
+decode-step micro-scan — the same per-token dispatch the verify scan
+chains, so the result is token-identical to the cold full prefill.
+Cold admissions snapshot every block boundary they cross, so unaligned
+shared prefixes still hit at the deepest common boundary.
+
+Best-of-n (``SamplingParams.n``): one prefill, n forked slots.  The
+fork re-derives each branch's key by folding a branch tag into the
+source key (``SlotStatePool.fork(branch_tags=...)``) — the fix for the
+fork-seed aliasing bug where forked "alternatives" sampled bitwise-
+identical streams.  Spec-decode draft forks pass NO tags and keep the
+verbatim key copy their exactness contract requires; branch 0 is
+bitwise the same request served at n=1.  Branches are ranked by
+cumulative logprob (always accumulated, from the raw-logit log-softmax
+every step jit now returns) on the parent ``Request``.
+
 Caveat: MoE families route tokens across the batch through shared expert
 capacity, so slot composition can perturb logits at tight
 capacity_factor.  Pure Mamba / dense attention families are exactly
@@ -71,6 +93,7 @@ import numpy as np
 from repro.models import registry
 from repro.runtime import metrics as metrics_lib
 from repro.runtime import sampling
+from repro.runtime.prefix_cache import PrefixCache, PrefixCacheConfig
 from repro.runtime.sampling import SamplingParams
 from repro.runtime.spec_decode import DraftConfig, SpecDecoder
 from repro.runtime.state_pool import SlotStatePool
@@ -86,13 +109,62 @@ from repro.runtime.state_pool import SlotStatePool
 def _jit_prefill_admit(cfg):
     """Fused prefill-into-slot: full-seq prefill of one request, scatter
     of its state into the pool slot, and first-token sampling with the
-    request's own params — one dispatch per admission."""
+    request's own params — one dispatch per admission.  Also returns
+    the logprob surface (chosen + fixed-width top-k over the raw-logit
+    log-softmax; token math untouched) and the last-position logits,
+    which best-of-n admission samples each forked branch's first token
+    from without re-running the prefill."""
     def _fn(p, fresh, tokens, pool_cache, slot_id, sp, step):
         sampling.TRACE_COUNTS["prefill_admit"] += 1
         logits, sub = registry.prefill(cfg, p, fresh, {"tokens": tokens})
         new_pool = registry.scatter_slots(cfg, pool_cache, sub, slot_id)
-        tok = sampling.sample(logits[:, -1, :], sp, step)
-        return tok[:, None], new_pool
+        last = logits[:, -1, :]
+        tok = sampling.sample(last, sp, step)
+        lp, tv, ti = sampling.token_logprobs(last, tok)
+        return tok[:, None], lp, tv, ti, last, new_pool
+    return jax.jit(_fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_prefill_prefix(cfg):
+    """Prefix-only prefill: consume the first ``block`` prompt tokens
+    from the init state and return the batch-1 cache — the snapshot a
+    cold admission inserts into the prefix cache before chaining the
+    remaining tokens through the suffix micro-scan.  No scatter, no
+    sampling: the snapshot is position-complete state, nothing else."""
+    def _fn(p, fresh, tokens):
+        sampling.TRACE_COUNTS["prefill_prefix"] += 1
+        _, sub = registry.prefill(cfg, p, fresh, {"tokens": tokens})
+        return sub
+    return jax.jit(_fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_suffix_admit(cfg, m: int):
+    """Cached-prefix admission: restore a prefix snapshot and prefill
+    only the ``m``-token suffix as a decode-step micro-scan — the SAME
+    per-token dispatch a decode burst (and the spec-decode verify scan)
+    runs, so the resulting state and sampled token are what the cold
+    full prefill produces.  One fused dispatch: scan, scatter of the
+    final state into the slot, first-token sampling.  The per-step
+    cache stack rides back so the engine can insert snapshots at every
+    block boundary the chain crossed.  Compiles once per distinct
+    suffix length (same discipline as the exact-length prefill)."""
+    def _fn(p, snap, toks, pool_cache, slot_id, sp, step):
+        sampling.TRACE_COUNTS["suffix_admit"] += 1
+
+        def body(c, tok_t):
+            logits, c2 = registry.decode_step(cfg, p, c,
+                                              {"tokens": tok_t})
+            return c2, (logits[:, -1, :], c2)
+
+        xs = jnp.moveaxis(toks[:, :, None], 1, 0)        # (1,m) -> (m,1,1)
+        final, (lg, caches) = jax.lax.scan(body, snap, xs)
+        new_pool = registry.scatter_slots(cfg, pool_cache, final, slot_id)
+        last = lg[-1]
+        tok = sampling.sample(last, sp, step)
+        lp, tv, ti = sampling.token_logprobs(last, tok)
+        return tok[:, None], lp, tv, ti, last, new_pool, caches
     return jax.jit(_fn)
 
 
@@ -101,14 +173,18 @@ def _jit_decode_sample(cfg):
     """Fused decode + per-slot sample: tokens stay on device so
     consecutive steps chain without a host round-trip (the burst loop
     syncs once per scheduling quantum, keeping XLA dispatch
-    pipelined)."""
+    pipelined).  The logprob surface (chosen + top-k over the raw-logit
+    log-softmax) rides along; the sampled-token math is untouched, so
+    streams are bitwise the surface-free engine's."""
     def _decode_fn(p, cache, toks, active, sp, step):
         sampling.TRACE_COUNTS["decode_step"] += 1
         logits, new_cache = registry.decode_step(cfg, p, cache,
                                                  {"tokens": toks})
         new_cache = registry.mask_slots(cfg, cache, new_cache, active)
-        tok = sampling.sample(logits[:, -1, :], sp, step)
-        return tok[:, None], new_cache
+        last = logits[:, -1, :]
+        tok = sampling.sample(last, sp, step)
+        lp, tv, ti = sampling.token_logprobs(last, tok)
+        return tok[:, None], lp, tv, ti, new_cache
     return jax.jit(_decode_fn)
 
 
@@ -151,6 +227,12 @@ class EngineConfig:
     # slots preserve their target distribution via per-slot rejection
     # sampling.  The pool grows n_slots scratch slots.
     draft: Optional[DraftConfig] = None
+    # prompt-prefix state cache: None = every admission prefills its
+    # full prompt; a PrefixCacheConfig snapshots per-block prefix state
+    # into a bounded LRU store so admissions sharing a cached prefix
+    # restore it with one scatter and prefill only the suffix —
+    # token-identical to the cold prefill (gated in tests + bench).
+    prefix_cache: Optional[PrefixCacheConfig] = None
 
 
 @dataclasses.dataclass
@@ -179,6 +261,24 @@ class Request:
     # speculative depth (and drives DraftConfig.adaptive).
     spec_passes: int = 0
     spec_accepted: int = 0
+    # logprob return surface (params.logprobs / params.top_logprobs):
+    # per-emitted-token chosen logprob and [(token_id, logprob)] top
+    # alternatives, from the raw-logit log-softmax.  cum_logprob is
+    # ALWAYS accumulated (it ranks best-of-n branches).
+    logprobs: list = dataclasses.field(default_factory=list)
+    top_logprobs: list = dataclasses.field(default_factory=list)
+    cum_logprob: float = 0.0
+    # best-of-n (params.n > 1): the submitted request is the PARENT —
+    # it never holds a slot; n child branch requests do.  On finish the
+    # parent carries the best branch's tokens/logprobs and ``branches``
+    # holds every child ranked by (-cum_logprob, branch).  Children
+    # point back via ``parent`` and carry their ``branch`` tag (the
+    # same integer folded into their sampling key at fork time).
+    branches: Optional[list] = dataclasses.field(default=None, repr=False)
+    parent: Optional["Request"] = dataclasses.field(default=None,
+                                                    repr=False)
+    branch: int = 0
+    _open: int = 0                        # unfinished children (parent)
 
     @property
     def finished(self) -> bool:
@@ -219,6 +319,9 @@ class Engine:
         self._now = clock
         self._prefill = _jit_prefill_admit(cfg)
         self._decode = _jit_decode_sample(cfg)
+        self._prefill_prefix = _jit_prefill_prefix(cfg)
+        self._prefix = (PrefixCache(ecfg.prefix_cache)
+                        if ecfg.prefix_cache is not None else None)
         self._pending: list[Request] = []      # arrival-gated, sorted
         self._ready: list[tuple] = []          # (-priority, seq, Request)
         self._seq = 0                          # FIFO tiebreak in _ready
@@ -269,6 +372,13 @@ class Engine:
             raise ValueError(
                 f"prompt ({prompt.size}) + max_new ({params.max_new}) "
                 f"exceeds max_seq ({self.ecfg.max_seq})")
+        if params.n > self.ecfg.n_slots:
+            raise ValueError(
+                f"n ({params.n}) exceeds n_slots ({self.ecfg.n_slots}): "
+                f"every branch needs a slot")
+        if params.n > 1 and stream_cb is not None:
+            raise ValueError("stream_cb is unsupported for n > 1 "
+                             "(n branches have no single stream)")
         req_id = self._next_id
         self._next_id += 1
         seed = (params.seed if params.seed is not None
@@ -309,6 +419,12 @@ class Engine:
         if req is None or req.finished or req.cancelled:
             return False
         req.cancelled = True
+        if req.branches is not None:
+            # best-of-n cascade: the parent holds no slot, the branches
+            # do — flag every live child so the sweep reclaims them all
+            for child in req.branches:
+                if not child.finished:
+                    child.cancelled = True
         self._cancel_dirty = True
         return True
 
@@ -362,23 +478,94 @@ class Engine:
         if req.stream_cb is not None and new_toks:
             req.stream_cb(req, new_toks)
 
-    def _admit(self, req: Request) -> None:
-        slot = self.pool.alloc()
-        assert slot is not None
+    def _append_token(self, req: Request, tok: int, lp, tv, ti) -> None:
+        """Record one emitted token plus its logprob surface: chosen
+        logprob always accumulates into cum_logprob (it ranks best-of-n
+        branches); the per-token lists fill only when the request asked
+        (params.logprobs / params.top_logprobs)."""
+        req.tokens.append(tok)
+        req.cum_logprob += float(lp)
+        if req.params.logprobs:
+            req.logprobs.append(float(lp))
+        if req.params.top_logprobs:
+            k = req.params.top_logprobs
+            req.top_logprobs.append(
+                [(int(ti[i]), float(tv[i])) for i in range(k)])
+
+    def _admit_into_slot(self, req: Request, slot: int):
+        """Prefill ``req``'s prompt into ``slot`` (params row already
+        set), consulting the prefix cache when enabled.  Cache hit:
+        restore the deepest cached block-boundary snapshot and chain
+        only the suffix through the decode-step micro-scan.  Cold (with
+        a usable boundary): prefill the first block once, then chain
+        the rest — inserting a snapshot at EVERY boundary the chain
+        crosses, so later prompts sharing any block-aligned prefix hit.
+        Returns (tok, lp, tv_row, ti_row, last_logits) with the first
+        three host-side and ``last_logits`` the device (1, V) logits
+        best-of-n samples its remaining branches' first tokens from."""
         t0 = self._now()
         req.t_admit = t0
-        self.pool.params.set(slot, req.params, req.seed)
-        tok_dev, new_pool = self._prefill(
-            self.params, self.pool.fresh, jnp.asarray(req.prompt[None]),
-            self.pool.cache, jnp.asarray([slot]),
-            self.pool.params.row(slot), jnp.zeros((1,), jnp.int32))
+        prompt = req.prompt
+        length = int(prompt.size)
+        pc = self._prefix
+        sp_row = self.pool.params.row(slot)
+        step0 = jnp.zeros((1,), jnp.int32)
+        slot_arr = jnp.asarray([slot])
+        hit = None
+        snap = None
+        p_from = 0
+        bound = pc.boundary(length) if pc is not None else 0
+        if pc is not None and bound > 0:
+            hit = pc.lookup(prompt)
+            if hit is not None:
+                p_from, snap = hit
+            else:
+                # cold: one fixed-block-length prefill seeds the first
+                # snapshot; the suffix scan below computes the rest
+                p_from = pc.cfg.block
+                snap = self._prefill_prefix(
+                    self.params, self.pool.fresh,
+                    jnp.asarray(prompt[None, :p_from]))
+                pc.insert(prompt[:p_from], snap)
+        if snap is None:
+            tok_dev, lp, tv, ti, last, new_pool = self._prefill(
+                self.params, self.pool.fresh, jnp.asarray(prompt[None]),
+                self.pool.cache, slot_arr, sp_row, step0)
+            self.pool.cache = new_pool
+        else:
+            m = length - p_from
+            fn = _jit_suffix_admit(self.cfg, m)
+            tok_dev, lp, tv, ti, last, new_pool, chain = fn(
+                self.params, snap, jnp.asarray(prompt[None, p_from:]),
+                self.pool.cache, slot_arr, sp_row, step0)
+            self.pool.cache = new_pool
+            # chain index j is the state after prompt[:p_from + j + 1]
+            for p in range(p_from + pc.cfg.block, bound + 1,
+                           pc.cfg.block):
+                pc.insert(prompt[:p],
+                          jax.tree.map(
+                              lambda leaf, j=p - p_from - 1: leaf[j],
+                              chain))
+        if pc is not None and bound > 0:
+            self.stats.record_prefix(hit is not None,
+                                     p_from if hit is not None else 0)
+        n_computed = length - (p_from if hit is not None else 0)
         tok = int(np.asarray(tok_dev)[0, 0])
-        self.pool.cache = new_pool
         req.t_first = self._now()
-        self.stats.record_prefill(req.prompt.size, req.t_first - t0)
+        # prefill_tokens stays the honest COMPUTE count: restored-from-
+        # cache tokens land in prefix_cached_tokens instead, which is
+        # what the bench gate's strict-reduction assertion diffs
+        self.stats.record_prefill(n_computed, req.t_first - t0)
+        return (tok, float(np.asarray(lp)[0]), np.asarray(tv)[0],
+                np.asarray(ti)[0], last)
+
+    def _install(self, req: Request, slot: int, tok: int, lp, tv,
+                 ti) -> None:
+        """Bind an admitted request to its slot and deliver its first
+        token (shared tail of plain and best-of-n admission)."""
         self._slot_req[slot] = req
         self._next_tok[slot, 0] = tok
-        req.tokens.append(tok)
+        self._append_token(req, tok, lp, tv, ti)
         if self.logger:
             self.logger.log(event="admit", req=req.req_id, slot=slot,
                             prompt_len=int(req.prompt.size))
@@ -388,14 +575,88 @@ class Engine:
         if req.cancelled and not req.finished:
             self._finish(slot)
 
+    def _admit(self, req: Request) -> None:
+        slot = self.pool.alloc()
+        assert slot is not None
+        self.pool.params.set(slot, req.params, req.seed)
+        tok, lp, tv, ti, _ = self._admit_into_slot(req, slot)
+        self._install(req, slot, tok, lp, tv, ti)
+
+    def _branch_request(self, parent: Request, b: int) -> Request:
+        """Child request for branch ``b`` of a best-of-n parent.  The
+        child's key row is NOT derived from its seed — the fork's
+        branch-tag fold is its key derivation — so ``seed`` is carried
+        only for bookkeeping."""
+        child = Request(
+            req_id=self._next_id, prompt=parent.prompt,
+            params=dataclasses.replace(parent.params, n=1),
+            seed=parent.seed, max_new=parent.max_new,
+            stop_ids=parent.stop_ids, eos_id=parent.eos_id,
+            priority=parent.priority, t_submit=parent.t_submit,
+            branch=b, parent=parent)
+        self._next_id += 1
+        self._by_id[child.req_id] = child
+        return child
+
+    def _admit_group(self, parent: Request) -> None:
+        """Best-of-n admission: ONE prefill into the first slot, then
+        one fused fork into the remaining n-1 slots with branch tags
+        1..n-1 (each branch's key = fold_in(parent key, branch) — the
+        fork-seed aliasing fix), then each remaining branch's first
+        token sampled from the prefill's last-position logits under its
+        own folded key.  Branch 0 keeps the parent's verbatim key, so
+        its stream is bitwise the same request served at n=1."""
+        n = parent.params.n
+        slots = [self.pool.alloc() for _ in range(n)]
+        assert all(s is not None for s in slots)
+        children = [self._branch_request(parent, b) for b in range(n)]
+        parent.branches = list(children)
+        parent._open = n
+        self.pool.params.set(slots[0], parent.params, parent.seed)
+        tok0, lp0, tv0, ti0, last = self._admit_into_slot(children[0],
+                                                          slots[0])
+        parent.t_admit = children[0].t_admit
+        parent.t_first = children[0].t_first
+        # fork BEFORE any stop/cancel handling can evict slot 0: every
+        # branch needs its post-prompt state (and its params row, which
+        # the tagged copy re-keys)
+        self.pool.fork([slots[0]] * (n - 1), slots[1:],
+                       branch_tags=list(range(1, n)))
+        firsts = [(tok0, lp0, tv0, ti0)]
+        for b in range(1, n):
+            row = self.pool.params.row(slots[b])
+            tb = sampling.sample(last, row, jnp.zeros((1,), jnp.int32))
+            lb, tvb, tib = sampling.token_logprobs(last, tb)
+            firsts.append((int(np.asarray(tb)[0]),
+                           float(np.asarray(lb)[0]),
+                           np.asarray(tvb)[0], np.asarray(tib)[0]))
+        for b in range(n):
+            tok, lp, tv, ti = firsts[b]
+            self._install(children[b], slots[b], tok, lp, tv, ti)
+
     def _hit_stop(self, req: Request) -> bool:
-        return (len(req.tokens) >= req.max_new
-                or (bool(req.stop_ids) and req.tokens[-1] in req.stop_ids))
+        if len(req.tokens) >= req.max_new:
+            return True
+        if req.stop_ids and req.tokens[-1] in req.stop_ids:
+            return True
+        # multi-token stop sequences: suffix-window match on the emitted
+        # stream (the whole sequence is delivered; burst overshoot past
+        # the match is trimmed by the caller's break, like single stops)
+        for seq in req.params.stop_seqs:
+            seq = tuple(seq)
+            if (len(req.tokens) >= len(seq)
+                    and tuple(req.tokens[-len(seq):]) == seq):
+                return True
+        return False
 
     def _finish(self, slot: int) -> None:
         req = self._slot_req[slot]
         req.t_done = self._now()
-        if req.cancelled:
+        if req.parent is not None:
+            # branch of a best-of-n group: stats and the finished list
+            # see only the parent (one request submitted, one retired)
+            pass
+        elif req.cancelled:
             self.stats.record_cancelled()
         else:
             self.stats.record_request(ttft=req.t_first - req.t_submit,
@@ -403,12 +664,47 @@ class Engine:
         self.pool.evict(slot)
         self._slot_req[slot] = None
         self._next_tok[slot, 0] = 0
-        self._finished.append(req)
+        if req.parent is None:
+            self._finished.append(req)
         self._by_id.pop(req.req_id, None)
         if self.logger:
             self.logger.log(
                 event="cancel" if req.cancelled else "finish",
                 req=req.req_id, slot=slot, n_tokens=len(req.tokens))
+        if req.parent is not None:
+            self._child_done(req)
+
+    def _child_done(self, child: Request) -> None:
+        parent = child.parent
+        parent._open -= 1
+        if parent._open == 0:
+            self._finalize_parent(parent)
+
+    def _finalize_parent(self, parent: Request) -> None:
+        """All branches finished: rank them by cumulative logprob
+        (ties broken by branch index — deterministic), surface the best
+        branch's stream on the parent, retire the parent."""
+        kids = sorted(parent.branches,
+                      key=lambda c: (-c.cum_logprob, c.branch))
+        parent.branches = kids
+        best = kids[0]
+        parent.tokens = list(best.tokens)
+        parent.logprobs = list(best.logprobs)
+        parent.top_logprobs = list(best.top_logprobs)
+        parent.cum_logprob = best.cum_logprob
+        parent.t_done = self._now()
+        if parent.cancelled:
+            self.stats.record_cancelled()
+        else:
+            self.stats.record_request(
+                ttft=parent.t_first - parent.t_submit,
+                latency=parent.t_done - parent.t_submit)
+        self._finished.append(parent)
+        self._by_id.pop(parent.req_id, None)
+        if self.logger:
+            self.logger.log(event="finish_group", req=parent.req_id,
+                            n=len(kids), best=best.branch,
+                            n_tokens=len(parent.tokens))
 
     def _base_steps(self, active) -> np.ndarray:
         """Per-slot stream positions at sync start: tokens already
@@ -428,16 +724,21 @@ class Engine:
         the eviction — zero intermediate host syncs, matching a static
         loop's dispatch pipelining with none of its wasted steps.  The
         quantum caps the burst only when an *uncertain* event could act
-        sooner: a stop token may evict any step (overshoot is trimmed
-        but wastes the slot until the burst ends), a streaming callback
-        must be serviced regularly (it may cancel mid-stream), and a
-        free slot plus queued/pending work means an admission check is
-        worth taking."""
+        sooner: a stop token (single-id or multi-token sequence) may
+        evict any step (overshoot is trimmed but wastes the slot until
+        the burst ends), a streaming callback must be serviced
+        regularly (it may cancel mid-stream), a pending prefix-cache
+        snapshot offload is waiting for the next host sync (the
+        cache-snapshot deadline), and a free slot plus queued/pending
+        work means an admission check is worth taking."""
         remaining = min(self._slot_req[s].max_new - len(self._slot_req[s].tokens)
                         for s in active)
         uncertain = any(self._slot_req[s].stop_ids
+                        or self._slot_req[s].params.stop_seqs
                         or self._slot_req[s].stream_cb is not None
                         for s in active)
+        if self._prefix is not None and self._prefix.has_pending():
+            uncertain = True
         may_admit = self.pool.n_free > 0 and (self._ready or self._pending)
         if uncertain or may_admit:
             return max(1, min(remaining, self.ecfg.sched_quantum))
@@ -452,22 +753,28 @@ class Engine:
         sp = self.pool.params.device()
         base = jnp.asarray(self._base_steps(active))
         cache = self.pool.cache
-        outs = []
+        outs, lps, tvs, tis = [], [], [], []
         for t in range(n_steps):
-            toks, cache = self._decode(self.params, cache, toks, act,
-                                       sp, base + t)
+            toks, lp, tv, ti, cache = self._decode(self.params, cache,
+                                                   toks, act, sp,
+                                                   base + t)
             outs.append(toks)
+            lps.append(lp)
+            tvs.append(tv)
+            tis.append(ti)
         self.pool.cache = cache
-        # one host sync per burst; device_get on the list avoids compiling
-        # an XLA concatenate per distinct burst length
-        burst = np.concatenate(jax.device_get(outs), axis=1)
+        # one host sync per burst; device_get on the lists avoids
+        # compiling an XLA concatenate per distinct burst length
+        outs_h, lp_h, tv_h, ti_h = jax.device_get((outs, lps, tvs, tis))
+        burst = np.concatenate(outs_h, axis=1)
         n_appended = 0
         for slot in active:
             req = self._slot_req[slot]
             new_toks = []
             for t in range(n_steps):
                 tok = int(burst[slot, t])
-                req.tokens.append(tok)
+                self._append_token(req, tok, lp_h[t][slot],
+                                   tv_h[t][slot], ti_h[t][slot])
                 new_toks.append(tok)
                 n_appended += 1
                 self._next_tok[slot, 0] = tok
@@ -531,6 +838,10 @@ class Engine:
                 sc = self.pool.lease_scratch()
                 assert sc is not None        # n_scratch == n_slots
                 leases.append(sc)
+            # branch_tags deliberately None: the draft scratch slot must
+            # continue the request's EXACT key schedule (fork copies the
+            # key verbatim) or spec decode loses its faithfulness
+            # contract — only best-of-n forks tag
             self.pool.fork(active, leases)   # state + sampling params
             total = self.pool.n_total
             toks = np.zeros((total, 1), np.int32)
@@ -551,7 +862,7 @@ class Engine:
             perm = np.arange(total)
             perm[active] = leases
             perm = jnp.asarray(perm)
-            emit, n_acc, _, snap = spec.verify(
+            emit, n_acc, _, snap, v_lp, v_tv, v_ti = spec.verify(
                 self.params, cache, jnp.asarray(self._next_tok),
                 d_toks[:, perm], d_logits[:, perm],
                 jnp.asarray(self.pool.active_mask()), sp,
@@ -560,6 +871,8 @@ class Engine:
             # state after exactly its accepted prefix
             self.pool.cache = snap
             emit_h, n_acc_h = np.asarray(emit), np.asarray(n_acc)
+            lp_h, tv_h, ti_h = (np.asarray(v_lp), np.asarray(v_tv),
+                                np.asarray(v_ti))
         finally:
             for sc in leases:
                 self.pool.release_scratch(sc)
@@ -574,7 +887,8 @@ class Engine:
             new_toks = []
             for t in range(n_emit):
                 tok = int(emit_h[t, slot])
-                req.tokens.append(tok)
+                self._append_token(req, tok, lp_h[t, slot],
+                                   tv_h[t, slot], ti_h[t, slot])
                 new_toks.append(tok)
                 n_appended += 1
                 self._next_tok[slot, 0] = tok
@@ -597,14 +911,24 @@ class Engine:
         """One scheduler iteration: reclaim cancellations, admit into
         free slots (highest priority first), then one decode burst (or
         one speculative pass).  Returns False when there was nothing
-        to do."""
+        to do.  Admission peeks before popping: a best-of-n request
+        needs ``n`` free slots at once, and blocks the line until it
+        has them (admitting lower-priority work past it would starve
+        it forever under load)."""
         did = self._sweep_cancelled()
         while self._ready and self.pool.n_free:
-            req = heapq.heappop(self._ready)[2]
+            req = self._ready[0][2]
             if req.cancelled:
+                heapq.heappop(self._ready)
                 self._drop_cancelled(req)
                 continue
-            self._admit(req)
+            if req.params.n > self.pool.n_free:
+                break
+            heapq.heappop(self._ready)
+            if req.params.n > 1:
+                self._admit_group(req)
+            else:
+                self._admit(req)
             did = True
         if self.pool.n_active:
             if self._spec is not None:
@@ -612,6 +936,14 @@ class Engine:
             else:
                 self._decode_burst()
             did = True
+        if self._prefix is not None:
+            # the burst just host-synced: drain one deferred host-store
+            # snapshot offload (the cache-snapshot deadline) and adopt
+            # the cache's storage counters
+            if self._prefix.has_pending():
+                self._prefix.flush_pending(limit=1)
+                did = True
+            self.stats.sync_prefix(self._prefix.counters())
         return did
 
     # ------------------------------------------------------------------
@@ -641,6 +973,10 @@ class Engine:
                 wait = self._pending[0].arrival - (self._now() - t0)
                 if wait > 0:
                     time.sleep(min(wait, 0.05))
+        if self._prefix is not None:
+            # idle: no burst deadline competes with the offloads
+            self._prefix.flush_pending(limit=None)
+            self.stats.sync_prefix(self._prefix.counters())
         self.stats.stop()
         if self.logger:
             self.logger.log(event="summary", **self.stats.summary())

@@ -72,6 +72,14 @@ class ServeStats:
         self.spec_drafted = 0          # draft tokens proposed
         self.spec_accepted = 0         # draft tokens accepted
         self.spec_emitted = 0          # tokens delivered by spec passes
+        # prefix cache (deterministic counters; the bench gate asserts
+        # hits > 0 and strictly fewer prefilled tokens than no-cache)
+        self.prefix_hits = 0           # admissions restored from cache
+        self.prefix_misses = 0         # admissions that ran cold
+        self.prefix_cached_tokens = 0  # prompt tokens skipped via restore
+        self.prefix_inserts = 0        # snapshots stored
+        self.prefix_evictions = 0      # snapshots LRU-evicted
+        self.prefix_bytes = 0          # bytes currently resident
         self._ttft: list[float] = []
         self._latency: list[float] = []
         self._t0: Optional[float] = None
@@ -115,6 +123,25 @@ class ServeStats:
         self.spec_accepted += n_accepted
         self.spec_emitted += n_emitted
 
+    def record_prefix(self, hit: bool, n_cached: int):
+        """One admission's prefix-cache outcome: ``n_cached`` prompt
+        tokens restored from a snapshot instead of prefilled (0 on a
+        miss).  Restored tokens are deliberately NOT added to
+        prefill_tokens — that counter stays the honest compute count,
+        which is what the bench gate diffs against the no-cache run."""
+        if hit:
+            self.prefix_hits += 1
+            self.prefix_cached_tokens += n_cached
+        else:
+            self.prefix_misses += 1
+
+    def sync_prefix(self, counters: dict):
+        """Adopt the PrefixCache's own insert/eviction/bytes counters
+        (the cache is the source of truth for its storage accounting)."""
+        self.prefix_inserts = counters["inserts"]
+        self.prefix_evictions = counters["evictions"]
+        self.prefix_bytes = counters["bytes"]
+
     def record_request(self, ttft: float, latency: float):
         self.n_requests += 1
         self._ttft.append(ttft)
@@ -156,6 +183,16 @@ class ServeStats:
             "spec_acceptance_rate": (
                 self.spec_accepted / self.spec_drafted
                 if self.spec_drafted else 0.0),
+            # prefix cache: hit rate over admissions that consulted the
+            # cache, and prompt tokens restored instead of prefilled
+            "prefix_hits": self.prefix_hits,
+            "prefix_hit_rate": (
+                self.prefix_hits / (self.prefix_hits + self.prefix_misses)
+                if (self.prefix_hits + self.prefix_misses) else 0.0),
+            "prefix_cached_tokens": self.prefix_cached_tokens,
+            "prefix_inserts": self.prefix_inserts,
+            "prefix_evictions": self.prefix_evictions,
+            "prefix_bytes": self.prefix_bytes,
         }
 
 

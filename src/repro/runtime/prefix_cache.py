@@ -1,0 +1,223 @@
+"""Prompt-prefix state cache — MARCA's buffer-reuse insight at the
+admission path.
+
+An SSM slot's whole decode state is a fixed O(d_inner * d_state) block
+(plus conv tail / per-slot scales), so "caching a prompt prefix" is a
+tiny state *snapshot*, not a length-growing KV strip: the batch-1 cache
+pytree a prefill produces, captured at a token boundary, restorable
+into any free slot with one scatter.  Payload, absmax scales and stream
+position live in the same pytree and move together — exactly the
+invariant `SlotStatePool.fork` maintains — so a restored prefix can
+never tear quantized payload from scale.
+
+Key semantics
+-------------
+Entries are keyed on the EXACT prefix token bytes (int32 ``tobytes``):
+no hashing collisions, no normalization.  Snapshots are taken at
+multiples of ``block`` tokens; a lookup walks boundaries deepest-first
+(largest multiple of ``block`` that is <= len(prompt) - 1 — strictly
+below the full prompt, so admission always prefills >= 1 suffix token
+and the first sampled token's logits exist).  A cold admission inserts
+a snapshot at EVERY boundary its prefill crosses, so two prompts
+sharing an unaligned prefix still hit at the deepest common boundary.
+
+Bounds & eviction: LRU over an OrderedDict, bounded by ``max_entries``
+and optionally ``max_bytes`` (sum of snapshot leaf nbytes).  Eviction
+drops the entry's pytree on the floor — slots are never involved, so
+churn cannot leak state or scales into live requests.
+
+Store residency: ``store="device"`` keeps snapshots as jnp arrays
+(restore is free); ``store="host"`` offloads them to numpy — but the
+device->host copy is a sync point, so inserts are queued and drained by
+``flush_pending`` at the engine's existing sync boundaries (the
+"cache-snapshot deadline" the burst scheduler treats as an uncertain
+event).
+
+Exactness: a HIT is token-identical to a COLD admission of the same
+prompt for any state_dtype, by construction — a cache-enabled engine
+chunks every admission at the same block boundaries (cold = block
+prefill + suffix chain, hit = restored snapshot + the same chain), and
+the snapshot IS the cold path's state at that boundary.  In f32 the
+chunked computation is additionally bitwise the cache-DISABLED engine's
+single-shot prefill; with a quantized state_dtype the quantization
+points differ between chunked and single-shot prompt processing (the
+same reason quantized decode agreement is a floor, not a guarantee),
+so cache-on vs cache-off identity is an f32 property.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixCacheConfig:
+    """block: snapshot granularity in prompt tokens — snapshots are
+    taken (and looked up) at multiples of this.  max_entries /
+    max_bytes: LRU bounds (max_bytes=None -> unbounded bytes).
+    store: "device" (jnp-resident, free restore) or "host" (numpy-
+    resident; inserts deferred to flush_pending, restores copy back)."""
+    block: int = 8
+    max_entries: int = 32
+    max_bytes: Optional[int] = None
+    store: str = "device"
+
+    def validate(self) -> None:
+        if self.block < 1:
+            raise ValueError(f"block must be >= 1; got {self.block}")
+        if self.max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1; "
+                             f"got {self.max_entries}")
+        if self.max_bytes is not None and self.max_bytes < 1:
+            raise ValueError(f"max_bytes must be >= 1; "
+                             f"got {self.max_bytes}")
+        if self.store not in ("device", "host"):
+            raise ValueError(f"store must be 'device' or 'host'; "
+                             f"got {self.store!r}")
+
+
+@dataclasses.dataclass
+class _Entry:
+    snap: object          # batch-1 cache pytree (jnp or, offloaded, np)
+    n_tokens: int         # prefix length the snapshot encodes
+    nbytes: int
+    on_host: bool
+
+
+def _tree_bytes(tree) -> int:
+    return sum(leaf.nbytes for leaf in jax.tree.leaves(tree))
+
+
+class PrefixCache:
+    """Bounded LRU store of prompt-prefix state snapshots.
+
+    Host-side bookkeeping only — the engine owns all pool scatters.
+    Counters (hits/misses/inserts/evictions/n_bytes) feed ServeStats.
+    """
+
+    def __init__(self, pcfg: PrefixCacheConfig):
+        pcfg.validate()
+        self.cfg = pcfg
+        self._entries: "collections.OrderedDict[bytes, _Entry]" = \
+            collections.OrderedDict()
+        self._pending: list[bytes] = []   # host-store: not yet offloaded
+        self.hits = 0
+        self.misses = 0
+        self.inserts = 0
+        self.evictions = 0
+        self._bytes = 0
+
+    # -- keys & boundaries --------------------------------------------------
+
+    @staticmethod
+    def _key(tokens) -> bytes:
+        return np.asarray(tokens, np.int32).tobytes()
+
+    def boundary(self, length: int) -> int:
+        """Deepest snapshot boundary usable for a prompt of ``length``
+        tokens: the largest multiple of ``block`` STRICTLY below
+        ``length`` (so the suffix is never empty), or 0 when none."""
+        p = ((length - 1) // self.cfg.block) * self.cfg.block
+        return p if p >= self.cfg.block else 0
+
+    # -- queries ------------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def n_bytes(self) -> int:
+        return self._bytes
+
+    def lookup(self, prompt):
+        """Deepest cached prefix of ``prompt`` at a block boundary.
+
+        Returns (n_tokens, snap) with ``snap`` a device-resident batch-1
+        cache pytree, or None.  Walks boundaries deepest-first so a
+        prompt sharing 3 blocks with one donor and 1 with another takes
+        the 3-block snapshot.  A hit refreshes LRU recency.  Exactly one
+        of hits/misses is bumped per call (one call per admission).
+        """
+        prompt = np.asarray(prompt, np.int32)
+        p = self.boundary(len(prompt))
+        while p >= self.cfg.block:
+            ent = self._entries.get(self._key(prompt[:p]))
+            if ent is not None:
+                self._entries.move_to_end(self._key(prompt[:p]))
+                self.hits += 1
+                snap = ent.snap
+                if ent.on_host:
+                    snap = jax.tree.map(jnp.asarray, snap)
+                return ent.n_tokens, snap
+            p -= self.cfg.block
+        self.misses += 1
+        return None
+
+    # -- mutation -----------------------------------------------------------
+
+    def insert(self, prefix_tokens, snap) -> None:
+        """Cache ``snap`` (batch-1 cache pytree, device-resident) as the
+        state after consuming ``prefix_tokens``.  An existing entry is
+        refreshed (recency), not replaced — snapshots for the same exact
+        prefix are interchangeable by construction."""
+        key = self._key(prefix_tokens)
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            return
+        ent = _Entry(snap=snap, n_tokens=len(prefix_tokens),
+                     nbytes=_tree_bytes(snap), on_host=False)
+        self._entries[key] = ent
+        self._bytes += ent.nbytes
+        self.inserts += 1
+        if self.cfg.store == "host":
+            self._pending.append(key)
+        self._evict_over_bound()
+
+    def _evict_over_bound(self) -> None:
+        over_bytes = (self.cfg.max_bytes is not None
+                      and self._bytes > self.cfg.max_bytes)
+        while self._entries and (len(self._entries) > self.cfg.max_entries
+                                 or over_bytes):
+            key, ent = self._entries.popitem(last=False)
+            self._bytes -= ent.nbytes
+            self.evictions += 1
+            if key in self._pending:
+                self._pending.remove(key)
+            over_bytes = (self.cfg.max_bytes is not None
+                          and self._bytes > self.cfg.max_bytes)
+
+    # -- deferred host offload ----------------------------------------------
+
+    def has_pending(self) -> bool:
+        """True when host-store snapshots still await offload — the
+        scheduler's cache-snapshot deadline (an uncertain event: the
+        burst must stay quantum-capped so the offload can run at the
+        next sync point instead of after an unbounded burst)."""
+        return bool(self._pending)
+
+    def flush_pending(self, limit: Optional[int] = 1) -> int:
+        """Offload up to ``limit`` pending snapshots to host memory
+        (None = all).  Called at existing sync boundaries (the engine
+        just device_get'd sampled tokens), so the copy adds no new
+        device round trip.  Returns the number offloaded."""
+        done = 0
+        while self._pending and (limit is None or done < limit):
+            key = self._pending.pop(0)
+            ent = self._entries.get(key)
+            if ent is not None and not ent.on_host:
+                ent.snap = jax.device_get(ent.snap)
+                ent.on_host = True
+            done += 1
+        return done
+
+    # -- stats --------------------------------------------------------------
+
+    def counters(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "inserts": self.inserts, "evictions": self.evictions,
+                "entries": len(self._entries), "bytes": self._bytes}

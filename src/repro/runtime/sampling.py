@@ -42,6 +42,14 @@ import numpy as np
 #: "draft_step", "verify").
 TRACE_COUNTS: collections.Counter = collections.Counter()
 
+#: alternatives the step functions always compute per emitted token
+#: (jax.lax.top_k over the log-softmax).  A fixed width keeps the jit
+#: signatures free of per-request shape dependence; requests asking for
+#: fewer (SamplingParams.top_logprobs) take a host-side prefix, requests
+#: asking for none pay only the top_k, which is noise next to the argmax
+#: the sampler already runs over the same vocab axis.
+TOP_LOGPROBS = 5
+
 
 @dataclasses.dataclass(frozen=True)
 class SamplingParams:
@@ -62,14 +70,36 @@ class SamplingParams:
     stop: token ids, ANY of which ends the stream (the stop token is
         delivered, then the slot is evicted).  ``Engine.submit``'s
         ``eos_id`` convenience appends to this.
+    stop_seqs: multi-token stop sequences; the stream ends as soon as
+        its emitted tokens END WITH any of them (suffix-window match —
+        the whole sequence is delivered, overshoot past it inside a
+        decode burst is trimmed).  Orthogonal to ``stop``.
     max_new: token budget including the prefill-sampled first token.
+    n: best-of-n — fork-served branches per request.  One prefill, n
+        forked slots; branch b >= 1 samples from a per-branch key
+        (``fold_in(key(seed), b)`` applied at fork time), branch 0 keeps
+        the request's own stream.  The parent request returns the
+        highest-cumulative-logprob branch's tokens, with all branches
+        ranked in ``Request.branches``.
+    logprobs: return the chosen token's log-probability per emitted
+        token (``Request.logprobs``), under log-softmax of the raw f32
+        logits — the model's own distribution, before temperature/
+        filtering, so values are comparable across branches with
+        different sampling knobs.
+    top_logprobs: also return the top-``top_logprobs`` (token, logprob)
+        alternatives per emitted token (``Request.top_logprobs``);
+        bounded by ``TOP_LOGPROBS``.
     """
     temperature: float = 0.0
     top_k: int = 0
     top_p: float = 1.0
     seed: Optional[int] = None
     stop: tuple = ()
+    stop_seqs: tuple = ()
     max_new: int = 32
+    n: int = 1
+    logprobs: bool = False
+    top_logprobs: int = 0
 
     def validate(self) -> None:
         if self.temperature < 0:
@@ -82,6 +112,14 @@ class SamplingParams:
             raise ValueError(f"top_p must be in (0, 1]; got {self.top_p}")
         if self.max_new < 1:
             raise ValueError(f"max_new must be >= 1; got {self.max_new}")
+        if self.n < 1:
+            raise ValueError(f"n must be >= 1; got {self.n}")
+        for s in self.stop_seqs:
+            if len(tuple(s)) < 1:
+                raise ValueError("stop_seqs entries must be non-empty")
+        if not 0 <= self.top_logprobs <= TOP_LOGPROBS:
+            raise ValueError(f"top_logprobs must be in [0, {TOP_LOGPROBS}]"
+                             f"; got {self.top_logprobs}")
 
 
 #: the engine-wide default: greedy argmax, 32-token budget
@@ -132,12 +170,31 @@ class SlotParams:
         self.top_p[slot] = 1.0
         self.key_data[slot] = 0
 
-    def copy(self, src: Sequence[int], dst: Sequence[int]) -> None:
-        """Mirror a state fork: dst rows take src rows' params."""
+    def copy(self, src: Sequence[int], dst: Sequence[int],
+             tags: Optional[Sequence[Optional[int]]] = None) -> None:
+        """Mirror a state fork: dst rows take src rows' params.
+
+        ``tags`` (same length as dst) re-derives destination keys:
+        a truthy tag t folds it into the SOURCE row's key —
+        ``key_data(fold_in(key, t))`` — giving each best-of-n branch
+        its own stream while sharing every other knob.  A tag of
+        0/None copies the key verbatim (byte-for-byte the pre-tag
+        behavior): the spec-decode draft-fork contract, where the
+        scratch slot MUST continue the request's exact key schedule,
+        and the branch-0 convention, where the first branch coincides
+        bitwise with the same request served at n=1.
+        """
         src, dst = list(src), list(dst)
         for f in self.FIELDS:
             a = getattr(self, f)
             a[dst] = a[src]
+        if tags is None:
+            return
+        for s, d, t in zip(src, dst, tags):
+            if t:
+                key = jax.random.wrap_key_data(jnp.asarray(self.key_data[s]))
+                self.key_data[d] = np.asarray(
+                    jax.random.key_data(jax.random.fold_in(key, int(t))))
 
     def row(self, slot: int) -> dict:
         """Single-row device view (batch-1 prefill sampling)."""
@@ -165,6 +222,26 @@ def fold_tag(keys, tag: int):
     """Derive a sub-stream (accept / residual / bonus draws in the
     speculative pass) from already-folded per-slot keys."""
     return jax.vmap(lambda k: jax.random.fold_in(k, tag))(keys)
+
+
+def token_logprobs(logits, tok):
+    """Per-token logprob surface: (b, V) raw logits + (b,) chosen ids
+    -> (chosen_lp (b,), top_vals (b, K), top_ids (b, K)) with
+    K = min(TOP_LOGPROBS, V).
+
+    Log-softmax of the RAW float32 logits — the model's distribution
+    before temperature scaling or top-k/top-p filtering — so logprobs
+    are comparable across requests/branches with different sampling
+    knobs (and a sampled token filtered into a renormalized dist still
+    reports its true model probability).  Computed unconditionally
+    inside the step jits: the chosen-token math is untouched, so token
+    streams stay bitwise identical to the logprob-free engine.
+    """
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    chosen = jnp.take_along_axis(lp, tok[:, None], axis=-1)[:, 0]
+    k = min(TOP_LOGPROBS, lp.shape[-1])
+    tv, ti = jax.lax.top_k(lp, k)
+    return chosen, tv, ti.astype(jnp.int32)
 
 
 def filter_logits(scaled, top_k, top_p):

@@ -32,6 +32,7 @@ from typing import Optional
 import numpy as np
 
 from repro.runtime.engine import Engine, EngineConfig
+from repro.runtime.prefix_cache import PrefixCacheConfig
 from repro.runtime.sampling import SamplingParams
 
 
@@ -49,6 +50,11 @@ class ServeConfig:
     # pooled recurrent-state storage dtype override (cfg.state_dtype):
     # "int8"/"fp8" multiply slot capacity ~4x; None keeps the model cfg
     state_dtype: Optional[str] = None
+    # prompt-prefix state cache (EngineConfig.prefix_cache): None
+    # disables; a PrefixCacheConfig makes admissions sharing a cached
+    # block-aligned prefix restore the snapshot and prefill only the
+    # suffix — token-identical to the cold prefill
+    prefix_cache: Optional[PrefixCacheConfig] = None
 
 
 class Server:
@@ -58,7 +64,8 @@ class Server:
         self.params = params
         self.engine = Engine(cfg, params, EngineConfig(
             n_slots=scfg.batch_slots, max_seq=scfg.max_seq,
-            seed=scfg.seed, state_dtype=scfg.state_dtype))
+            seed=scfg.seed, state_dtype=scfg.state_dtype,
+            prefix_cache=scfg.prefix_cache))
 
     def generate(self, prompts: np.ndarray, max_new: int = 32,
                  eos_id: Optional[int] = None) -> np.ndarray:

@@ -274,7 +274,12 @@ def _jit_verify(cfg, k: int):
         emit, n_acc, pending = accept_tokens_hetero(
             draft_toks, tl, draft_logits, sp, step, depth_limit)
         snap = registry.select_step(cfg, caches, n_acc)
-        return emit, n_acc, pending, snap
+        # logprob surface for every emitted position (the engine keeps
+        # only the accepted prefix) — raw-logit log-softmax, so the
+        # emit/accept math above is untouched and token streams stay
+        # bitwise identical to the surface-free verify
+        lp, tv, ti = jax.vmap(sampling.token_logprobs)(tl, emit)
+        return emit, n_acc, pending, snap, lp, tv, ti
     return jax.jit(_fn)
 
 
@@ -327,7 +332,9 @@ class SpecDecoder:
                active, sp, step, depth_limit):
         """One batched target pass + per-slot acceptance + rollback
         select.  Returns (emit (K+1, total), n_acc (total,), pending
-        (total,), rolled-back cache).  K is taken from draft_toks."""
+        (total,), rolled-back cache, chosen-logprobs (K+1, total),
+        top-logprob values (K+1, total, TOP), top-logprob ids).  K is
+        taken from draft_toks."""
         fn = _jit_verify(self.cfg, int(draft_toks.shape[0]))
         return fn(params, cache, x0, draft_toks, draft_logits,
                   active, sp, step, depth_limit)

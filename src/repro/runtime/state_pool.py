@@ -165,21 +165,35 @@ class SlotStatePool:
             raise ValueError(f"scratch slot {slot} is not leased")
         self._scratch_free.append(slot)
 
-    def fork(self, src: Sequence[int], dst: Sequence[int]) -> None:
+    def fork(self, src: Sequence[int], dst: Sequence[int],
+             branch_tags: Optional[Sequence[Optional[int]]] = None) -> None:
         """Copy per-slot state src[i] -> dst[i] in one fused
         gather+scatter dispatch.  Quantized payloads and their absmax
         scales are both cache leaves, so they fork together — a forked
         draft can never observe a live slot's payload under a stale
-        scale (or vice versa)."""
+        scale (or vice versa).
+
+        ``branch_tags`` (same length as dst) controls the destination
+        key stream.  None / a 0 entry copies the source key verbatim:
+        the spec-decode draft contract — the scratch slot continues the
+        request's exact key schedule, so the draft's proposals are
+        bitwise the tokens the request itself would sample.  A truthy
+        tag t folds it into the source key (best-of-n branch b uses
+        tag b), so forked "alternatives" draw from genuinely distinct
+        streams instead of aliasing the parent's — the fork-seed
+        aliasing fix.
+        """
         if len(src) != len(dst):
             raise ValueError("fork src/dst length mismatch")
+        if branch_tags is not None and len(branch_tags) != len(dst):
+            raise ValueError("fork branch_tags/dst length mismatch")
         if not src:
             return
         self.cache = self._fork_fn(self.cache, jnp.asarray(list(src)),
                                    jnp.asarray(list(dst)))
         # the fork's sampling params move with the state: the draft must
         # propose with the request's own temperature/top-k/top-p and key
-        self.params.copy(src, dst)
+        self.params.copy(src, dst, tags=branch_tags)
 
     # -- device-state operations --------------------------------------------
 

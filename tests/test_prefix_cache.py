@@ -1,0 +1,437 @@
+"""Prefix-state cache + fork-served best-of-n (ISSUE 6 / PR 6).
+
+The contract under test:
+
+  * Cached-prefix admission is TOKEN-IDENTICAL to cold full prefill —
+    across families and state_dtype {f32, int8} — because the restored
+    snapshot IS the donor prefill's state at that boundary and the
+    suffix runs through the same per-token decode dispatch.
+  * The LRU store is bounded (entries and bytes) and churn can never
+    leak a stale snapshot's payload or scales into a later admission
+    (the stale-scale regression style of tests/test_state_quant.py).
+  * ``fork(branch_tags=...)`` re-derives destination keys per branch
+    (the fork-seed aliasing fix): sampled best-of-n branches from one
+    prefix produce DISTINCT streams, while tag-less forks copy the key
+    verbatim — the spec-decode draft contract — and greedy streams are
+    bitwise unchanged either way.
+  * Cancelling a best-of-n parent mid-flight reclaims every branch
+    slot with no pool leak.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import registry
+from repro.parallel import sharding
+from repro.runtime import sampling
+from repro.runtime.engine import Engine, EngineConfig
+from repro.runtime.prefix_cache import PrefixCache, PrefixCacheConfig
+from repro.runtime.sampling import SamplingParams
+from repro.runtime.spec_decode import DraftConfig
+from repro.runtime.state_pool import SlotStatePool
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _setup(name="mamba-130m"):
+    cfg = configs.smoke_variant(configs.get_config(name))
+    cfg = dataclasses.replace(cfg, vocab=64, dtype="float32",
+                              capacity_factor=float(max(cfg.n_experts, 1)))
+    params = sharding.tree_values(
+        registry.init_params(cfg, jax.random.key(0)))
+    return cfg, params
+
+
+def _shared_prefix_prompts(vocab, n=4, prefix_len=16, suffix_len=5,
+                           seed=0):
+    """n prompts sharing a system-prompt-style common prefix."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(1, vocab, size=prefix_len).astype(np.int32)
+    return [np.concatenate([prefix,
+                            rng.integers(1, vocab,
+                                         size=suffix_len).astype(np.int32)])
+            for _ in range(n)]
+
+
+CACHE_ARCHS = ["mamba-130m", "jamba-v0.1-52b", "xlstm-350m"]
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache unit behavior (no model)
+# ---------------------------------------------------------------------------
+
+def test_boundary_is_largest_block_multiple_strictly_below_length():
+    pc = PrefixCache(PrefixCacheConfig(block=8))
+    assert pc.boundary(5) == 0        # shorter than one block
+    assert pc.boundary(8) == 0        # suffix must be non-empty
+    assert pc.boundary(9) == 8
+    assert pc.boundary(16) == 8
+    assert pc.boundary(17) == 16
+    assert pc.boundary(24) == 16
+
+
+def test_lookup_walks_down_to_deepest_cached_boundary():
+    pc = PrefixCache(PrefixCacheConfig(block=4, max_entries=8))
+    toks = np.arange(1, 20, dtype=np.int32)
+    snap4 = {"x": jnp.zeros((1, 4))}
+    snap8 = {"x": jnp.ones((1, 4))}
+    pc.insert(toks[:4], snap4)
+    pc.insert(toks[:8], snap8)
+    n, snap = pc.lookup(toks[:11])
+    assert n == 8 and bool(jnp.all(snap["x"] == 1))
+    # a prompt diverging after 4 tokens hits the shallower entry
+    other = np.concatenate([toks[:4], toks[:4] + 30])
+    n, snap = pc.lookup(np.concatenate([other, toks[:3]]))
+    assert n == 4 and bool(jnp.all(snap["x"] == 0))
+    assert pc.hits == 2 and pc.misses == 0
+
+
+def test_lru_bounds_entries_and_bytes():
+    pc = PrefixCache(PrefixCacheConfig(block=2, max_entries=3))
+    for i in range(6):
+        pc.insert(np.arange(i, i + 2, dtype=np.int32),
+                  {"x": jnp.full((1, 2), i, jnp.float32)})
+    assert len(pc) == 3 and pc.evictions == 3
+    # byte bound: each entry is 8 bytes of f32 -> cap at 2 entries
+    pc2 = PrefixCache(PrefixCacheConfig(block=2, max_entries=100,
+                                        max_bytes=16))
+    for i in range(5):
+        pc2.insert(np.arange(i, i + 2, dtype=np.int32),
+                   {"x": jnp.full((1, 2), i, jnp.float32)})
+    assert pc2.n_bytes <= 16 and len(pc2) == 2
+
+
+def test_host_store_defers_offload_until_flush():
+    pc = PrefixCache(PrefixCacheConfig(block=2, store="host"))
+    pc.insert(np.arange(2, dtype=np.int32), {"x": jnp.zeros((1, 2))})
+    assert pc.has_pending()
+    assert pc.flush_pending(limit=None) == 1
+    assert not pc.has_pending()
+    ent = next(iter(pc._entries.values()))
+    assert ent.on_host and isinstance(jax.tree.leaves(ent.snap)[0],
+                                      np.ndarray)
+    # a lookup rehydrates to a device array
+    _, snap = pc.lookup(np.arange(3, dtype=np.int32))
+    assert isinstance(jax.tree.leaves(snap)[0], jnp.ndarray)
+
+
+def test_config_validation():
+    for bad in (PrefixCacheConfig(block=0), PrefixCacheConfig(max_entries=0),
+                PrefixCacheConfig(max_bytes=0),
+                PrefixCacheConfig(store="gpu")):
+        with pytest.raises(ValueError):
+            bad.validate()
+
+
+# ---------------------------------------------------------------------------
+# Cached admission == cold prefill (families x state_dtype)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", CACHE_ARCHS)
+@pytest.mark.parametrize("state_dtype", [None, "int8"])
+def test_cached_admission_token_identical(name, state_dtype):
+    """The acceptance gate: a cache HIT emits exactly the tokens a COLD
+    admission of the same prompt produces, with >0 hits and strictly
+    fewer prefilled (computed) tokens than the no-cache engine.
+
+    Hit-vs-cold identity is by construction for ANY state_dtype: a
+    cache-enabled engine chunks every admission at the same block
+    boundaries (cold = block prefill + suffix chain, hit = restored
+    snapshot + the same chain), and the snapshot IS the cold path's
+    state at that boundary.  In f32 the chunked computation is
+    additionally bitwise the cache-OFF engine's single-shot prefill
+    (asserted below); with a quantized state_dtype the quantization
+    POINTS differ between chunked and single-shot prompt processing
+    (same reason int8 decode agreement has a floor, not a guarantee,
+    in test_state_quant.py), so cross-engine identity is asserted
+    against a cache-enabled cold engine instead."""
+    cfg, params = _setup(name)
+    prompts = _shared_prefix_prompts(cfg.vocab)
+    pcc = PrefixCacheConfig(block=8, max_entries=16)
+    ecfg = dict(n_slots=2, max_seq=64, state_dtype=state_dtype)
+    eng0 = Engine(cfg, params, EngineConfig(**ecfg))
+    nocache = [eng0.submit(p, max_new=6) for p in prompts]
+    eng0.run()
+    eng1 = Engine(cfg, params, EngineConfig(**ecfg, prefix_cache=pcc))
+    got = [eng1.submit(p, max_new=6) for p in prompts]
+    eng1.run()
+    # cold reference for each prompt: a fresh cache-enabled engine per
+    # request, so every admission misses but chunks identically
+    ref = []
+    for p in prompts:
+        e = Engine(cfg, params, EngineConfig(**ecfg, prefix_cache=pcc))
+        r = e.submit(p, max_new=6)
+        e.run()
+        assert e.stats.prefix_hits == 0
+        ref.append(r)
+    assert [r.tokens for r in got] == [r.tokens for r in ref]
+    if state_dtype is None:
+        assert [r.tokens for r in got] == [r.tokens for r in nocache]
+    s = eng1.stats.summary()
+    assert s["prefix_hits"] > 0
+    assert eng1.stats.prefill_tokens < eng0.stats.prefill_tokens
+    assert s["prefix_cached_tokens"] > 0
+
+
+def test_unaligned_shared_prefix_hits_at_block_boundary():
+    """Two prompts sharing a prefix that is NOT a block multiple still
+    hit at the deepest common boundary (cold admissions snapshot every
+    boundary they cross)."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(3)
+    shared = rng.integers(1, cfg.vocab, size=13).astype(np.int32)  # 13 % 4 != 0
+    p1 = np.concatenate([shared, rng.integers(1, cfg.vocab, size=4).astype(np.int32)])
+    p2 = np.concatenate([shared, rng.integers(1, cfg.vocab, size=6).astype(np.int32)])
+    eng = Engine(cfg, params, EngineConfig(
+        n_slots=1, max_seq=64,
+        prefix_cache=PrefixCacheConfig(block=4, max_entries=16)))
+    r1 = eng.submit(p1, max_new=4)
+    r2 = eng.submit(p2, max_new=4)
+    eng.run()
+    assert eng.stats.prefix_hits == 1
+    # the hit restored 12 of 13 shared tokens (deepest boundary = 12)
+    assert eng.stats.prefix_cached_tokens == 12
+    eng0 = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=64))
+    q1, q2 = eng0.submit(p1, max_new=4), eng0.submit(p2, max_new=4)
+    eng0.run()
+    assert (r1.tokens, r2.tokens) == (q1.tokens, q2.tokens)
+
+
+@pytest.mark.parametrize("state_dtype", [None, "int8"])
+def test_lru_churn_no_scale_or_payload_leak(state_dtype):
+    """Stale-state regression under eviction churn: a tiny cache cycled
+    through many distinct prompts (every insert evicts) must keep every
+    restored admission token-identical — a snapshot surviving under the
+    wrong key, or a payload restored under another entry's scales,
+    would corrupt the stream."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(7)
+    prefixes = [rng.integers(1, cfg.vocab, size=8).astype(np.int32)
+                for _ in range(5)]
+    # interleave: each prefix admitted twice, far enough apart that the
+    # 2-entry LRU evicts between most reuses
+    prompts = []
+    for round_ in range(2):
+        for pfx in prefixes:
+            prompts.append(np.concatenate(
+                [pfx, rng.integers(1, cfg.vocab, size=3).astype(np.int32)]))
+    ecfg = dict(n_slots=2, max_seq=32, state_dtype=state_dtype)
+    # reference: every prompt served cold on a fresh cache-enabled
+    # engine (same block chunking, zero hits) — valid for any dtype
+    ref = []
+    for p in prompts:
+        e = Engine(cfg, params, EngineConfig(
+            **ecfg, prefix_cache=PrefixCacheConfig(block=8)))
+        r = e.submit(p, max_new=4)
+        e.run()
+        ref.append(r)
+    eng1 = Engine(cfg, params, EngineConfig(
+        **ecfg, prefix_cache=PrefixCacheConfig(block=8, max_entries=2)))
+    got = [eng1.submit(p, max_new=4) for p in prompts]
+    eng1.run()
+    assert [r.tokens for r in got] == [r.tokens for r in ref]
+    assert eng1.stats.prefix_evictions > 0
+    assert len(eng1._prefix) <= 2
+
+
+def test_host_store_engine_roundtrip_and_drain():
+    cfg, params = _setup()
+    prompts = _shared_prefix_prompts(cfg.vocab)
+    eng0 = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=64))
+    ref = [eng0.submit(p, max_new=6) for p in prompts]
+    eng0.run()
+    eng1 = Engine(cfg, params, EngineConfig(
+        n_slots=2, max_seq=64,
+        prefix_cache=PrefixCacheConfig(block=8, store="host")))
+    got = [eng1.submit(p, max_new=6) for p in prompts]
+    eng1.run()
+    assert [r.tokens for r in got] == [r.tokens for r in ref]
+    assert not eng1._prefix.has_pending()   # drained by run()'s deadline
+    assert eng1.stats.prefix_hits > 0
+
+
+def test_spec_decode_over_cached_prefix_token_identical():
+    """The three state movers compose: restore (prefix cache), fork
+    (spec draft), rollback (verify) — greedy streams stay bitwise."""
+    cfg, params = _setup()
+    prompts = _shared_prefix_prompts(cfg.vocab)
+    eng0 = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=64))
+    ref = [eng0.submit(p, max_new=6) for p in prompts]
+    eng0.run()
+    eng1 = Engine(cfg, params, EngineConfig(
+        n_slots=2, max_seq=64, draft=DraftConfig(k=3),
+        prefix_cache=PrefixCacheConfig(block=8)))
+    got = [eng1.submit(p, max_new=6) for p in prompts]
+    eng1.run()
+    assert [r.tokens for r in got] == [r.tokens for r in ref]
+    assert eng1.stats.prefix_hits > 0
+
+
+# ---------------------------------------------------------------------------
+# Fork-seed aliasing fix (pool level)
+# ---------------------------------------------------------------------------
+
+def test_fork_untagged_copies_key_verbatim():
+    """The spec-decode contract: a tag-less fork's destination key is a
+    byte-for-byte copy of the source — bitwise the pre-fix behavior."""
+    cfg, _ = _setup()
+    pool = SlotStatePool(cfg, n_slots=2, max_seq=16, n_scratch=2)
+    s = pool.alloc()
+    pool.params.set(s, SamplingParams(temperature=0.9, seed=123), 123)
+    sc = pool.lease_scratch()
+    pool.fork([s], [sc])
+    assert np.array_equal(pool.params.key_data[sc],
+                          pool.params.key_data[s])
+    pool.release_scratch(sc)
+
+
+def test_fork_branch_tags_rederive_keys_per_branch():
+    """The aliasing fix: tagged destinations get fold_in(src_key, tag)
+    — distinct per branch, deterministic, and tag 0 stays verbatim."""
+    cfg, _ = _setup()
+    pool = SlotStatePool(cfg, n_slots=4, max_seq=16)
+    s = pool.alloc()
+    d0, d1, d2 = pool.alloc(), pool.alloc(), pool.alloc()
+    pool.params.set(s, SamplingParams(temperature=0.9, seed=5), 5)
+    pool.fork([s, s, s], [d0, d1, d2], branch_tags=[0, 1, 2])
+    kd = pool.params.key_data
+    assert np.array_equal(kd[d0], kd[s])          # tag 0 == verbatim
+    assert not np.array_equal(kd[d1], kd[s])
+    assert not np.array_equal(kd[d2], kd[s])
+    assert not np.array_equal(kd[d1], kd[d2])
+    # deterministic: the fold of the SOURCE key, not of slot position
+    want = jax.random.key_data(jax.random.fold_in(
+        jax.random.wrap_key_data(jnp.asarray(kd[s])), 1))
+    assert np.array_equal(kd[d1], np.asarray(want))
+    with pytest.raises(ValueError):
+        pool.fork([s], [d1], branch_tags=[1, 2])
+
+
+# ---------------------------------------------------------------------------
+# Best-of-n (engine level)
+# ---------------------------------------------------------------------------
+
+def test_bestofn_sampled_branches_distinct_ranked_and_branch0_bitwise():
+    cfg, params = _setup()
+    prompt = _shared_prefix_prompts(cfg.vocab, n=1)[0]
+    sp = SamplingParams(temperature=0.9, seed=7, n=3, max_new=6)
+    eng = Engine(cfg, params, EngineConfig(n_slots=4, max_seq=64))
+    parent = eng.submit(prompt, params=sp)
+    eng.run()
+    assert parent.finished and len(parent.branches) == 3
+    streams = [tuple(c.tokens) for c in parent.branches]
+    assert len(set(streams)) == 3, "sampled branches must diverge"
+    # ranked by cumulative logprob, best surfaced on the parent
+    cums = [c.cum_logprob for c in parent.branches]
+    assert cums == sorted(cums, reverse=True)
+    assert parent.tokens == parent.branches[0].tokens
+    assert parent.cum_logprob == parent.branches[0].cum_logprob
+    # branch 0 is bitwise the same request served at n=1
+    eng1 = Engine(cfg, params, EngineConfig(n_slots=4, max_seq=64))
+    solo = eng1.submit(prompt, params=dataclasses.replace(sp, n=1))
+    eng1.run()
+    b0 = next(c for c in parent.branches if c.branch == 0)
+    assert b0.tokens == solo.tokens
+    # stats: ONE request submitted, one retired, no branch double-count
+    assert eng.stats.n_requests == 1
+    assert len(eng.pool._free) == 4
+
+
+def test_bestofn_greedy_branches_identical_streams():
+    """Greedy ignores the key stream entirely, so re-derived branch
+    keys must not perturb it: all branches argmax-identical."""
+    cfg, params = _setup()
+    prompt = _shared_prefix_prompts(cfg.vocab, n=1)[0]
+    eng = Engine(cfg, params, EngineConfig(n_slots=3, max_seq=64))
+    parent = eng.submit(prompt, params=SamplingParams(n=3, max_new=5))
+    eng.run()
+    streams = [tuple(c.tokens) for c in parent.branches]
+    assert len(set(streams)) == 1
+    eng1 = Engine(cfg, params, EngineConfig(n_slots=3, max_seq=64))
+    solo = eng1.submit(prompt, params=SamplingParams(max_new=5))
+    eng1.run()
+    assert list(streams[0]) == solo.tokens
+
+
+def test_bestofn_needs_n_slots_and_blocks_head_of_line():
+    cfg, params = _setup()
+    prompt = _shared_prefix_prompts(cfg.vocab, n=1)[0]
+    eng = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=64))
+    with pytest.raises(ValueError):
+        eng.submit(prompt, params=SamplingParams(n=3))
+    with pytest.raises(ValueError):
+        eng.submit(prompt, params=SamplingParams(n=2),
+                   stream_cb=lambda r, t: None)
+    # n=2 on a 2-slot engine: a single-slot request queued behind it
+    # must not jump the line while only one slot is free
+    r1 = eng.submit(prompt, max_new=8)
+    r2 = eng.submit(prompt, params=SamplingParams(n=2, max_new=4,
+                                                  temperature=0.5,
+                                                  seed=3))
+    r3 = eng.submit(prompt, max_new=2)
+    eng.run()
+    assert r1.finished and r2.finished and r3.finished
+    assert len(r2.branches) == 2
+    assert eng.pool.n_free == 2
+
+
+def test_cancel_mid_fork_reclaims_every_branch_no_leak():
+    """Cancel the parent while its branches are mid-decode: every
+    branch slot must return to the free list, the parent retires as
+    ONE cancelled request, and co-resident requests are unperturbed."""
+    cfg, params = _setup()
+    prompts = _shared_prefix_prompts(cfg.vocab, n=2)
+    eng0 = Engine(cfg, params, EngineConfig(n_slots=4, max_seq=64))
+    ref = eng0.submit(prompts[1], max_new=8)
+    eng0.run()
+    eng = Engine(cfg, params, EngineConfig(n_slots=4, max_seq=64,
+                                           sched_quantum=2))
+    parent = eng.submit(prompts[0],
+                        params=SamplingParams(temperature=0.8, seed=9,
+                                              n=3, max_new=16))
+    # the bystander's stream_cb keeps bursts quantum-capped (an
+    # uncertain event), so two steps leave everyone mid-decode
+    bystander = eng.submit(prompts[1], max_new=8,
+                           stream_cb=lambda r, t: None)
+    # admit + a couple of bursts, then cancel the parent mid-flight
+    eng.step()
+    eng.step()
+    assert eng.pool.n_active == 4
+    assert eng.cancel(parent.req_id)
+    eng.run()
+    assert parent.finished and parent.cancelled
+    assert all(c.finished for c in parent.branches)
+    assert eng.pool.n_free == 4
+    assert eng._by_id == {}
+    assert eng.stats.n_cancelled == 1 and eng.stats.n_requests == 1
+    assert bystander.tokens == ref.tokens
+    # slot params rows were cleared on eviction (no key/temp leak)
+    assert float(eng.pool.params.temperature.max()) == 0.0
+    assert int(eng.pool.params.key_data.max()) == 0
+
+
+def test_bestofn_over_cached_prefix():
+    """Tentpole composition: the n-way fork rides a cache-restored
+    admission; branch streams still diverge and branch 0 still matches
+    the cold n=1 stream."""
+    cfg, params = _setup()
+    prompts = _shared_prefix_prompts(cfg.vocab, n=2)
+    sp = SamplingParams(temperature=0.9, seed=11, n=3, max_new=5)
+    eng = Engine(cfg, params, EngineConfig(
+        n_slots=3, max_seq=64, prefix_cache=PrefixCacheConfig(block=8)))
+    warm = eng.submit(prompts[0], max_new=4)        # seeds the cache
+    eng.run()
+    parent = eng.submit(prompts[1], params=sp)
+    eng.run()
+    assert eng.stats.prefix_hits > 0
+    streams = [tuple(c.tokens) for c in parent.branches]
+    assert len(set(streams)) == 3
+    eng1 = Engine(cfg, params, EngineConfig(n_slots=3, max_seq=64))
+    solo = eng1.submit(prompts[1], params=dataclasses.replace(sp, n=1))
+    eng1.run()
+    b0 = next(c for c in parent.branches if c.branch == 0)
+    assert b0.tokens == solo.tokens

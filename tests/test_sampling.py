@@ -357,3 +357,184 @@ def test_eos_id_composes_with_params_stop():
                    eos_id=ref.tokens[1])
     eng.run()
     assert r.tokens == ref.tokens[:2]         # eos_id fired first
+
+
+# ---------------------------------------------------------------------------
+# Multi-token stop sequences: suffix-window matching + overshoot trim
+# ---------------------------------------------------------------------------
+
+def _first_window_match(stream, seq):
+    """Index of the token that completes the first suffix-window match
+    of ``seq`` in ``stream``, or None."""
+    n = len(seq)
+    for j in range(n - 1, len(stream)):
+        if tuple(stream[j - n + 1:j + 1]) == tuple(seq):
+            return j
+    return None
+
+
+def test_stop_seqs_suffix_window_stops_and_trims_overshoot():
+    """A 2-token stop sequence ends the stream at the token completing
+    the match, with burst overshoot past the match trimmed — and the
+    result is burst-boundary independent (sched_quantum=1 forces the
+    match to complete on its own burst)."""
+    cfg, params = _setup()
+    p = _prompts(1)[0]
+    ref_eng = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=64))
+    ref = ref_eng.submit(p, max_new=12)
+    ref_eng.run()
+    seq = (ref.tokens[3], ref.tokens[4])
+    j = _first_window_match(ref.tokens, seq)   # may fire before idx 4
+    for quantum in (8, 1):
+        eng = Engine(cfg, params,
+                     EngineConfig(n_slots=1, max_seq=64,
+                                  sched_quantum=quantum))
+        r = eng.submit(p, params=SamplingParams(stop_seqs=(seq,),
+                                                max_new=12))
+        eng.run()
+        assert r.tokens == ref.tokens[:j + 1], quantum
+        assert tuple(r.tokens[-2:]) == seq
+
+
+def test_stop_seqs_no_false_positive_and_any_of_set():
+    """A sequence that never occurs leaves the stream bitwise the
+    no-stop reference; with several sequences the earliest match wins
+    (any-of semantics, like stop ids)."""
+    cfg, params = _setup()
+    p = _prompts(1)[0]
+    ref_eng = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=64))
+    ref = ref_eng.submit(p, max_new=10)
+    ref_eng.run()
+    # a 3-token window with a perturbed last token cannot complete
+    miss = (ref.tokens[2], ref.tokens[3], (ref.tokens[4] + 1) % cfg.vocab)
+    assert _first_window_match(ref.tokens, miss) is None
+    eng = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=64))
+    r = eng.submit(p, params=SamplingParams(stop_seqs=(miss,),
+                                            max_new=10))
+    eng.run()
+    assert r.tokens == ref.tokens
+    # any-of: the later-submitted pair fires before the longer window
+    pair = (ref.tokens[1], ref.tokens[2])
+    late = (ref.tokens[5], ref.tokens[6], ref.tokens[7])
+    j = _first_window_match(ref.tokens, pair)
+    eng2 = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=64))
+    r2 = eng2.submit(p, params=SamplingParams(stop_seqs=(late, pair),
+                                              max_new=10))
+    eng2.run()
+    assert r2.tokens == ref.tokens[:j + 1]
+
+
+def test_stop_seqs_single_token_matches_stop_ids_behavior():
+    cfg, params = _setup()
+    p = _prompts(1)[0]
+    ref_eng = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=64))
+    ref = ref_eng.submit(p, max_new=10)
+    ref_eng.run()
+    a = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=64))
+    ra = a.submit(p, params=SamplingParams(stop=(ref.tokens[4],),
+                                           max_new=10))
+    a.run()
+    b = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=64))
+    rb = b.submit(p, params=SamplingParams(stop_seqs=((ref.tokens[4],),),
+                                           max_new=10))
+    b.run()
+    assert rb.tokens == ra.tokens
+
+
+def test_sampling_params_validation_pr6_fields():
+    with pytest.raises(ValueError):
+        SamplingParams(n=0).validate()
+    with pytest.raises(ValueError):
+        SamplingParams(stop_seqs=((),)).validate()
+    with pytest.raises(ValueError):
+        SamplingParams(top_logprobs=-1).validate()
+    with pytest.raises(ValueError):
+        SamplingParams(top_logprobs=sampling.TOP_LOGPROBS + 1).validate()
+    # the valid envelope passes
+    SamplingParams(n=2, stop_seqs=((1, 2), (3,)), logprobs=True,
+                   top_logprobs=sampling.TOP_LOGPROBS).validate()
+
+
+# ---------------------------------------------------------------------------
+# Burst scheduling treats stop_seqs and pending cache snapshots as
+# uncertain events (quantum-capped bursts)
+# ---------------------------------------------------------------------------
+
+def test_burst_len_uncertain_on_stop_seqs_and_prefix_pending():
+    """Scheduler-policy unit: a slot with no uncertain event bursts
+    uncapped to its remaining budget; stop_seqs or a pending prefix-
+    cache snapshot offload cap the burst at sched_quantum."""
+    from repro.runtime.prefix_cache import PrefixCacheConfig
+
+    def bind(eng, req):
+        # place the request in slot 0 and drain the ready queue so
+        # may_admit doesn't cap the burst for an unrelated reason
+        eng._slot_req[0] = req
+        eng._ready.clear()
+
+    cfg, params = _setup()
+    p = _prompts(1)[0]
+    base = EngineConfig(n_slots=1, max_seq=64, sched_quantum=4)
+    eng = Engine(cfg, params, base)
+    bind(eng, eng.submit(p, params=SamplingParams(max_new=20)))
+    assert eng._burst_len([0]) == 20          # certain: run to budget
+    eng2 = Engine(cfg, params, base)
+    bind(eng2, eng2.submit(p, params=SamplingParams(
+        max_new=20, stop_seqs=((1, 2),))))
+    assert eng2._burst_len([0]) == 4          # stop_seqs -> uncertain
+    pcfg = dataclasses.replace(base, prefix_cache=PrefixCacheConfig(
+        block=4, store="host"))
+    eng3 = Engine(cfg, params, pcfg)
+    bind(eng3, eng3.submit(p, params=SamplingParams(max_new=20)))
+    assert eng3._burst_len([0]) == 20         # nothing pending yet
+    eng3._prefix.insert(np.arange(4, dtype=np.int32),
+                        {"h": jnp.zeros((1, 2), jnp.float32)})
+    assert eng3._prefix.has_pending()
+    assert eng3._burst_len([0]) == 4          # snapshot deadline
+    eng3._prefix.flush_pending(limit=None)
+    assert eng3._burst_len([0]) == 20         # drained -> certain again
+
+
+# ---------------------------------------------------------------------------
+# Logprob surfaces: greedy engine logprobs == a direct forward pass
+# ---------------------------------------------------------------------------
+
+def test_greedy_logprobs_match_direct_forward_pass():
+    """Request.logprobs / top_logprobs for a greedy stream must equal
+    log_softmax of the raw f32 logits from chaining registry.prefill +
+    decode_step directly — the engine's surface is the model's math,
+    not a rescaled or filtered variant."""
+    cfg, params = _setup()
+    p = _prompts(1)[0]
+    k = 3
+    eng = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=64))
+    r = eng.submit(p, params=SamplingParams(logprobs=True,
+                                            top_logprobs=k, max_new=6))
+    eng.run()
+    assert len(r.tokens) == 6
+    assert len(r.logprobs) == 6
+    assert len(r.top_logprobs) == 6
+    assert all(len(row) == k for row in r.top_logprobs)
+    cache = sharding.tree_values(registry.init_cache(cfg, 1, max_seq=64))
+    logits, cache = registry.prefill(cfg, params, cache,
+                                     {"tokens": jnp.asarray(p[None])})
+    last = logits[0, -1].astype(jnp.float32)
+    for t, tok in enumerate(r.tokens):
+        lp = jax.nn.log_softmax(last)
+        assert tok == int(jnp.argmax(last))
+        assert np.isclose(r.logprobs[t], float(lp[tok]), atol=1e-5), t
+        tv, ti = jax.lax.top_k(lp, k)
+        assert [i for i, _ in r.top_logprobs[t]] == [int(x) for x in ti]
+        assert np.allclose([v for _, v in r.top_logprobs[t]],
+                           np.asarray(tv), atol=1e-5), t
+        logits, cache = registry.decode_step(
+            cfg, params, cache,
+            {"tokens": jnp.asarray([[tok]], jnp.int32)})
+        last = logits[0, -1].astype(jnp.float32)
+    assert np.isclose(r.cum_logprob, sum(r.logprobs), atol=1e-4)
+    # lists stay empty unless asked; cum_logprob still accumulates
+    eng2 = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=64))
+    r2 = eng2.submit(p, max_new=6)
+    eng2.run()
+    assert r2.logprobs == [] and r2.top_logprobs == []
+    assert np.isclose(r2.cum_logprob, r.cum_logprob, atol=1e-4)

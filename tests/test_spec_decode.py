@@ -205,6 +205,50 @@ def test_full_depth_draft_accepts_everything(name):
     assert s["spec_accepted_per_pass"] > 1.0
 
 
+def test_full_depth_draft_sampled_window_bitwise_plain():
+    """Regression for the fork-seed aliasing fix: the DRAFT fork must
+    copy the slot's key stream VERBATIM (branch_tags=None), never
+    re-derive it.  With a full-depth draft and sampled requests the
+    draft proposes with the target's own weights AND the slot's own key
+    at the same fold positions, so p_draft == p_target: every proposal
+    is accepted AND the accepted window is bitwise the plain sampled
+    stream (the bonus/rejection tokens after the window use their own
+    fold tags — distribution-faithful, not bitwise — so only the first
+    window is comparable).  If fork ever tagged the draft's key (the
+    best-of-n divergence path), the draft would sample with a
+    re-derived key, the full-depth window would still be accepted
+    (p_t == p_d -> ratio 1), and the emitted tokens would silently
+    drift from the slot's own sample stream — exactly what this pins.
+    (test_fork_branch_tags_* in test_prefix_cache.py pins the
+    divergence direction.)"""
+    from repro.runtime.sampling import SamplingParams
+    cfg, params = _setup("mamba-130m")
+    prompts = _prompts(cfg, 3, seed=13)
+    sps = [SamplingParams(temperature=0.9, seed=31),
+           SamplingParams(temperature=1.2, top_k=8, seed=32),
+           SamplingParams(temperature=0.7, top_p=0.9, seed=33)]
+    k = 3
+    plain = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=64))
+    ref = [plain.submit(p, params=sp, max_new=8)
+           for p, sp in zip(prompts, sps)]
+    plain.run()
+    eng = Engine(cfg, params,
+                 EngineConfig(n_slots=2, max_seq=64,
+                              draft=DraftConfig(k=k, layers=0)))
+    got = [eng.submit(p, params=sp, max_new=8)
+           for p, sp in zip(prompts, sps)]
+    eng.run()
+    for r_ref, r_got in zip(ref, got):
+        # token 0 = prefill sample, tokens 1..k = the first fully
+        # accepted draft window — all sampled with the slot's own
+        # verbatim-copied key at plain decode's fold positions
+        assert r_got.tokens[:k + 1] == r_ref.tokens[:k + 1], \
+            (f"sampled req {r_got.req_id}'s accepted draft window "
+             f"diverged from plain decode — draft fork is not "
+             f"key-faithful")
+    assert eng.stats.summary()["spec_acceptance_rate"] == 1.0
+
+
 def test_spec_decode_with_eos_eviction_and_backfill():
     """EOS inside an accepted draft window must trim the overshoot,
     evict, and admit queued work — and every stream still equals the
@@ -283,10 +327,9 @@ def test_full_reject_rollback_is_bitwise_clean(name, state_dtype,
     assert s["spec_accepted_per_pass"] == 1.0
     # oracle: ONE plain decode step from the snapshot, through the
     # engine's own decode dispatch — "never having speculated"
-    tok, cache1 = eng._decode(eng.params, cache0, jnp.asarray(toks0),
-                              jnp.asarray(act0),
-                              eng.pool.params.device(),
-                              jnp.asarray(eng._base_steps(live)))
+    tok, _, _, _, cache1 = eng._decode(
+        eng.params, cache0, jnp.asarray(toks0), jnp.asarray(act0),
+        eng.pool.params.device(), jnp.asarray(eng._base_steps(live)))
     gather = lambda c: registry.gather_slots(cfg, c, jnp.asarray(live))
     assert _tree_equal(gather(cache1), gather(eng.pool.cache)), \
         "rollback left speculative residue in the pooled state"
