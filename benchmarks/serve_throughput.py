@@ -22,6 +22,12 @@ exactly (greedy decode, same math); the timing ratio is the kernel's
 win.  On CPU the "fused" kernel runs under the Pallas interpreter, so
 its timing is meaningless there and is reported but never asserted.
 
+Also reported: megakernel vs per-layer fused decode — the same trace
+served with the cross-layer megakernel (the whole layer stack as ONE
+Pallas launch per token) vs the per-layer fused path.  Token streams
+must match exactly, and the statically counted launches-per-token
+(core.dispatch_count) must drop; both are deterministic and gated.
+
 Also reported: speculative decoding (EngineConfig.draft) — the same
 trace served with fork/draft/verify/rollback passes.  Greedy token
 streams must match plain decode exactly, and the deterministic
@@ -262,6 +268,84 @@ def _fused_decode_comparison(arch, slots, requests, max_new, reps,
     return {"fused_tps": out["fused"]["tokens_per_s"],
             "unfused_tps": out["unfused"]["tokens_per_s"],
             "fused_speedup": ratio}
+
+
+# ---------------------------------------------------------------------------
+# Megakernel vs per-layer fused decode (cross-layer grid, one launch/token)
+# ---------------------------------------------------------------------------
+
+def megakernel_decode_comparison(arch, slots, requests, max_new, reps,
+                                 seed=0, quiet=False):
+    """Serve one saturated trace twice — step_impl="fused" (one Pallas
+    launch per layer per token) vs "megakernel" (the whole layer stack
+    as ONE launch, layer axis in the kernel grid) — and report median
+    decode tokens/sec plus the statically counted Pallas dispatches per
+    token for each.  Two deterministic pass/fail signals: greedy token
+    streams identical, and the megakernel's launches-per-token equal to
+    its homogeneous-run count (1 for pure stacks; jamba's attention /
+    MoE sublayers are excepted by design) vs one-per-layer on the fused
+    path.  Timing is informational on CPU (Pallas interpreter)."""
+    import functools
+
+    from repro.core.dispatch_count import count_pallas_launches
+
+    cfg, params = _setup_model(arch)
+    rng = np.random.default_rng(seed)
+    max_seq = max(LEN_CHOICES) + max_new + 8
+    prompts = [rng.integers(0, cfg.vocab,
+                            size=(int(rng.choice(LEN_CHOICES)),))
+               .astype(np.int32) for _ in range(requests)]
+
+    launches = {}
+    for impl in ("fused", "megakernel"):
+        c = dataclasses.replace(cfg, step_impl=impl)
+        cache = sharding.tree_values(registry.init_cache(c, slots, max_seq))
+        launches[impl] = count_pallas_launches(
+            functools.partial(registry.decode_step, c, params), cache,
+            {"tokens": jnp.zeros((slots, 1), jnp.int32)})
+    assert launches["megakernel"] < max(launches["fused"], 2), \
+        (launches, "megakernel did not reduce per-token dispatches")
+
+    n_runs = (1 if jax.default_backend() == "cpu"
+              else max(1, reps) + 1)             # first rep doubles as warmup
+    out = {}
+    for impl in ("fused", "megakernel"):
+        walls, tokens = [], None
+        for _ in range(n_runs):
+            eng = Engine(cfg, params,
+                         EngineConfig(n_slots=slots, max_seq=max_seq,
+                                      step_impl=impl))
+            reqs = [eng.submit(p, max_new=max_new) for p in prompts]
+            eng.run()
+            walls.append(eng.stats.summary()["wall_s"])
+            tokens = [r.tokens for r in reqs]
+        timed = walls[1:] or walls
+        wall = sorted(timed)[len(timed) // 2]
+        out[impl] = {"wall_s": wall,
+                     "tokens_per_s": requests * max_new / wall,
+                     "launches_per_token": launches[impl],
+                     "tokens": tokens}
+    assert out["megakernel"]["tokens"] == out["fused"]["tokens"], \
+        "megakernel decode diverged from per-layer fused token stream"
+    ratio = out["fused"]["wall_s"] / out["megakernel"]["wall_s"]
+    if not quiet:
+        on_cpu = jax.default_backend() == "cpu"
+        note = (" (CPU: both impls run under the Pallas interpreter; "
+                "timing not meaningful)" if on_cpu else "")
+        print(f"[serve_throughput] megakernel-vs-fused decode, arch={arch} "
+              f"slots={slots} requests={requests} max_new={max_new}")
+        for impl in ("fused", "megakernel"):
+            o = out[impl]
+            print(f"  {impl:10s}: {o['tokens_per_s']:7.1f} tok/s "
+                  f"({o['wall_s']:6.2f}s) | "
+                  f"{o['launches_per_token']} Pallas launches/token")
+        print(f"  megakernel speedup : {ratio:0.2f}x{note} — token "
+              "streams identical")
+    return {"megakernel_tps": out["megakernel"]["tokens_per_s"],
+            "fused_tps": out["fused"]["tokens_per_s"],
+            "megakernel_speedup": ratio,
+            "launches_fused": launches["fused"],
+            "launches_megakernel": launches["megakernel"]}
 
 
 # ---------------------------------------------------------------------------
@@ -620,6 +704,16 @@ def run():
     common.emit("serve_decode_fused_step",
                 1e6 / max(fused["fused_tps"], 1e-9),
                 f"speedup_vs_unfused={fused['fused_speedup']:.2f}x{tag}")
+    # launches/token is a static jaxpr property (backend-independent);
+    # tok/s rides the same cpu_interpret caveat as the fused row
+    mega = megakernel_decode_comparison(arch="mamba-130m", slots=4,
+                                        requests=8, max_new=16, reps=3,
+                                        quiet=True)
+    common.emit("serve_decode_megakernel_launches",
+                float(mega["launches_megakernel"]),
+                f"fused_launches={mega['launches_fused']};"
+                f"speedup_vs_fused={mega['megakernel_speedup']:.2f}x"
+                f"{tag};tokens_identical=1")
     sweep = state_dtype_comparison(arch="mamba-130m", slots=4, requests=8,
                                    max_new=16, quiet=True)
     gain = (sweep["f32"]["state_bytes_per_slot"]
@@ -683,6 +777,10 @@ def main():
     _fused_decode_comparison(args.arch, args.slots,
                              requests=min(args.requests, 8),
                              max_new=16, reps=args.reps, seed=args.seed)
+    megakernel_decode_comparison(args.arch, args.slots,
+                                 requests=min(args.requests, 8),
+                                 max_new=16, reps=args.reps,
+                                 seed=args.seed)
     state_dtype_comparison(args.arch, args.slots,
                            requests=min(args.requests, 8),
                            max_new=16, seed=args.seed,

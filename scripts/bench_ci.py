@@ -1,5 +1,5 @@
 #!/usr/bin/env python
-"""Deterministic benchmark gate for CI (writes/checks BENCH_PR6.json).
+"""Deterministic benchmark gate for CI (writes/checks BENCH_PR7.json).
 
 Runs the serving benchmarks in *count mode*: every gated number is a
 deterministic function of the code — useful-token counts, token-stream
@@ -7,18 +7,22 @@ agreement between state dtypes, per-slot cache bytes / slots-per-GB,
 speculative-decode acceptance counters, heterogeneous-sampling jit
 retrace counts (one compile must serve mixed greedy/temperature/top-k/
 top-p traffic), prefix-cache hit/prefill-savings counts on a shared-
-system-prompt trace (plus best-of-n branch divergence), and
-fused-kernel-vs-oracle errors.  Wall-clock numbers are recorded under
-"informational" but never asserted: CPU timing noise exceeds 20% and a
-timing gate on shared CI runners is a flake generator.
+system-prompt trace (plus best-of-n branch divergence), megakernel
+Pallas-launches-per-token (statically counted from the traced jaxpr —
+the cross-layer megakernel must dispatch strictly fewer kernels per
+token than the per-layer fused path, with identical token streams),
+and fused-kernel-vs-oracle errors.  Wall-clock numbers are recorded
+under "informational" but never asserted: CPU timing noise exceeds 20%
+and a timing gate on shared CI runners is a flake generator.
 
-  python scripts/bench_ci.py            # compare against BENCH_PR6.json
+  python scripts/bench_ci.py            # compare against BENCH_PR7.json
   python scripts/bench_ci.py --update   # regenerate the baseline
 
-The committed BENCH_PR6.json is the baseline; CI runs compare mode and
+The committed BENCH_PR7.json is the baseline; CI runs compare mode and
 fails on drift, so a PR that changes a count (or breaks the >= 2x int8
-capacity claim / the > 1.0 accepted-tokens-per-target-pass claim) must
-also regenerate — and thereby review — the file.
+capacity claim / the > 1.0 accepted-tokens-per-target-pass claim / the
+one-launch-per-token megakernel claim) must also regenerate — and
+thereby review — the file.
 """
 from __future__ import annotations
 
@@ -32,7 +36,7 @@ REPO = pathlib.Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(REPO / "src"))
 sys.path.insert(0, str(REPO))
 
-BASELINE = REPO / "BENCH_PR6.json"
+BASELINE = REPO / "BENCH_PR7.json"
 
 #: |fresh - baseline| tolerance for token-agreement fractions: exact on
 #: one platform, but argmax near-ties may flip across jax/BLAS builds
@@ -129,6 +133,9 @@ def collect():
     fused = st._fused_decode_comparison(
         arch="mamba-130m", slots=4, requests=6, max_new=8, reps=1,
         quiet=True)
+    mega = st.megakernel_decode_comparison(
+        arch="mamba-130m", slots=4, requests=6, max_new=8, reps=1,
+        quiet=True)
     spec = st.spec_decode_comparison(
         arch="mamba-130m", slots=4, requests=6, max_new=12, k=3,
         quiet=True)
@@ -198,11 +205,20 @@ def collect():
             "bestofn_n": prefix["bestofn"]["n"],
             "bestofn_distinct": prefix["bestofn"]["distinct"],
         },
+        # cross-layer megakernel: launches/token is a static property of
+        # the traced jaxpr (identical on CPU interpret and TPU); token
+        # identity vs the fused engine is asserted inside the comparison
+        "megakernel": {
+            "tokens_identical": True,
+            "launches_per_token": mega["launches_megakernel"],
+            "fused_launches_per_token": mega["launches_fused"],
+        },
         "kernel_vs_oracle": kernel,
         "informational": {
             "backend": jax.default_backend(),
             "fused_tps": round(fused["fused_tps"], 1),
             "unfused_tps": round(fused["unfused_tps"], 1),
+            "megakernel_tps": round(mega["megakernel_tps"], 1),
             "spec_full_tps": round(spec["spec_full"]["tokens_per_s"], 1),
             "plain_tps": round(spec["plain"]["tokens_per_s"], 1),
             "collect_wall_s": round(time.perf_counter() - t0, 1),
@@ -293,6 +309,26 @@ def compare(fresh: dict, base: dict) -> list[str]:
             chk(pc_f[key] == pc_b[key],
                 f"prefix_cache.{key}: fresh {pc_f[key]} != "
                 f"baseline {pc_b[key]}")
+    # megakernel: the one-launch-per-token claim, hard-gated — launch
+    # counts are static jaxpr properties, so exact equality with the
+    # baseline and the strict reduction vs the fused path both hold on
+    # any backend
+    mk_f, mk_b = fresh.get("megakernel"), base.get("megakernel")
+    if mk_f is None or mk_b is None:
+        fails.append("megakernel section present only in "
+                     f"{'baseline' if mk_f is None else 'fresh'}")
+    else:
+        chk(mk_f["tokens_identical"],
+            "megakernel decode diverged from per-layer fused tokens")
+        chk(mk_f["launches_per_token"]
+            < mk_f["fused_launches_per_token"],
+            f"megakernel did not reduce Pallas dispatches "
+            f"({mk_f['launches_per_token']} vs fused "
+            f"{mk_f['fused_launches_per_token']} per token)")
+        for key in ("launches_per_token", "fused_launches_per_token"):
+            chk(mk_f[key] == mk_b[key],
+                f"megakernel.{key}: fresh {mk_f[key]} != "
+                f"baseline {mk_b[key]}")
     # union, not base-only: a dtype added to the sweep without a
     # baseline regeneration must fail, not silently pass unchecked
     all_dtypes = sorted(set(base["state_dtypes"])
@@ -366,6 +402,10 @@ def main():
           f"retraces (must be 0), greedy bitwise "
           f"{ht['greedy_rows_bitwise']}, seeded repro "
           f"{ht['seeded_repro']}")
+    mk = fresh["megakernel"]
+    print(f"[bench_ci] megakernel: {mk['launches_per_token']} Pallas "
+          f"launches/token vs {mk['fused_launches_per_token']} fused "
+          f"(must be strictly fewer), token streams identical")
     pc = fresh["prefix_cache"]
     print(f"[bench_ci] prefix cache: {pc['hits']} hits "
           f"(rate {pc['hit_rate']}), prefill tokens "

@@ -70,11 +70,14 @@ class ModelConfig:
     #: paper-baseline XLA implementation, "pallas" the TPU kernel.
     scan_impl: str = "chunked_seq"   # seq | assoc | chunked | chunked_seq | pallas
     scan_chunk: int = 64
-    #: per-token decode step: "fused" = single Pallas launch for the whole
-    #: state-update/contraction/gate chain (serving hot path), "xla" = the
-    #: ref.py oracle, "auto" = fused where it compiles natively (TPU for
-    #: Pallas-backed families; everywhere for pure-XLA fused steps)
-    step_impl: str = "auto"          # auto | fused | xla
+    #: per-token decode step: "megakernel" = ONE Pallas launch per token
+    #: for the whole layer stack (layer axis in the kernel grid; jamba
+    #: attention sublayers excepted), "fused" = single launch per layer
+    #: for the state-update/contraction/gate chain, "xla" = the ref.py
+    #: oracle, "auto" = megakernel on TPU, else fused where it compiles
+    #: natively (everywhere for pure-XLA fused steps); the
+    #: REPRO_STEP_IMPL env var overrides "auto" only
+    step_impl: str = "auto"          # auto | megakernel | fused | xla
     attn_impl: str = "chunked"       # chunked | ref | pallas
     attn_chunk: int = 512
     exp_impl: str = "exact"          # exact | ours | fast   (MARCA §5)

@@ -1,0 +1,69 @@
+"""Static Pallas-launch accounting by jaxpr walk.
+
+The megakernel decode path exists to cut per-token kernel dispatches
+from L (one fused launch per layer) to 1 (the whole stack in one grid).
+That claim is cheap to PIN statically: trace the step function once,
+walk the jaxpr, and count ``pallas_call`` equations weighted by the trip
+counts of the scans enclosing them.  No profiler, no runtime hooks — the
+count is a property of the traced program, identical on CPU interpret
+mode and real TPU lowering.
+
+Counting rules:
+
+  pallas_call          -> + multiplier
+  scan                 -> walk body with multiplier * length
+  while                -> walk cond+body with multiplier * 1 (a lower
+                          bound; the serving code has no pallas_call
+                          under data-dependent while loops)
+  cond                 -> + multiplier * max over branches (an upper
+                          bound: one branch runs per step)
+  anything else        -> walk any jaxpr found in its params (pjit,
+                          remat, custom_jvp/vjp, vmap-of-closed-call...)
+
+Used by tests/test_megakernel.py and benchmarks/serve_throughput.py to
+assert "1 launch per decoded token" for the megakernel path vs L for the
+per-layer fused path.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _subjaxprs(params):
+    """Yield every (closed) jaxpr buried in an eqn's params."""
+    for v in params.values():
+        vs = v if isinstance(v, (tuple, list)) else (v,)
+        for u in vs:
+            if hasattr(u, "jaxpr"):          # ClosedJaxpr
+                yield u.jaxpr
+            elif hasattr(u, "eqns"):         # raw Jaxpr
+                yield u
+
+
+def _walk(jaxpr, mult: int) -> int:
+    total = 0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "pallas_call":
+            total += mult
+        elif name == "scan":
+            body = eqn.params["jaxpr"].jaxpr
+            total += _walk(body, mult * int(eqn.params["length"]))
+        elif name == "cond":
+            total += mult * max(
+                (_walk(b.jaxpr, 1) for b in eqn.params["branches"]),
+                default=0)
+        else:
+            for sub in _subjaxprs(eqn.params):
+                total += _walk(sub, mult)
+    return total
+
+
+def count_pallas_launches(fn, *args, **kwargs) -> int:
+    """Number of Pallas kernel dispatches one call of ``fn(*args)``
+    issues (statically, from the traced jaxpr — scans multiply, cond
+    takes the max branch).  Args may be concrete arrays or
+    ShapeDtypeStructs (tracing never executes the function)."""
+    closed = jax.make_jaxpr(
+        lambda *a, **k: fn(*a, **k))(*args, **kwargs)
+    return _walk(closed.jaxpr, 1)

@@ -20,6 +20,8 @@ single-pass version for TPU and is validated against ``selective_scan_seq``.
 """
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 
@@ -147,20 +149,42 @@ def get_scan(name: str):
 def resolve_step_impl(name: str, needs_pallas: bool = True) -> str:
     """Resolve cfg.step_impl to a concrete impl.
 
-    "auto" picks the fused kernel where it compiles natively (TPU) and
-    the XLA reference elsewhere — unless the family's fused step is pure
-    XLA (``needs_pallas=False``, e.g. xLSTM), in which case fused wins
-    on every backend.  Callers can force either with "fused" / "xla"
-    (parity tests and TPU-less benchmarking of the fused path do)."""
+    "auto" picks the cross-layer megakernel where Pallas compiles
+    natively (TPU) and otherwise the per-layer fused kernel / XLA
+    reference split that served before: fused where it is pure XLA
+    (``needs_pallas=False``, e.g. xLSTM's chained paths), the XLA
+    reference elsewhere.  The ``REPRO_STEP_IMPL`` env var overrides
+    "auto" only — explicit config always wins — so CI can sweep the
+    whole suite over an impl without touching configs.  Callers can
+    force any impl with "megakernel" / "fused" / "xla" (parity tests
+    and TPU-less benchmarking do)."""
     if name == "auto":
+        name = os.environ.get("REPRO_STEP_IMPL", "auto")
+    if name == "auto":
+        if jax.default_backend() == "tpu":
+            return "megakernel"
         if not needs_pallas:
             return "fused"
-        return "fused" if jax.default_backend() == "tpu" else "xla"
+        return "xla"
+    if name == "megakernel":
+        return "megakernel"
     if name in ("fused", "pallas"):
         return "fused"
     if name == "xla":
         return "xla"
     raise KeyError(f"unknown step impl {name!r}")
+
+
+def resolve_cell_impl(name: str, needs_pallas: bool = True) -> str:
+    """Resolve cfg.step_impl for a PER-LAYER call site.
+
+    The megakernel is a whole-stack launch; block-level entry points
+    (single-layer steps, verify windows, drafts running a layer slice
+    chained) can't use it directly — under a megakernel config they run
+    the per-layer fused cell, which computes bit-identical values (the
+    megakernel body is the same cell skeleton at the same shapes)."""
+    r = resolve_step_impl(name, needs_pallas)
+    return "fused" if r == "megakernel" else r
 
 
 def decode_step(h, x_t, dt_t, A, B_t, C_t, D=None, z_t=None,

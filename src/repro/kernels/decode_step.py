@@ -27,7 +27,9 @@ the fused path; on real TPU callers pass interpret=False.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,26 +39,154 @@ from repro.core import approx, state_quant
 from repro.kernels import pallas_compat
 
 
-def _chain(h, x_ref, dt_ref, at_ref, b_ref, c_ref, d_ref, z_ref, *,
-           exp_impl: str, silu_impl: str, has_d: bool, has_z: bool):
-    """The fused per-token chain on one (slot, D-block) grid cell.
-    h (N, BD) f32 already dequantized; returns (y (BD,), h_new (N, BD))."""
+# ---------------------------------------------------------------------------
+# Cell skeleton — MARCA's reconfigurable PE, expressed as code.
+#
+# Every recurrent decode cell this repo serves is the same three-phase
+# shape (the paper's Fig. 1 regime):
+#
+#   state_update  — an element-wise FMA on the carried state
+#                   (S6: exp(dt*A) (*) h + (dt*x) (*) B;
+#                    mLSTM: f (*) C + i (*) k (x) v;  sLSTM: f (*) c + i*z)
+#   contract      — a tiny reduction (or identity) producing the output
+#                   (S6: sum_n C_n h_n;  mLSTM: q-query + normalizer;
+#                    sLSTM: scalar memory, no reduction)
+#   gate          — an element-wise epilogue
+#                   (S6: D-skip + SiLU(z);  sLSTM: sigmoid output gate)
+#
+# The decomposed nonlinearities (fast biased exp, piecewise SiLU) plug
+# into the phases via core.approx, so "reconfiguring" a PE is picking a
+# phase function, exactly the paper's RCU modes.  Phase functions use
+# ``...`` broadcasting so ONE implementation serves both the per-layer
+# kernel's unbatched (N, BD) grid cell and the megakernel's batched
+# (b, N, D) block — the two paths cannot drift.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CellSkeleton:
+    """A recurrent decode cell as three pluggable phases.
+
+    ``state_update(state, ins) -> state_new``;
+    ``contract(state_new, ins) -> y``;
+    ``gate(y, state_new, ins) -> y`` (None = identity).  ``state`` is an
+    array or tuple of arrays; ``ins`` a dict of per-token inputs."""
+    name: str
+    state_update: Callable
+    contract: Callable
+    gate: Optional[Callable] = None
+
+    def __call__(self, state, ins):
+        state_new = self.state_update(state, ins)
+        y = self.contract(state_new, ins)
+        if self.gate is not None:
+            y = self.gate(y, state_new, ins)
+        return y, state_new
+
+
+@functools.lru_cache(maxsize=None)
+def s6_cell(exp_impl: str, silu_impl: str, has_d: bool,
+            has_z: bool) -> CellSkeleton:
+    """The mamba/jamba selective-SSM cell.  State (..., N, D) f32; ins:
+    x/dt (..., D), at (N, D) [A transposed], b/c (..., N), d (D,)|None,
+    z (..., D)|None — all f32."""
     exp = approx.get_exp(exp_impl)
     silu = approx.get_silu(silu_impl)
-    x = x_ref[0, :].astype(jnp.float32)            # (BD,)
-    dt = dt_ref[0, :].astype(jnp.float32)          # (BD,)
-    at = at_ref[...].astype(jnp.float32)           # (N, BD)
-    b_t = b_ref[0, :].astype(jnp.float32)          # (N,)
-    c_t = c_ref[0, :].astype(jnp.float32)          # (N,)
-    da = exp(dt[None, :] * at)                     # (N, BD)  EW + "shift"
-    dbx = (dt * x)[None, :] * b_t[:, None]         # (N, BD)  EW outer prod
-    h_new = da * h + dbx                           # (N, BD)  EW FMA
-    y = jnp.sum(h_new * c_t[:, None], axis=0)      # (BD,) tiny N-reduction
-    if has_d:
-        y = y + d_ref[0, :].astype(jnp.float32) * x
-    if has_z:
-        y = y * silu(z_ref[0, :].astype(jnp.float32))
-    return y, h_new
+
+    def state_update(h, ins):
+        da = exp(ins["dt"][..., None, :] * ins["at"])     # EW + "shift"
+        dbx = ((ins["dt"] * ins["x"])[..., None, :]
+               * ins["b"][..., :, None])                  # EW outer prod
+        return da * h + dbx                               # EW FMA
+
+    def contract(h_new, ins):
+        # tiny N-reduction: y_d = sum_n C_n h_nd
+        return jnp.sum(h_new * ins["c"][..., :, None], axis=-2)
+
+    def gate(y, _state, ins):
+        if has_d:
+            y = y + ins["d"] * ins["x"]
+        if has_z:
+            y = y * silu(ins["z"])
+        return y
+
+    return CellSkeleton("s6", state_update, contract,
+                        gate if (has_d or has_z) else None)
+
+
+@functools.lru_cache(maxsize=None)
+def mlstm_cell(dh: int) -> CellSkeleton:
+    """The xLSTM matrix-memory cell.  State (C (..., dh, dh),
+    n (..., dh), m (...,)); ins: q/k/v (..., dh), i/f (...,) — all f32.
+    The gate stabilizers pin exact exp/log-sigmoid (approximating the
+    max-subtracted exponents breaks the stabilization contract); the
+    MARCA approximations enter through the block front-end instead."""
+    def state_update(state, ins):
+        C, n, m = state
+        logf = jax.nn.log_sigmoid(ins["f"])
+        m_new = jnp.maximum(logf + m, ins["i"])
+        i_p = jnp.exp(ins["i"] - m_new)
+        f_p = jnp.exp(logf + m - m_new)
+        kv = ins["k"][..., :, None] * ins["v"][..., None, :]
+        C = f_p[..., None, None] * C + i_p[..., None, None] * kv
+        n = f_p[..., None] * n + i_p[..., None] * ins["k"]
+        return (C, n, m_new)
+
+    def contract(state, ins):
+        C, n, _ = state
+        qn = ins["q"] * (dh ** -0.5)
+        num = jnp.einsum("...de,...d->...e", C, qn)
+        den = jnp.abs(jnp.einsum("...d,...d->...", n, qn))
+        return num / jnp.maximum(den, 1.0)[..., None]
+
+    return CellSkeleton("mlstm", state_update, contract, None)
+
+
+@functools.lru_cache(maxsize=None)
+def slstm_cell() -> CellSkeleton:
+    """The xLSTM scalar-memory cell.  State (c, n, m) each (..., nh, dh);
+    ins: g (..., 4, nh, dh) combined pre-activations [z, i, f, o]."""
+    def state_update(state, ins):
+        c, n, m = state
+        g = ins["g"]
+        z_t = jnp.tanh(g[..., 0, :, :])
+        i_t = g[..., 1, :, :]
+        f_t = g[..., 2, :, :]
+        logf = jax.nn.log_sigmoid(f_t)
+        m_new = jnp.maximum(logf + m, i_t)
+        i_p = jnp.exp(i_t - m_new)
+        f_p = jnp.exp(logf + m - m_new)
+        c_new = f_p * c + i_p * z_t
+        n_new = f_p * n + i_p
+        return (c_new, n_new, m_new)
+
+    def contract(state, _ins):
+        # scalar memory: no reduction, the cell output IS the state
+        return state[0]
+
+    def gate(y, state, ins):
+        _, n_new, _ = state
+        o_t = jax.nn.sigmoid(ins["g"][..., 3, :, :])
+        return o_t * y / jnp.maximum(n_new, 1.0)
+
+    return CellSkeleton("slstm", state_update, contract, gate)
+
+
+def _chain(h, x_ref, dt_ref, at_ref, b_ref, c_ref, d_ref, z_ref, *,
+           exp_impl: str, silu_impl: str, has_d: bool, has_z: bool):
+    """The fused per-token chain on one (slot, D-block) grid cell:
+    block loads + f32 casts around the S6 cell skeleton.
+    h (N, BD) f32 already dequantized; returns (y (BD,), h_new (N, BD))."""
+    cell = s6_cell(exp_impl, silu_impl, has_d, has_z)
+    ins = {
+        "x": x_ref[0, :].astype(jnp.float32),          # (BD,)
+        "dt": dt_ref[0, :].astype(jnp.float32),        # (BD,)
+        "at": at_ref[...].astype(jnp.float32),         # (N, BD)
+        "b": b_ref[0, :].astype(jnp.float32),          # (N,)
+        "c": c_ref[0, :].astype(jnp.float32),          # (N,)
+        "d": d_ref[0, :].astype(jnp.float32) if has_d else None,
+        "z": z_ref[0, :].astype(jnp.float32) if has_z else None,
+    }
+    return cell(h, ins)
 
 
 def _step_kernel(h_ref, x_ref, dt_ref, at_ref, b_ref, c_ref, d_ref, z_ref,
@@ -220,6 +350,99 @@ def _step_padded_q(h, h_scale, x_t, dt_t, at, b_t, c_t, d_skip, z_t,
         interpret=interpret,
         name="marca_decode_step_q",
     )(*args)
+
+
+# ---------------------------------------------------------------------------
+# Cross-layer megakernel launcher
+# ---------------------------------------------------------------------------
+
+def stacked_layer_launch(body, x0, stacked, out_structs, *,
+                         interpret: bool | None = None,
+                         name: str = "marca_megakernel"):
+    """Run ``body`` once per layer inside a SINGLE Pallas launch.
+
+    The layer axis becomes the kernel grid ((L,), semantics "arbitrary" —
+    it is sequential: layer l reads the residual stream layer l-1 wrote).
+    The residual stream is a *revisited output block*: its BlockSpec index
+    map is constant, so Pallas keeps the same block resident across grid
+    steps and the kernel carries ``x`` through it — seeded from ``x0``
+    at l == 0.  Per-layer operands (weights + recurrent state) arrive as
+    pytrees with a stacked leading L axis; each grid step sees its own
+    (1, ...) slice with the leading axis dropped.
+
+    The issue sketches a (L, slots, d-block) grid; slots and d stay folded
+    into the block here because the in-body projections couple the full
+    channel dimension (and bitwise identity with the per-layer path needs
+    the matmuls at identical shapes).  On real TPU the intra-layer split
+    is the obvious follow-on once weights are resident per-core.
+
+    body(x, ins) -> (x_new, outs):  ``x`` (b, 1, d_model) residual stream;
+    ``ins`` one layer's slice of ``stacked``; ``outs`` a flat list/tuple of
+    arrays matching ``out_structs`` (ShapeDtypeStructs of the PER-LAYER
+    shapes — the launch returns them stacked to (L, ...)).
+
+    Returns (x_final, tuple(stacked_outs)).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    leaves, treedef = jax.tree.flatten(stacked)
+    n_layers = leaves[0].shape[0]
+    for lf in leaves:
+        assert lf.shape[0] == n_layers, (lf.shape, n_layers)
+    out_structs = tuple(out_structs)
+
+    x_nz = (0,) * x0.ndim
+
+    def _const_map(l):
+        return x_nz
+
+    in_specs = [pl.BlockSpec(x0.shape, _const_map)]
+    for lf in leaves:
+        rest = lf.shape[1:]
+        in_specs.append(pl.BlockSpec(
+            (1,) + rest,
+            lambda l, _nz=(0,) * len(rest): (l,) + _nz))
+
+    out_shapes = [jax.ShapeDtypeStruct(x0.shape, x0.dtype)]
+    out_specs = [pl.BlockSpec(x0.shape, _const_map)]
+    for s in out_structs:
+        out_shapes.append(
+            jax.ShapeDtypeStruct((n_layers,) + s.shape, s.dtype))
+        out_specs.append(pl.BlockSpec(
+            (1,) + s.shape,
+            lambda l, _nz=(0,) * len(s.shape): (l,) + _nz))
+
+    n_in = len(leaves)
+
+    def kernel(x0_ref, *refs):
+        in_refs = refs[:n_in]
+        x_ref = refs[n_in]
+        out_refs = refs[n_in + 1:]
+        l = pl.program_id(0)
+
+        @pl.when(l == 0)
+        def _seed():
+            x_ref[...] = x0_ref[...]
+
+        x = x_ref[...]
+        ins = treedef.unflatten([r[0] for r in in_refs])
+        x_new, outs = body(x, ins)
+        x_ref[...] = x_new.astype(x_ref.dtype)
+        for o_ref, o in zip(out_refs, outs):
+            o_ref[0] = o.astype(o_ref.dtype)
+
+    res = pl.pallas_call(
+        kernel,
+        out_shape=tuple(out_shapes),
+        grid=(n_layers,),
+        in_specs=in_specs,
+        out_specs=tuple(out_specs),
+        compiler_params=pallas_compat.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+        name=name,
+    )(x0, *leaves)
+    return res[0], tuple(res[1:])
 
 
 def selective_state_step_q(hq, h_scale, x_t, dt_t, A, B_t, C_t, D=None,

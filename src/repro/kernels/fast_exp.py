@@ -12,25 +12,22 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.kernels import pallas_compat
 
 from repro.core import approx
 
-_LANES = 128
-_DEFAULT_COLS = 1024
-_DEFAULT_ROWS = 256
+_LANES = pallas_compat.LANES
+_DEFAULT_COLS = pallas_compat.DEFAULT_COLS
+_DEFAULT_ROWS = pallas_compat.DEFAULT_ROWS
 
 
 def _fast_exp_kernel(x_ref, o_ref, *, b_shift: float, c: float):
+    # the bit-trick formula lives ONLY in core.approx; the kernel body is
+    # just the block load/store around it
     x = x_ref[...].astype(jnp.float32)
-    x = jnp.clip(x, -approx._EXP_CLAMP, approx._EXP_CLAMP)
-    i = (x * np.float32(approx._S23 / approx.LN2)
-         + np.float32((127.0 + b_shift) * approx._S23)).astype(jnp.int32)
-    y = jax.lax.bitcast_convert_type(i, jnp.float32) + np.float32(c)
-    o_ref[...] = y.astype(o_ref.dtype)
+    o_ref[...] = approx.fast_exp(x, b_shift, c).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("b_shift", "c", "block_rows",

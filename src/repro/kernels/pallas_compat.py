@@ -1,7 +1,12 @@
-"""Version shim for the Pallas TPU API.
+"""Version shim + shared tiling defaults for the Pallas TPU API.
 
 jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``;
 kernels import the name from here so both jax generations work.
+
+The tiling constants are the single source for the element-wise kernel
+wrappers (fast_exp, piecewise_silu): the VPU is 8x128 lanes, so blocks
+are LANES-wide with DEFAULT_COLS/DEFAULT_ROWS sizing the 2D tiles the
+shape-polymorphic wrappers pad to.
 """
 from __future__ import annotations
 
@@ -9,3 +14,10 @@ from jax.experimental.pallas import tpu as _pltpu
 
 CompilerParams = getattr(_pltpu, "CompilerParams", None) \
     or _pltpu.TPUCompilerParams
+
+#: VPU lane width — min last-dim tile for element-wise kernels
+LANES = 128
+
+#: default 2D tile the flatten->pad->tile wrappers reshape to
+DEFAULT_COLS = 1024
+DEFAULT_ROWS = 256

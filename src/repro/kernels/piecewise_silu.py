@@ -18,9 +18,9 @@ from repro.kernels import pallas_compat
 
 from repro.core import approx
 
-_LANES = 128
-_DEFAULT_COLS = 1024
-_DEFAULT_ROWS = 256
+_LANES = pallas_compat.LANES
+_DEFAULT_COLS = pallas_compat.DEFAULT_COLS
+_DEFAULT_ROWS = pallas_compat.DEFAULT_ROWS
 
 
 def _silu_kernel(x_ref, o_ref, *, variant: str):

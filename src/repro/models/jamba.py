@@ -249,7 +249,121 @@ def draft_cache_merge(cfg, full, sub, n):
     return {"layers": layers, "pos": sub["pos"]}
 
 
+def _megakernel_plan(cfg):
+    """Static decode plan for the megakernel path: the period split into
+    maximal runs of consecutive positions that are pure SSM (no
+    attention, no MoE) — each run is one Pallas launch — with the
+    excluded positions staying on their per-sublayer path.
+
+    Attention is excepted by design (the kv cache window is not a
+    per-layer recurrent state).  MoE is excluded because its routing
+    is cross-slot (capacity competition couples the batch) and its
+    expert gather does not fit a one-block kernel; a MoE-heavy config
+    therefore degrades to singleton runs between MoE positions."""
+    period = cfg.attn_every or 8
+    plan, cur = [], []
+    for pos in range(period):
+        is_attn, is_moe = _pos_kind(cfg, pos)
+        if is_attn or is_moe:
+            if cur:
+                plan.append(("mega", tuple(cur)))
+                cur = []
+            plan.append(("one", pos))
+        else:
+            cur.append(pos)
+    if cur:
+        plan.append(("mega", tuple(cur)))
+    return tuple(plan)
+
+
+def stacked_step(cfg, p, cache, batch):
+    """Single-token decode with each homogeneous SSM run as ONE Pallas
+    launch (see _megakernel_plan).  Same group lax.scan as decode_step;
+    within a group the runs' per-position params/caches are restacked
+    onto a leading run axis and handed to the megakernel, whose grid
+    step does norm1 -> mamba megastep -> residual -> norm2 -> MLP ->
+    residual for one position."""
+    from repro.kernels import decode_step as dsk
+    dtype = jnp.dtype(cfg.dtype)
+    dpos = cache["pos"]
+    h = blocks.embed_apply(cfg, p["embed"], batch["tokens"], dtype)
+    positions = dpos[:, None]
+    plan = _megakernel_plan(cfg)
+    quant = state_quant.is_quantized(cfg.state_dtype)
+    b = h.shape[0]
+    di, n, kc = cfg.d_inner, cfg.d_state, cfg.d_conv
+    storage = state_quant.storage_dtype(cfg.state_dtype)
+
+    def run_mega(x, group_params, group_cache, run):
+        stacked_in = {
+            "p": jax.tree.map(lambda *xs: jnp.stack(xs),
+                              *[group_params[f"pos{i}"] for i in run]),
+            "s": jax.tree.map(lambda *xs: jnp.stack(xs),
+                              *[group_cache[f"pos{i}"] for i in run]),
+        }
+
+        def body(x, ins):
+            lp = ins["p"]
+            xn = blocks.apply_norm(cfg, lp["norm1"], x)
+            y, ns = mamba.mamba_block_megastep(cfg, lp["mamba"], xn,
+                                               ins["s"])
+            x = x + y
+            xn = blocks.apply_norm(cfg, lp["norm2"], x)
+            x = x + blocks.mlp_apply(cfg, lp["mlp"], xn)
+            x = constrain(x, "act_batch", "act_seq", "act_embed")
+            outs = [ns["h"]]
+            if quant:
+                outs.append(ns["h_scale"])
+            outs.append(ns["conv"])
+            return x, outs
+
+        conv_dtype = group_cache[f"pos{run[0]}"]["conv"].dtype
+        out_structs = [jax.ShapeDtypeStruct((b, di, n), storage)]
+        if quant:
+            out_structs.append(jax.ShapeDtypeStruct(
+                (b, state_quant.n_groups(di)), jnp.float32))
+        out_structs.append(
+            jax.ShapeDtypeStruct((b, kc - 1, di), conv_dtype))
+        x, outs = dsk.stacked_layer_launch(
+            body, x, stacked_in, out_structs,
+            name="marca_megakernel_jamba")
+        if quant:
+            nh, nscale, nc = outs
+        else:
+            nh, nc = outs
+        new = {}
+        for j, i in enumerate(run):
+            mc = {"h": nh[j], "conv": nc[j]}
+            if quant:
+                mc["h_scale"] = nscale[j]
+            new[f"pos{i}"] = mc
+        return x, new
+
+    def body(x, inp):
+        group_params, group_cache = inp
+        new_cache = {}
+        for kind, seg in plan:
+            if kind == "mega":
+                x, new = run_mega(x, group_params, group_cache, seg)
+                new_cache.update(new)
+            else:
+                x, ns, _ = _sublayer_apply(
+                    cfg, group_params[f"pos{seg}"], seg, x, positions,
+                    state=group_cache[f"pos{seg}"], dpos=dpos)
+                new_cache[f"pos{seg}"] = ns
+        return x, new_cache
+
+    stacked = {key: v for key, v in p["groups"].items()}
+    h, new_layer_cache = jax.lax.scan(body, h, (stacked, cache["layers"]))
+    h = blocks.apply_norm(cfg, p["norm_f"], h)
+    logits = blocks.unembed_apply(cfg, p.get("unembed", {}), p["embed"], h)
+    return logits, {"layers": new_layer_cache, "pos": dpos + 1}
+
+
 def decode_step(cfg, p, cache, batch):
+    from repro.core.selective_scan import resolve_step_impl
+    if resolve_step_impl(cfg.step_impl) == "megakernel":
+        return stacked_step(cfg, p, cache, batch)
     dtype = jnp.dtype(cfg.dtype)
     period = cfg.attn_every or 8
     dpos = cache["pos"]
@@ -272,6 +386,58 @@ def decode_step(cfg, p, cache, batch):
     h = blocks.apply_norm(cfg, p["norm_f"], h)
     logits = blocks.unembed_apply(cfg, p.get("unembed", {}), p["embed"], h)
     return logits, {"layers": new_layer_cache, "pos": dpos + 1}
+
+
+def verify_window(cfg, p, cache, tokens):
+    """Spec-decode verify over a K-token window.  Pure-SSM positions go
+    through the batched ``sublayer_verify`` front-end (whole-window
+    projections + SSM micro-scan); attention sublayers — which need
+    K sequential kv-cache writes — and MoE sublayers — whose routing
+    couples the batch through expert capacity — stay on the chained
+    per-token sublayer so the produced bits match the chained
+    verify_scan exactly.  Returns (logits (b, K, V), caches) in the
+    chained layout (leading per-step axis)."""
+    dtype = jnp.dtype(cfg.dtype)
+    period = cfg.attn_every or 8
+    K = tokens.shape[1]
+    dpos = cache["pos"]
+    x = blocks.embed_apply(cfg, p["embed"], tokens, dtype)
+
+    def body(x, inp):
+        group_params, group_cache = inp
+        new_cache = {}
+        for pos in range(period):
+            is_attn, is_moe = _pos_kind(cfg, pos)
+            gp = group_params[f"pos{pos}"]
+            gc = group_cache[f"pos{pos}"]
+            if is_attn or is_moe:
+                xts, states = [], []
+                st = gc
+                for t in range(K):
+                    xt, st, _ = _sublayer_apply(
+                        cfg, gp, pos, x[:, t:t + 1],
+                        (dpos + t)[:, None], state=st, dpos=dpos + t)
+                    xts.append(xt)
+                    states.append(st)
+                x = jnp.concatenate(xts, axis=1)
+                new_cache[f"pos{pos}"] = jax.tree.map(
+                    lambda *ts: jnp.stack(ts), *states)
+            else:
+                x, states = sublayer_verify(cfg, gp, pos, x, gc)
+                new_cache[f"pos{pos}"] = jax.tree.map(
+                    lambda t: jnp.moveaxis(t, 1, 0), states)
+        return x, new_cache
+
+    stacked = {k: v for k, v in p["groups"].items()}
+    x, new_layers = jax.lax.scan(body, x, (stacked, cache["layers"]))
+    # scan stacks G leading over the per-step-leading leaves:
+    # (G, K, b, ...) -> the chained layout (K, G, b, ...)
+    new_layers = jax.tree.map(lambda t: t.swapaxes(0, 1), new_layers)
+    x = blocks.apply_norm(cfg, p["norm_f"], x)
+    logits = blocks.unembed_apply(cfg, p.get("unembed", {}), p["embed"], x)
+    pos = (dpos[None, :]
+           + jnp.arange(1, K + 1, dtype=jnp.int32)[:, None])
+    return logits, {"layers": new_layers, "pos": pos}
 
 
 def prefill(cfg, p, cache, batch):

@@ -124,7 +124,7 @@ def mamba_block_step(cfg, p, x_t, state):
     cfg.step_impl resolving to "fused" the state update, output
     contraction, D-skip, and SiLU gate are one Pallas launch over the
     pooled batch instead of the per-op XLA chain."""
-    from repro.core.selective_scan import resolve_step_impl
+    from repro.core.selective_scan import resolve_cell_impl
     silu = approx.get_silu(cfg.silu_impl)
     x_in, z = _project(cfg, p, x_t)             # (b,1,di)
     x_c, new_conv = ops.causal_conv1d(
@@ -133,7 +133,7 @@ def mamba_block_step(cfg, p, x_t, state):
     x_a = silu(x_c)
     dt, B, C = _ssm_inputs(cfg, p, x_a)
     A = -jnp.exp(p["A_log"])
-    impl = resolve_step_impl(cfg.step_impl)
+    impl = resolve_cell_impl(cfg.step_impl)
     if state_quant.is_quantized(cfg.state_dtype):
         # storage-dtype round-trip stays inside the step: dequant on
         # read, requant on write (in-kernel for the fused impl) — the
@@ -151,6 +151,48 @@ def mamba_block_step(cfg, p, x_t, state):
         exp_impl=cfg.exp_impl, silu_impl=cfg.silu_impl)
     out = blocks.dense(p["out_proj"], y[:, None, :], x_t.dtype)
     return out, {**write_state_h(cfg, h), "conv": new_conv}
+
+
+def mamba_block_megastep(cfg, p, x_t, state):
+    """``mamba_block_step`` restated for INSIDE a megakernel body.
+
+    Same signature and bitwise-identical values, but no nested
+    pallas_call: the SSM step is the s6 cell skeleton applied inline
+    (the per-layer kernel's ``_chain`` is the same cell at (N, BD)
+    block shapes; element-wise phases + the exactly-associative N-sum
+    make blocking/batching irrelevant to the produced bits), and the
+    conv tail always uses the reference math (a Pallas kernel cannot
+    nest another launch).  With cfg.conv_impl="xla" — the default —
+    that is the identical computation; under conv_impl="pallas" the
+    megakernel silently uses the ref conv instead (documented caveat).
+    """
+    from repro.kernels import decode_step as dsk
+    from repro.kernels import ref as kref
+    silu = approx.get_silu(cfg.silu_impl)
+    x_in, z = _project(cfg, p, x_t)             # (b,1,di)
+    x_c, new_conv = kref.causal_conv1d(
+        x_in, p["conv_w"], p["conv_b"], x_prev=state["conv"])
+    x_a = silu(x_c)
+    dt, B, C = _ssm_inputs(cfg, p, x_a)
+    cell = dsk.s6_cell(cfg.exp_impl, cfg.silu_impl, True, True)
+    at = -jnp.exp(p["A_log"]).astype(jnp.float32).T      # (n, di)
+    ins = {
+        "x": x_a[:, 0].astype(jnp.float32),
+        "dt": dt[:, 0].astype(jnp.float32),
+        "at": at,
+        "b": B[:, 0].astype(jnp.float32),
+        "c": C[:, 0].astype(jnp.float32),
+        "d": p["D"].astype(jnp.float32),
+        "z": z[:, 0].astype(jnp.float32),
+    }
+    h = read_state_h(cfg, state).swapaxes(1, 2)          # (b, n, di)
+    y, h_new = cell(h, ins)
+    y = y.astype(x_a.dtype)
+    h_new = h_new.swapaxes(1, 2)                         # (b, di, n)
+    out = blocks.dense(p["out_proj"], y[:, None, :], x_t.dtype)
+    new_state = write_state_h(cfg, h_new, prev_state=state)
+    new_state["conv"] = new_conv
+    return out, new_state
 
 
 def _conv_tail_states(conv_state, x_in):
@@ -183,7 +225,7 @@ def mamba_block_verify(cfg, p, x, state):
     token t (spec-decode rollback selects one index).
     """
     from repro.core.selective_scan import (decode_scan, decode_scan_q,
-                                           resolve_step_impl)
+                                           resolve_cell_impl)
     silu = approx.get_silu(cfg.silu_impl)
     x_in, z = _project(cfg, p, x)                # (b,K,di)
     x_c, _ = ops.causal_conv1d(
@@ -193,7 +235,7 @@ def mamba_block_verify(cfg, p, x, state):
     x_a = silu(x_c)
     dt, B, C = _ssm_inputs(cfg, p, x_a)
     A = -jnp.exp(p["A_log"])
-    impl = resolve_step_impl(cfg.step_impl)
+    impl = resolve_cell_impl(cfg.step_impl)
     if state_quant.is_quantized(cfg.state_dtype):
         y, hq_all, scale_all = decode_scan_q(
             state["h"], state["h_scale"], x_a, dt, A, B, C,

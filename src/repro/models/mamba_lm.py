@@ -137,7 +137,57 @@ def draft_cache_merge(cfg, full, sub, n):
     return out
 
 
+def stacked_step(cfg, p, cache, batch):
+    """Single-token decode as ONE Pallas launch for the whole stack.
+
+    The layer loop that ``decode_step`` runs as a lax.scan of per-layer
+    launches becomes the kernel grid: stacked layer params and the
+    pooled recurrent cache ride in with a leading L axis, the residual
+    stream is carried in a revisited output block, and each grid step
+    runs norm -> mamba megastep -> residual for its layer.  Embed and
+    the final norm/unembed stay in XLA — exactly one pallas_call per
+    decoded token."""
+    from repro.kernels import decode_step as dsk
+    dtype = jnp.dtype(cfg.dtype)
+    x0 = blocks.embed_apply(cfg, p["embed"], batch["tokens"], dtype)
+    x0 = constrain(x0, "act_batch", None, "act_embed")
+    quant = _quantized(cfg)
+
+    stacked_in = {"p": p["layers"], "h": cache["h"], "conv": cache["conv"]}
+    if quant:
+        stacked_in["h_scale"] = cache["h_scale"]
+
+    def body(x, ins):
+        state = {"h": ins["h"], "conv": ins["conv"]}
+        if quant:
+            state["h_scale"] = ins["h_scale"]
+        xn = blocks.apply_norm(cfg, ins["p"]["norm"], x)
+        y, ns = mamba.mamba_block_megastep(cfg, ins["p"]["mixer"], xn,
+                                           state)
+        x = constrain(x + y, "act_batch", "act_seq", "act_embed")
+        return x, _pack_state(cfg, ns)
+
+    b = cache["h"].shape[1]
+    di, n, k = cfg.d_inner, cfg.d_state, cfg.d_conv
+    storage = state_quant.storage_dtype(cfg.state_dtype)
+    out_structs = [jax.ShapeDtypeStruct((b, di, n), storage)]
+    if quant:
+        out_structs.append(jax.ShapeDtypeStruct(
+            (b, state_quant.n_groups(di)), jnp.float32))
+    out_structs.append(
+        jax.ShapeDtypeStruct((b, k - 1, di), cache["conv"].dtype))
+
+    h, stacked = dsk.stacked_layer_launch(
+        body, x0, stacked_in, out_structs, name="marca_megakernel_mamba")
+    h = blocks.apply_norm(cfg, p["norm_f"], h)
+    logits = blocks.unembed_apply(cfg, p.get("unembed", {}), p["embed"], h)
+    return logits, _cache_from_stacked(cfg, stacked, cache["pos"] + 1)
+
+
 def decode_step(cfg, p, cache, batch):
+    from repro.core.selective_scan import resolve_step_impl
+    if resolve_step_impl(cfg.step_impl) == "megakernel":
+        return stacked_step(cfg, p, cache, batch)
     dtype = jnp.dtype(cfg.dtype)
     h = blocks.embed_apply(cfg, p["embed"], batch["tokens"], dtype)
     h = constrain(h, "act_batch", None, "act_embed")
@@ -159,6 +209,49 @@ def decode_step(cfg, p, cache, batch):
     h = blocks.apply_norm(cfg, p["norm_f"], h)
     logits = blocks.unembed_apply(cfg, p.get("unembed", {}), p["embed"], h)
     return logits, _cache_from_stacked(cfg, stacked, cache["pos"] + 1)
+
+
+def verify_window(cfg, p, cache, tokens):
+    """Spec-decode verify over a K-token window through the batched
+    block front-ends: ONE embed + per-layer ``mamba_block_verify``
+    (projections/conv/dt over the whole window, SSM recurrence as the
+    K-step micro-scan) instead of K chained ``decode_step`` calls.
+    Token-stream equivalence to the chained path rests on XLA's
+    row-wise GEMM determinism: a (b, K, d) matmul computes each row
+    exactly as the (b, 1, d) one does.
+
+    tokens (b, K) int32.  Returns (logits (b, K, V), caches) in the
+    chained verify_scan layout: cache pytree with a leading per-step
+    axis (caches[t] = cache after consuming tokens[:, t])."""
+    dtype = jnp.dtype(cfg.dtype)
+    K = tokens.shape[1]
+    x = blocks.embed_apply(cfg, p["embed"], tokens, dtype)
+    x = constrain(x, "act_batch", "act_seq", "act_embed")
+    quant = _quantized(cfg)
+
+    def body(x, lp_state):
+        if quant:
+            lp, hs, ss, cs = lp_state
+            state = {"h": hs, "h_scale": ss, "conv": cs}
+        else:
+            lp, hs, cs = lp_state
+            state = {"h": hs, "conv": cs}
+        xn = blocks.apply_norm(cfg, lp["norm"], x)
+        y, states = mamba.mamba_block_verify(cfg, lp["mixer"], xn, state)
+        x = constrain(x + y, "act_batch", "act_seq", "act_embed")
+        return x, _pack_state(cfg, states)
+
+    xs = ((p["layers"], cache["h"], cache["h_scale"], cache["conv"])
+          if quant else (p["layers"], cache["h"], cache["conv"]))
+    x, stacked = jax.lax.scan(body, x, xs)
+    x = blocks.apply_norm(cfg, p["norm_f"], x)
+    logits = blocks.unembed_apply(cfg, p.get("unembed", {}), p["embed"], x)
+    # scan stacks L leading and block_verify stacks steps on axis 1 of
+    # (b, K, ...): (L, b, K, ...) -> the chained layout (K, L, b, ...)
+    stacked = jax.tree.map(lambda t: jnp.moveaxis(t, 2, 0), stacked)
+    pos = (cache["pos"][None, :]
+           + jnp.arange(1, K + 1, dtype=jnp.int32)[:, None])
+    return logits, _cache_from_stacked(cfg, stacked, pos)
 
 
 def prefill(cfg, p, cache, batch):

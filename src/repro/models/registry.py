@@ -114,23 +114,60 @@ def decode_step(cfg, params, cache, batch):
     return family(cfg).decode_step(cfg, params, cache, batch)
 
 
+def stacked_step(cfg, params, cache, batch):
+    """Cross-layer megakernel decode: the whole layer stack in one (or,
+    for heterogeneous stacks, per homogeneous run) Pallas launch, with
+    per-layer weights/state carried on a stacked leading axis.  This is
+    what ``decode_step`` dispatches to when cfg.step_impl resolves to
+    "megakernel"; exposed for direct use by launch-count tests and
+    benchmarks."""
+    fam = family(cfg)
+    if not hasattr(fam, "stacked_step"):
+        raise NotImplementedError(
+            f"family {cfg.family!r} has no megakernel decode path")
+    return fam.stacked_step(cfg, params, cache, batch)
+
+
 # ---------------------------------------------------------------------------
 # Speculative decode support: K-step verify micro-scan, per-slot step
 # selection (rollback), and self-speculative draft views.
 # ---------------------------------------------------------------------------
 
+def _freeze_steps(cfg, cache0, stacked, active):
+    """Per-slot freeze over a verify cache stack (leading per-step axis):
+    inactive slots read ``cache0`` at EVERY step — exactly what the
+    chained scan's per-step mask_slots accumulates to, since a frozen
+    slot never advances past its initial state."""
+    def mix(ax, old, new):
+        shape = [1] * new.ndim
+        shape[ax + 1] = -1
+        return jnp.where(active.reshape(shape), new.astype(old.dtype),
+                         old[None])
+    return jax.tree.map(mix, cache_slot_axes(cfg), cache0, stacked)
+
+
 def verify_scan(cfg, params, cache, tokens, active=None):
-    """Chain ``decode_step`` over K candidate tokens — the spec-decode
-    verify micro-scan.  Each scan step is the SAME per-token dispatch
-    the serving burst runs (one fused kernel launch per layer under
-    step_impl="fused", identical shapes), which is what makes greedy
-    speculative decode token-identical to plain greedy decode.
+    """Run K candidate tokens through the model — the spec-decode verify
+    pass.  Families with a batched ``verify_window`` (mamba / jamba /
+    xlstm) run the whole window through their block_verify front-ends:
+    projections and convs batched over K tokens, only the recurrences
+    sequential.  Token identity with the chained path holds because a
+    (b, K, d) matmul computes each row exactly as the (b, 1, d) one
+    (and the recurrence micro-scans chain the same per-token cells at
+    the same shapes).  Families without one (transformer) chain
+    ``decode_step`` per token.
 
     tokens (b, K) int32; ``active`` (b,) bool freezes inactive slots
-    every step (as the engine's burst does).  Returns
-    (logits (b, K, V), caches) where ``caches`` is the cache pytree
-    with a leading per-step axis: caches[t] = cache after consuming
-    tokens[:, t]."""
+    (as the engine's burst does).  Returns (logits (b, K, V), caches)
+    where ``caches`` is the cache pytree with a leading per-step axis:
+    caches[t] = cache after consuming tokens[:, t]."""
+    window = getattr(family(cfg), "verify_window", None)
+    if window is not None:
+        logits, caches = window(cfg, params, cache, tokens)
+        if active is not None:
+            caches = _freeze_steps(cfg, cache, caches, active)
+        return logits, caches
+
     def step(c, tok_t):
         logits, c2 = decode_step(cfg, params, c, {"tokens": tok_t})
         if active is not None:

@@ -63,20 +63,14 @@ def mlstm_block_init(cfg, key):
 
 def _mlstm_cell(C, n, m, q_t, k_t, v_t, i_t, f_t, dh):
     """One stabilized mLSTM recurrence step — the single source of truth
-    shared by the chunked scan body and the fused decode step, so the
-    two paths cannot drift.  All inputs f32; (b,nh,...) layouts."""
-    logf = jax.nn.log_sigmoid(f_t)                   # (b,nh)
-    m_new = jnp.maximum(logf + m, i_t)
-    i_p = jnp.exp(i_t - m_new)
-    f_p = jnp.exp(logf + m - m_new)
-    kv = k_t[..., :, None] * v_t[..., None, :]       # (b,nh,dh,dh)
-    C = f_p[..., None, None] * C + i_p[..., None, None] * kv
-    n = f_p[..., None] * n + i_p[..., None] * k_t
-    qn = q_t * (dh ** -0.5)
-    num = jnp.einsum("bhde,bhd->bhe", C, qn)
-    den = jnp.abs(jnp.einsum("bhd,bhd->bh", n, qn))
-    h_t = num / jnp.maximum(den, 1.0)[..., None]
-    return (C, n, m_new), h_t
+    shared by the chunked scan body, the fused decode step, AND the
+    megakernel body: the math lives in the kernels' cell skeleton
+    (kernels.decode_step.mlstm_cell), this wrapper just adapts the
+    historical signature.  All inputs f32; (b,nh,...) layouts."""
+    from repro.kernels import decode_step as dsk
+    h_t, state_new = dsk.mlstm_cell(dh)(
+        (C, n, m), {"q": q_t, "k": k_t, "v": v_t, "i": i_t, "f": f_t})
+    return state_new, h_t
 
 
 def _mlstm_scan(q, k, v, ig, fg, state, chunk, remat=True):
@@ -128,10 +122,12 @@ def _mlstm_scan(q, k, v, ig, fg, state, chunk, remat=True):
     return h, new_state
 
 
-def _mlstm_inputs(cfg, p, x, conv_state):
+def _mlstm_inputs(cfg, p, x, conv_state, conv_impl=None):
     """Block front-end shared by apply (L=seq) and the decode step (L=1):
     norm -> up-proj -> short conv -> SiLU -> q/k/v projections + gate
-    pre-activations.  One source of truth so the two paths cannot drift."""
+    pre-activations.  One source of truth so the two paths cannot drift.
+    ``conv_impl`` overrides cfg.conv_impl (the megakernel body forces
+    "xla" — a Pallas kernel cannot nest another launch)."""
     d, nh = cfg.d_model, cfg.n_heads
     di = 2 * d
     dh = di // nh
@@ -142,8 +138,9 @@ def _mlstm_inputs(cfg, p, x, conv_state):
     u, g = jnp.split(ug, 2, axis=-1)                     # (b,L,di) each
     u = constrain(u, "act_batch", "act_seq", "act_ffn")
     from repro.kernels import ops
-    c, new_conv = ops.causal_conv1d(u, p["conv_w"], None,
-                                    x_prev=conv_state, impl=cfg.conv_impl)
+    c, new_conv = ops.causal_conv1d(
+        u, p["conv_w"], None, x_prev=conv_state,
+        impl=conv_impl or cfg.conv_impl)
     ch = silu(c).reshape(b, L, nh, dh)
     q = jnp.einsum("blhd,hde->blhe", ch, p["wq"].astype(x.dtype))
     k = jnp.einsum("blhd,hde->blhe", ch, p["wk"].astype(x.dtype))
@@ -197,18 +194,19 @@ def mlstm_block_apply(cfg, p, x, state=None):
     return out, new_state
 
 
-def mlstm_block_step(cfg, p, x_t, state):
+def mlstm_block_step(cfg, p, x_t, state, conv_impl=None):
     """Single-token decode: shared front-end + one _mlstm_cell step, no
     chunked-scan machinery (padding, reshapes, remat) — the per-token
     path the serving engine's decode burst dispatches.  Matches
-    mlstm_block_apply at L=1."""
+    mlstm_block_apply at L=1.  ``conv_impl`` is the megakernel body's
+    override (see _mlstm_inputs)."""
     d, nh = cfg.d_model, cfg.n_heads
     di = 2 * d
     dh = di // nh
     b = x_t.shape[0]
     silu = approx.get_silu(cfg.silu_impl)
-    q, k, v, ig, fg, g, new_conv = _mlstm_inputs(cfg, p, x_t,
-                                                 state["conv"])
+    q, k, v, ig, fg, g, new_conv = _mlstm_inputs(
+        cfg, p, x_t, state["conv"], conv_impl=conv_impl)
     qf, kf, vf = (t[:, 0].astype(jnp.float32) for t in (q, k, v))
     (C_new, n_new, m_new), h_t = _mlstm_cell(
         read_state_C(cfg, state), state["n"], state["m"], qf, kf, vf,
@@ -340,19 +338,12 @@ def slstm_block_init(cfg, key):
 
 def _slstm_cell(c, n, m, g):
     """One stabilized sLSTM gate step from combined pre-activations
-    g (b,4,nh,dh) — shared by the chunked scan body and the fused decode
-    step.  Returns (c_new, n_new, h_new, m_new)."""
-    z_t = jnp.tanh(g[:, 0])
-    i_t = g[:, 1]
-    f_t = g[:, 2]
-    o_t = jax.nn.sigmoid(g[:, 3])
-    logf = jax.nn.log_sigmoid(f_t)
-    m_new = jnp.maximum(logf + m, i_t)
-    i_p = jnp.exp(i_t - m_new)
-    f_p = jnp.exp(logf + m - m_new)
-    c_new = f_p * c + i_p * z_t
-    n_new = f_p * n + i_p
-    h_new = o_t * c_new / jnp.maximum(n_new, 1.0)
+    g (b,4,nh,dh) — shared by the chunked scan body, the fused decode
+    step, and the megakernel body (the math lives in
+    kernels.decode_step.slstm_cell).  Returns (c_new, n_new, h_new,
+    m_new)."""
+    from repro.kernels import decode_step as dsk
+    h_new, (c_new, n_new, m_new) = dsk.slstm_cell()((c, n, m), {"g": g})
     return c_new, n_new, h_new, m_new
 
 
@@ -564,13 +555,83 @@ def draft_cache_merge(cfg, full, sub, n):
             "pos": sub["pos"]}
 
 
+def _kind_runs(cfg):
+    """Maximal runs of consecutive same-kind layers — each run is one
+    megakernel launch (the kernel grid needs a homogeneous cell and
+    uniform state shapes across its layer axis)."""
+    runs, cur, cur_kind = [], [], None
+    for i in range(cfg.n_layers):
+        kind = "slstm" if _is_slstm(cfg, i) else "mlstm"
+        if kind != cur_kind and cur:
+            runs.append((cur_kind, tuple(cur)))
+            cur = []
+        cur_kind = kind
+        cur.append(i)
+    if cur:
+        runs.append((cur_kind, tuple(cur)))
+    return tuple(runs)
+
+
+def stacked_step(cfg, p, cache, batch):
+    """Single-token decode with each homogeneous layer run as ONE Pallas
+    launch — xLSTM's first fused decode path, obtained for free from the
+    cell skeleton: the per-layer step functions are already pure XLA, so
+    they trace directly as the megakernel body (mLSTM forcing the "xla"
+    conv inside the kernel).  A pure-mLSTM stack is exactly one launch
+    per token; an interleaved stack gets one launch per run."""
+    from repro.kernels import decode_step as dsk
+    dtype = jnp.dtype(cfg.dtype)
+    h = blocks.embed_apply(cfg, p["embed"], batch["tokens"], dtype)
+    quant = state_quant.is_quantized(cfg.state_dtype)
+    new_layers = [None] * cfg.n_layers
+    for kind, run in _kind_runs(cfg):
+        stacked_in = {
+            "p": jax.tree.map(lambda *xs: jnp.stack(xs),
+                              *[p["layers"][i][kind] for i in run]),
+            "s": jax.tree.map(lambda *xs: jnp.stack(xs),
+                              *[cache["layers"][i][kind] for i in run]),
+        }
+        if kind == "mlstm":
+            keys = (["C"] + (["C_scale"] if quant else [])
+                    + ["n", "m", "conv"])
+
+            def body(x, ins, _keys=keys):
+                y, ns = mlstm_block_step(cfg, ins["p"], x, ins["s"],
+                                         conv_impl="xla")
+                return x + y, [ns[k] for k in _keys]
+        else:
+            keys = ["c", "n", "h", "m"]
+
+            def body(x, ins, _keys=keys):
+                y, ns = slstm_block_step(cfg, ins["p"], x, ins["s"])
+                return x + y, [ns[k] for k in _keys]
+
+        s0 = cache["layers"][run[0]][kind]
+        out_structs = [jax.ShapeDtypeStruct(s0[k].shape, s0[k].dtype)
+                       for k in keys]
+        h, outs = dsk.stacked_layer_launch(
+            body, h, stacked_in, out_structs,
+            name=f"marca_megakernel_{kind}")
+        for j, i in enumerate(run):
+            new_layers[i] = {kind: {k: outs[jj][j]
+                                    for jj, k in enumerate(keys)}}
+    h = blocks.apply_norm(cfg, p["norm_f"], h)
+    logits = blocks.unembed_apply(cfg, p.get("unembed", {}), p["embed"], h)
+    return logits, {"layers": new_layers, "pos": cache["pos"] + 1}
+
+
 def decode_step(cfg, p, cache, batch):
-    """Per-token path.  cfg.step_impl routes the recurrences: "fused"
-    (the "auto" default — xLSTM's fused step is pure XLA, so it wins on
-    every backend) takes the dedicated single-step functions; "xla"
-    keeps the L=1 chunked-apply path as the parity reference."""
+    """Per-token path.  cfg.step_impl routes the recurrences:
+    "megakernel" runs each homogeneous layer run as one Pallas launch
+    (stacked_step); "fused" (the pre-megakernel "auto" default — xLSTM's
+    fused step is pure XLA, so it wins on every backend) takes the
+    dedicated single-step functions per layer; "xla" keeps the L=1
+    chunked-apply path as the parity reference."""
     from repro.core.selective_scan import resolve_step_impl
-    fused = resolve_step_impl(cfg.step_impl, needs_pallas=False) == "fused"
+    impl = resolve_step_impl(cfg.step_impl, needs_pallas=False)
+    if impl == "megakernel":
+        return stacked_step(cfg, p, cache, batch)
+    fused = impl == "fused"
     dtype = jnp.dtype(cfg.dtype)
     h = blocks.embed_apply(cfg, p["embed"], batch["tokens"], dtype)
     new_layers = []
@@ -591,6 +652,37 @@ def decode_step(cfg, p, cache, batch):
     h = blocks.apply_norm(cfg, p["norm_f"], h)
     logits = blocks.unembed_apply(cfg, p.get("unembed", {}), p["embed"], h)
     return logits, {"layers": new_layers, "pos": cache["pos"] + 1}
+
+
+def verify_window(cfg, p, cache, tokens):
+    """Spec-decode verify over a K-token window through the batched
+    block front-ends (mlstm_block_verify / slstm_block_verify): the
+    projections, conv, and gate pre-activations run over the whole
+    window at once, only the recurrences scan.  Returns the chained
+    verify_scan layout: (logits (b, K, V), caches with a leading
+    per-step axis)."""
+    dtype = jnp.dtype(cfg.dtype)
+    K = tokens.shape[1]
+    x = blocks.embed_apply(cfg, p["embed"], tokens, dtype)
+    new_layers = []
+    for lp, lc in zip(p["layers"], cache["layers"]):
+        if "slstm" in lp:
+            y, states = slstm_block_verify(cfg, lp["slstm"], x,
+                                           lc["slstm"])
+            kind = "slstm"
+        else:
+            y, states = mlstm_block_verify(cfg, lp["mlstm"], x,
+                                           lc["mlstm"])
+            kind = "mlstm"
+        # block_verify stacks steps on axis 1 -> chained layout (K, b, ..)
+        new_layers.append({kind: jax.tree.map(
+            lambda t: jnp.moveaxis(t, 1, 0), states)})
+        x = x + y
+    x = blocks.apply_norm(cfg, p["norm_f"], x)
+    logits = blocks.unembed_apply(cfg, p.get("unembed", {}), p["embed"], x)
+    pos = (cache["pos"][None, :]
+           + jnp.arange(1, K + 1, dtype=jnp.int32)[:, None])
+    return logits, {"layers": new_layers, "pos": pos}
 
 
 def prefill(cfg, p, cache, batch):

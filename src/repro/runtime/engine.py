@@ -205,9 +205,13 @@ class EngineConfig:
     # cancellation latency.
     sched_quantum: int = 8
     # override for the model's per-token step routing (cfg.step_impl):
-    # "fused" = one kernel launch per layer per token for the whole SSM
-    # state-update/contraction/gate chain, "xla" = unfused reference ops,
-    # None = keep the model config's setting ("auto" resolves per backend).
+    # "megakernel" = ONE Pallas launch per token for the whole layer
+    # stack (layer axis in the kernel grid, stacked weights/state;
+    # jamba's attention sublayers stay on their own path), "fused" = one
+    # kernel launch per layer per token for the SSM state-update/
+    # contraction/gate chain, "xla" = unfused reference ops, None = keep
+    # the model config's setting ("auto" resolves per backend:
+    # megakernel on TPU).
     step_impl: Optional[str] = None
     # override for the pooled recurrent-state storage dtype
     # (cfg.state_dtype): "f32" | "bf16" | "int8" | "fp8".  int8/fp8

@@ -73,7 +73,9 @@ class DraftConfig:
        requires a multiple of its group period.
     step_impl: override for the draft's per-token step routing (e.g.
        "xla" for an unfused-cheap draft while the target runs fused);
-       None inherits the target's.
+       None inherits the target's — including "megakernel", where the
+       draft's burst is its own single stacked launch over the
+       first-n-layers slice of the same stacked params.
     adaptive: clamp each slot's speculative window to its realized
        acceptance (ceil(accepted/passes) + 1, floored at 1) after
        ``adapt_warmup`` full-depth passes — a low-acceptance slot stops

@@ -104,7 +104,7 @@ def test_fused_step_equals_one_scan_step():
                                rtol=1e-5, atol=1e-5)
 
 
-def test_ops_dispatch_and_resolution():
+def test_ops_dispatch_and_resolution(monkeypatch):
     h, x, dt, A, B, C, D, z = _step_inputs(2, 16, 4)
     y0, _ = ops.selective_state_step(h, x, dt, A, B, C, D=D, z_t=z,
                                      impl="xla")
@@ -112,13 +112,27 @@ def test_ops_dispatch_and_resolution():
                                      impl="fused")
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
                                rtol=1e-5, atol=1e-5)
+    monkeypatch.delenv("REPRO_STEP_IMPL", raising=False)
     assert css.resolve_step_impl("fused") == "fused"
     assert css.resolve_step_impl("pallas") == "fused"
     assert css.resolve_step_impl("xla") == "xla"
-    assert css.resolve_step_impl("auto", needs_pallas=False) == "fused"
-    # Pallas-backed auto resolves per backend (CPU in this suite -> xla)
+    assert css.resolve_step_impl("megakernel") == "megakernel"
+    on_tpu = jax.default_backend() == "tpu"
+    # auto resolves per backend: the cross-layer megakernel where Pallas
+    # lowers natively (TPU), else the family's cheapest correct path
+    assert css.resolve_step_impl("auto", needs_pallas=False) == (
+        "megakernel" if on_tpu else "fused")
     assert css.resolve_step_impl("auto") == (
-        "fused" if jax.default_backend() == "tpu" else "xla")
+        "megakernel" if on_tpu else "xla")
+    # REPRO_STEP_IMPL steers "auto" only — explicit configs always win
+    monkeypatch.setenv("REPRO_STEP_IMPL", "megakernel")
+    assert css.resolve_step_impl("auto") == "megakernel"
+    assert css.resolve_step_impl("fused") == "fused"
+    monkeypatch.delenv("REPRO_STEP_IMPL")
+    # per-layer cell call sites (block verify, drafts) never see
+    # "megakernel": the cell resolver folds it back to fused
+    assert css.resolve_cell_impl("megakernel") == "fused"
+    assert css.resolve_cell_impl("xla") == "xla"
     with pytest.raises(KeyError):
         css.resolve_step_impl("nope")
 
