@@ -48,6 +48,17 @@ bitwise the cold prefill) and the cache must strictly reduce the
 prefill tokens actually computed (suffix-only prefill); a best-of-n
 rider on the same fork primitive checks branch divergence + ranking.
 
+Also reported: tensor-parallel sharded serving (EngineConfig.mesh) —
+the same greedy trace served single-device and on a tp-way "model"
+mesh.  Token streams must match exactly; the compiled pooled decode
+step must consume and produce the cache at identical shardings (no
+per-step resharding) with pinned per-step collective counts
+(launch/hlo_cost over the compiled HLO — the collective analogue of
+core/dispatch_count); and per-DEVICE slot bytes must shrink vs the
+single-device pool (the TP capacity claim).  Requires
+jax.device_count() >= tp, so scripts/bench_ci.py collects this section
+in a subprocess with 8 forced host devices.
+
 Flake policy: pass/fail decisions use deterministic token counts only;
 wall-clock (CPU timing noise exceeds 20%) uses median-of-k and is
 asserted only off-CPU, with a generous margin.
@@ -683,6 +694,128 @@ def prefix_cache_comparison(arch, slots, requests, max_new, block=8,
               f"ranked cum_logprobs "
               f"{[round(c, 2) for c in out['bestofn']['cum_logprobs']]}")
     return out
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel sharded serving (EngineConfig.mesh): identity + counts
+# ---------------------------------------------------------------------------
+
+def sharded_serving_comparison(arch, slots, requests, max_new, tp=2,
+                               seed=0, quiet=False):
+    """Serve one saturated greedy trace twice — single-device vs a
+    tp-way "model" mesh (launch/mesh.make_serving_mesh) — and gate the
+    sharded-serving claims, all deterministic:
+
+      * token identity — the sharded engine's greedy streams are
+        exactly the single-device engine's;
+      * no per-step resharding — the compiled pooled decode step's
+        cache output shardings equal its input shardings, so chained
+        burst steps never move state between devices;
+      * pinned collectives — per-decode-step collective counts from
+        the compiled HLO (launch/hlo_cost), exact-gated like the
+        megakernel's launches-per-token;
+      * per-device capacity — global slot bytes unchanged, per-DEVICE
+        slot bytes strictly smaller, so device_slots_per_gb grows.
+
+    Requires ``jax.device_count() >= tp`` (CI and bench_ci run this in
+    a subprocess under XLA_FLAGS=--xla_force_host_platform_device_count=8).
+    Wall-clock is never asserted (CPU; GSPMD emulation says nothing
+    about real-interconnect behavior)."""
+    from repro.launch import hlo_cost
+    from repro.launch.mesh import make_serving_mesh
+
+    if jax.device_count() < tp:
+        raise RuntimeError(
+            f"sharded_serving_comparison needs {tp} devices, have "
+            f"{jax.device_count()}; run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    cfg, params = _setup_model(arch)
+    rng = np.random.default_rng(seed)
+    max_seq = max(LEN_CHOICES) + max_new + 8
+    prompts = [rng.integers(0, cfg.vocab,
+                            size=(int(rng.choice(LEN_CHOICES)),))
+               .astype(np.int32) for _ in range(requests)]
+
+    out, tokens, engines = {}, {}, {}
+    for label, mesh in (("single", None), ("sharded",
+                                           make_serving_mesh(tp))):
+        eng = Engine(cfg, params,
+                     EngineConfig(n_slots=slots, max_seq=max_seq,
+                                  mesh=mesh))
+        reqs = [eng.submit(p, max_new=max_new) for p in prompts]
+        eng.run()
+        s = eng.stats.summary()
+        engines[label] = eng
+        tokens[label] = [list(map(int, r.tokens)) for r in reqs]
+        out[label] = {
+            "useful_tokens": int(s["useful_tokens"]),
+            "tokens_per_s": float(s["tokens_per_s"]),
+            "state_bytes_per_slot": int(eng.pool.state_bytes_per_slot()),
+            "device_state_bytes_per_slot":
+                int(eng.pool.device_state_bytes_per_slot()),
+            "device_slots_per_gb": float(eng.pool.device_slots_per_gb()),
+        }
+    assert tokens["sharded"] == tokens["single"], \
+        "sharded serving diverged from single-device token streams"
+    assert (out["sharded"]["state_bytes_per_slot"]
+            == out["single"]["state_bytes_per_slot"])
+    assert (out["sharded"]["device_state_bytes_per_slot"]
+            < out["single"]["device_state_bytes_per_slot"]), \
+        "sharding did not reduce per-device slot bytes"
+
+    # compiled-decode inspection: in/out cache shardings + collectives
+    eng = engines["sharded"]
+    comp = eng._decode.lower(
+        eng.params, eng.pool.cache, jnp.asarray(eng._next_tok),
+        jnp.asarray(eng.pool.active_mask()), eng.pool.params.device(),
+        jnp.zeros((eng.pool.n_total,), jnp.int32)).compile()
+    cache_in = jax.tree.leaves(comp.input_shardings[0][1])
+    cache_out = jax.tree.leaves(comp.output_shardings[4])
+    leaves = jax.tree.leaves(eng.pool.cache)
+    # equivalence, not ==: GSPMD may drop trailing replicated axes from
+    # a spec (P(None, 'model', None) vs P(None, 'model')) — identical
+    # placement, so no transfer happens between chained steps
+    no_reshard = (len(cache_in) == len(cache_out) == len(leaves)
+                  and all(a.is_equivalent_to(b, x.ndim)
+                          for a, b, x in zip(cache_in, cache_out,
+                                             leaves)))
+    assert no_reshard, "decode step reshards the pool cache"
+    n_sharded = sum(int(not s.is_fully_replicated) for s in cache_in)
+    assert n_sharded >= 1, "no cache leaf is sharded on the serving mesh"
+    cost = hlo_cost.analyze(comp.as_text())
+    res = {
+        "tokens_identical": True,
+        "tp": tp,
+        "no_per_step_resharding": True,
+        "cache_leaves": len(cache_in),
+        "sharded_cache_leaves": n_sharded,
+        "decode_collectives": {k: int(v)
+                               for k, v in sorted(cost.coll_count.items())},
+        "decode_collective_bytes": float(cost.collective_bytes),
+        "useful_tokens": out["single"]["useful_tokens"],
+        "state_bytes_per_slot": out["single"]["state_bytes_per_slot"],
+        "device_bytes_single":
+            out["single"]["device_state_bytes_per_slot"],
+        "device_bytes_sharded":
+            out["sharded"]["device_state_bytes_per_slot"],
+        "device_slots_per_gb_sharded": round(
+            out["sharded"]["device_slots_per_gb"], 1),
+        "single_tps": out["single"]["tokens_per_s"],
+        "sharded_tps": out["sharded"]["tokens_per_s"],
+    }
+    if not quiet:
+        print(f"[serve_throughput] sharded serving, arch={arch} tp={tp} "
+              f"slots={slots} requests={requests} max_new={max_new}")
+        print(f"  single  : {res['single_tps']:7.1f} tok/s | "
+              f"{res['device_bytes_single']:8d} B/slot/device")
+        print(f"  sharded : {res['sharded_tps']:7.1f} tok/s | "
+              f"{res['device_bytes_sharded']:8d} B/slot/device "
+              f"({res['sharded_cache_leaves']}/{res['cache_leaves']} "
+              "cache leaves sharded)")
+        print(f"  decode-step collectives: {res['decode_collectives']} "
+              f"({res['decode_collective_bytes']:.0f} B); cache in/out "
+              "shardings identical — token streams identical")
+    return res
 
 
 def run():

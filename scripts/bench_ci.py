@@ -1,5 +1,5 @@
 #!/usr/bin/env python
-"""Deterministic benchmark gate for CI (writes/checks BENCH_PR7.json).
+"""Deterministic benchmark gate for CI (writes/checks BENCH_PR8.json).
 
 Runs the serving benchmarks in *count mode*: every gated number is a
 deterministic function of the code — useful-token counts, token-stream
@@ -11,24 +11,31 @@ system-prompt trace (plus best-of-n branch divergence), megakernel
 Pallas-launches-per-token (statically counted from the traced jaxpr —
 the cross-layer megakernel must dispatch strictly fewer kernels per
 token than the per-layer fused path, with identical token streams),
+tensor-parallel sharded-serving counts (token identity vs the
+single-device engine, no-per-step-resharding of the pooled cache,
+per-decode-step collective counts from the compiled HLO, per-device
+slot bytes — collected in a subprocess with 8 forced host devices),
 and fused-kernel-vs-oracle errors.  Wall-clock numbers are recorded
 under "informational" but never asserted: CPU timing noise exceeds 20%
 and a timing gate on shared CI runners is a flake generator.
 
-  python scripts/bench_ci.py            # compare against BENCH_PR7.json
+  python scripts/bench_ci.py            # compare against BENCH_PR8.json
   python scripts/bench_ci.py --update   # regenerate the baseline
 
-The committed BENCH_PR7.json is the baseline; CI runs compare mode and
+The committed BENCH_PR8.json is the baseline; CI runs compare mode and
 fails on drift, so a PR that changes a count (or breaks the >= 2x int8
 capacity claim / the > 1.0 accepted-tokens-per-target-pass claim / the
-one-launch-per-token megakernel claim) must also regenerate — and
-thereby review — the file.
+one-launch-per-token megakernel claim / the sharded-serving identity
+and collective pins) must also regenerate — and thereby review — the
+file.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
+import subprocess
 import sys
 import time
 
@@ -36,7 +43,7 @@ REPO = pathlib.Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(REPO / "src"))
 sys.path.insert(0, str(REPO))
 
-BASELINE = REPO / "BENCH_PR7.json"
+BASELINE = REPO / "BENCH_PR8.json"
 
 #: |fresh - baseline| tolerance for token-agreement fractions: exact on
 #: one platform, but argmax near-ties may flip across jax/BLAS builds
@@ -120,6 +127,38 @@ def _kernel_vs_oracle():
     return out
 
 
+def _collect_sharded():
+    """The sharded-serving section needs multiple devices; this process
+    is deliberately single-device (like the test suite's main pytest
+    process), so collect it the way tests/_multidevice.py runs cases:
+    a subprocess with 8 forced host devices.  The comparison's own
+    asserts (token identity, no-resharding, capacity) fire in the
+    subprocess; a non-zero exit surfaces them here."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join([str(REPO / "src"), str(REPO)])
+    body = (
+        "import json\n"
+        "from benchmarks import serve_throughput as st\n"
+        "out = st.sharded_serving_comparison(arch='mamba-130m', slots=4,"
+        " requests=6, max_new=8, tp=2, quiet=True)\n"
+        "print('BENCH_JSON ' + json.dumps(out))\n")
+    r = subprocess.run([sys.executable, "-c", body], capture_output=True,
+                       text=True, timeout=1800, env=env)
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"sharded-serving collection failed:\nSTDOUT:\n{r.stdout}\n"
+            f"STDERR:\n{r.stderr}")
+    line = [ln for ln in r.stdout.splitlines()
+            if ln.startswith("BENCH_JSON ")][-1]
+    out = json.loads(line[len("BENCH_JSON "):])
+    # wall-clock fields stay out of the gated record (subprocess timing
+    # on shared runners is the noisiest number we produce)
+    return {k: v for k, v in out.items()
+            if k not in ("single_tps", "sharded_tps")}, out
+
+
 def collect():
     """Run the count-mode benchmarks and assemble the gate record."""
     import jax
@@ -143,6 +182,7 @@ def collect():
         arch="mamba-130m", slots=4, requests=8, max_new=16, quiet=True)
     prefix = st.prefix_cache_comparison(
         arch="mamba-130m", slots=4, requests=8, max_new=12, quiet=True)
+    sharded, sharded_full = _collect_sharded()
     kernel = _kernel_vs_oracle()
 
     dtypes = {}
@@ -213,6 +253,11 @@ def collect():
             "launches_per_token": mega["launches_megakernel"],
             "fused_launches_per_token": mega["launches_fused"],
         },
+        # tensor-parallel sharded serving: the PR 8 gate — token
+        # identity, no-per-step-resharding and per-device capacity are
+        # asserted inside the (subprocess) comparison; the collective
+        # counts are pinned exactly, like megakernel launches/token
+        "sharded_serving": sharded,
         "kernel_vs_oracle": kernel,
         "informational": {
             "backend": jax.default_backend(),
@@ -221,6 +266,8 @@ def collect():
             "megakernel_tps": round(mega["megakernel_tps"], 1),
             "spec_full_tps": round(spec["spec_full"]["tokens_per_s"], 1),
             "plain_tps": round(spec["plain"]["tokens_per_s"], 1),
+            "sharded_tps": round(sharded_full["sharded_tps"], 1),
+            "sharded_single_tps": round(sharded_full["single_tps"], 1),
             "collect_wall_s": round(time.perf_counter() - t0, 1),
         },
     }
@@ -329,6 +376,33 @@ def compare(fresh: dict, base: dict) -> list[str]:
             chk(mk_f[key] == mk_b[key],
                 f"megakernel.{key}: fresh {mk_f[key]} != "
                 f"baseline {mk_b[key]}")
+    # tensor-parallel sharded serving: hard invariants (token identity,
+    # no per-step resharding, per-device bytes strictly below the
+    # single-device pool) plus exact equality with the baseline for the
+    # collective counts/bytes of the compiled decode step and the
+    # capacity accounting — all static properties of the partitioned
+    # program, deterministic on any host
+    sh_f, sh_b = fresh.get("sharded_serving"), base.get("sharded_serving")
+    if sh_f is None or sh_b is None:
+        fails.append("sharded_serving section present only in "
+                     f"{'baseline' if sh_f is None else 'fresh'}")
+    else:
+        chk(sh_f["tokens_identical"],
+            "sharded greedy streams diverged from single-device streams")
+        chk(sh_f["no_per_step_resharding"],
+            "compiled decode step resharded the cache between steps")
+        chk(sh_f["device_bytes_sharded"] < sh_f["device_bytes_single"],
+            f"sharded pool did not shrink per-device slot bytes "
+            f"({sh_f['device_bytes_sharded']} vs "
+            f"{sh_f['device_bytes_single']} single-device)")
+        for key in ("tp", "useful_tokens", "cache_leaves",
+                    "sharded_cache_leaves", "state_bytes_per_slot",
+                    "device_bytes_single", "device_bytes_sharded",
+                    "decode_collective_bytes", "decode_collectives",
+                    "device_slots_per_gb_sharded"):
+            chk(sh_f.get(key) == sh_b.get(key),
+                f"sharded_serving.{key}: fresh {sh_f.get(key)} != "
+                f"baseline {sh_b.get(key)}")
     # union, not base-only: a dtype added to the sweep without a
     # baseline regeneration must fail, not silently pass unchecked
     all_dtypes = sorted(set(base["state_dtypes"])
@@ -413,6 +487,15 @@ def main():
           f"without (must be strictly less), best-of-"
           f"{pc['bestofn_n']}: {pc['bestofn_distinct']} distinct "
           f"branches")
+    sh = fresh["sharded_serving"]
+    print(f"[bench_ci] sharded serving: tp={sh['tp']}, tokens identical "
+          f"{sh['tokens_identical']}, no per-step resharding "
+          f"{sh['no_per_step_resharding']}, "
+          f"{sh['sharded_cache_leaves']}/{sh['cache_leaves']} cache "
+          f"leaves sharded, decode collectives {sh['decode_collectives']} "
+          f"({sh['decode_collective_bytes']} B), per-device slot bytes "
+          f"{sh['device_bytes_sharded']} vs {sh['device_bytes_single']} "
+          f"single-device")
     if fails:
         for f in fails:
             print(f"[bench_ci] FAIL: {f}", file=sys.stderr)

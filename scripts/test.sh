@@ -2,9 +2,15 @@
 # Tier-1 test entry point.  Fails fast — and loudly — on collection
 # errors so "suite can't import" is never mistaken for "suite passes".
 #
-#   scripts/test.sh            full tier-1 suite
-#   scripts/test.sh --fast     skip the slow training-integration tier
-#                              (end-to-end Trainer runs; minutes on CPU)
+#   scripts/test.sh                full tier-1 suite
+#   scripts/test.sh --fast         skip the slow training-integration tier
+#                                  (end-to-end Trainer runs; minutes on
+#                                  CPU) and the multi-device tier (its
+#                                  own CI job runs it per PR)
+#   scripts/test.sh --multidevice  ONLY the multi-device tier: every
+#                                  case subprocesses onto 8 fake host
+#                                  devices (tests/_multidevice.py), so
+#                                  this tier needs no special env
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -21,17 +27,23 @@ if [ "${#KNOWN_RED[@]}" -ne 0 ]; then
 fi
 
 FAST=0
+MULTIDEVICE=0
 ARGS=()
 for a in "$@"; do
     case "$a" in
         --fast) FAST=1 ;;
+        --multidevice) MULTIDEVICE=1 ;;
         *) ARGS+=("$a") ;;
     esac
 done
 
 PYTEST_ARGS=(-x -q)
-if [ "$FAST" -eq 1 ]; then
-    PYTEST_ARGS+=(--ignore=tests/test_train_integration.py)
+if [ "$MULTIDEVICE" -eq 1 ]; then
+    PYTEST_ARGS+=(tests/test_distributed.py tests/test_sharded_serving.py)
+elif [ "$FAST" -eq 1 ]; then
+    PYTEST_ARGS+=(--ignore=tests/test_train_integration.py
+                  --ignore=tests/test_distributed.py
+                  --ignore=tests/test_sharded_serving.py)
 fi
 
 if ! python -m pytest -q --collect-only >collect.err 2>&1; then

@@ -34,3 +34,22 @@ def make_local_mesh(shape=(2, 2), axes=("data", "model")):
     if len(devices) < need:
         raise RuntimeError(f"need {need} devices, have {len(devices)}")
     return jax.make_mesh(shape, axes, devices=devices[:need])
+
+
+def make_serving_mesh(tp: int = 2, axis: str = "model"):
+    """1-D tensor-parallel mesh for the serving engine
+    (``EngineConfig.mesh``): ``tp`` devices on the "model" axis, so the
+    default ShardingRules put stacked weights (ffn/heads/vocab) and the
+    pool's TP-interior cache leaves on it, while slot (batch) axes stay
+    replicated — admission/eviction scatters touch every shard locally.
+    """
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1; got {tp}")
+    devices = jax.devices()
+    if len(devices) < tp:
+        raise RuntimeError(
+            f"serving mesh ({axis}={tp}) needs {tp} devices, have "
+            f"{len(devices)}; run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={tp} "
+            "(CPU) or on a host with enough accelerators")
+    return jax.make_mesh((tp,), (axis,), devices=devices[:tp])

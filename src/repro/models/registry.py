@@ -58,6 +58,18 @@ def abstract_cache(cfg, batch, max_seq):
         functools.partial(init_cache, cfg, batch, max_seq))
 
 
+@functools.lru_cache(maxsize=None)
+def cache_axes(cfg):
+    """Pytree (matching init_cache structure) of per-leaf logical-axis
+    tuples — the sharding counterpart of ``cache_slot_axes``.  The
+    serving stack constrains its jit outputs with these so a pooled
+    cache sharded over a mesh stays sharded across decode/fork/evict
+    dispatches.  Structure depends only on cfg (state/kv dtypes add or
+    drop scale leaves), never on batch or max_seq."""
+    from repro.parallel import sharding
+    return sharding.tree_axes(abstract_cache(cfg, 1, 8))
+
+
 # ---------------------------------------------------------------------------
 # Slot-indexable caches (continuous-batching serving engine)
 #

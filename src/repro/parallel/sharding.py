@@ -22,6 +22,7 @@ gradient/step all-reduce over "pod".
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Optional
 
@@ -116,6 +117,21 @@ class use_mesh:
         return False
 
 
+def shard_ctx(shard):
+    """``use_mesh`` for an optional ``(mesh, rules)`` pair.
+
+    The serving stack keys its shared jit caches on such a pair (both
+    halves are hashable) and enters this context INSIDE the traced
+    function body, so logical ``constrain`` calls bake the mesh at
+    trace time — a sharded engine and a single-device engine can never
+    alias one trace.  ``None`` is a true no-op: the single-device path
+    traces byte-identical jaxprs to the pre-mesh code.
+    """
+    if shard is None:
+        return contextlib.nullcontext()
+    return use_mesh(shard[0], shard[1])
+
+
 def logical_to_spec(axes, mesh=None, rules=None) -> P:
     mesh = mesh or _CTX["mesh"]
     rules = rules or _CTX["rules"]
@@ -206,6 +222,27 @@ def tree_shardings(params, mesh, rules=None):
 
     return jax.tree.map(_one, params,
                         is_leaf=lambda x: is_param(x) or isinstance(x, tuple))
+
+
+def constrain_tree(values, axes_tree, mesh=None, rules=None):
+    """Constrain every leaf of a plain-value pytree to its logical axes
+    (shape-aware, the in-jit counterpart of ``tree_shardings`` +
+    ``device_put``).  ``axes_tree`` is a congruent pytree of logical-axis
+    tuples (``tree_axes``).  No-op without a mesh, so an unsharded trace
+    is untouched.  The serving engine constrains its jit outputs (the
+    pooled cache) with this so every step's output sharding equals its
+    input sharding — decode bursts, forks and eviction scatters chain
+    with zero per-step resharding."""
+    mesh = mesh or _CTX["mesh"]
+    if mesh is None:
+        return values
+    rules = rules or _CTX["rules"] or ShardingRules()
+
+    def _one(v, a):
+        spec = spec_for_shape(v.shape, a, mesh, rules)
+        return jax.lax.with_sharding_constraint(v, NamedSharding(mesh, spec))
+
+    return jax.tree.map(_one, values, axes_tree)
 
 
 def rejoin(values, axes):

@@ -91,6 +91,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import registry
+from repro.parallel import sharding
 from repro.runtime import metrics as metrics_lib
 from repro.runtime import sampling
 from repro.runtime.prefix_cache import PrefixCache, PrefixCacheConfig
@@ -105,8 +106,17 @@ from repro.runtime.state_pool import SlotStatePool
 # earlier engine — or the warmup pass — already compiled.  Sampling
 # parameters are traced ARRAY arguments, never part of the cache key:
 # heterogeneous per-request settings share one compile.
+#
+# ``shard`` ((mesh, rules) or None, both halves hashable) keys the
+# tensor-parallel traces separately: the body enters sharding.shard_ctx
+# so the models' logical ``constrain`` calls bake the mesh at trace
+# time, and every returned pool cache is re-constrained to the pool's
+# own placement — output sharding == input sharding, so bursts, forks
+# and eviction scatters chain with zero per-step resharding.  With
+# shard=None the context is a no-op and the traces are byte-identical
+# to the pre-mesh engine.
 @functools.lru_cache(maxsize=None)
-def _jit_prefill_admit(cfg):
+def _jit_prefill_admit(cfg, shard=None):
     """Fused prefill-into-slot: full-seq prefill of one request, scatter
     of its state into the pool slot, and first-token sampling with the
     request's own params — one dispatch per admission.  Also returns
@@ -114,33 +124,47 @@ def _jit_prefill_admit(cfg):
     log-softmax; token math untouched) and the last-position logits,
     which best-of-n admission samples each forked branch's first token
     from without re-running the prefill."""
+    cax = registry.cache_axes(cfg) if shard is not None else None
+
     def _fn(p, fresh, tokens, pool_cache, slot_id, sp, step):
         sampling.TRACE_COUNTS["prefill_admit"] += 1
-        logits, sub = registry.prefill(cfg, p, fresh, {"tokens": tokens})
-        new_pool = registry.scatter_slots(cfg, pool_cache, sub, slot_id)
-        last = logits[:, -1, :]
-        tok = sampling.sample(last, sp, step)
-        lp, tv, ti = sampling.token_logprobs(last, tok)
+        with sharding.shard_ctx(shard):
+            logits, sub = registry.prefill(cfg, p, fresh,
+                                           {"tokens": tokens})
+            new_pool = registry.scatter_slots(cfg, pool_cache, sub,
+                                              slot_id)
+            if shard is not None:
+                new_pool = sharding.constrain_tree(new_pool, cax)
+            last = logits[:, -1, :]
+            tok = sampling.sample(last, sp, step)
+            lp, tv, ti = sampling.token_logprobs(last, tok)
         return tok[:, None], lp, tv, ti, last, new_pool
     return jax.jit(_fn)
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_prefill_prefix(cfg):
+def _jit_prefill_prefix(cfg, shard=None):
     """Prefix-only prefill: consume the first ``block`` prompt tokens
     from the init state and return the batch-1 cache — the snapshot a
     cold admission inserts into the prefix cache before chaining the
     remaining tokens through the suffix micro-scan.  No scatter, no
     sampling: the snapshot is position-complete state, nothing else."""
+    cax = registry.cache_axes(cfg) if shard is not None else None
+
     def _fn(p, fresh, tokens):
         sampling.TRACE_COUNTS["prefill_prefix"] += 1
-        _, sub = registry.prefill(cfg, p, fresh, {"tokens": tokens})
+        with sharding.shard_ctx(shard):
+            _, sub = registry.prefill(cfg, p, fresh, {"tokens": tokens})
+            if shard is not None:
+                # batch-1 snapshot: slot axis replicated, TP-interior
+                # leaves stay on "model" — restores scatter shard-local
+                sub = sharding.constrain_tree(sub, cax)
         return sub
     return jax.jit(_fn)
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_suffix_admit(cfg, m: int):
+def _jit_suffix_admit(cfg, m: int, shard=None):
     """Cached-prefix admission: restore a prefix snapshot and prefill
     only the ``m``-token suffix as a decode-step micro-scan — the SAME
     per-token dispatch a decode burst (and the spec-decode verify scan)
@@ -150,40 +174,53 @@ def _jit_suffix_admit(cfg, m: int):
     cache stack rides back so the engine can insert snapshots at every
     block boundary the chain crossed.  Compiles once per distinct
     suffix length (same discipline as the exact-length prefill)."""
+    cax = registry.cache_axes(cfg) if shard is not None else None
+
     def _fn(p, snap, toks, pool_cache, slot_id, sp, step):
         sampling.TRACE_COUNTS["suffix_admit"] += 1
+        with sharding.shard_ctx(shard):
+            def body(c, tok_t):
+                logits, c2 = registry.decode_step(cfg, p, c,
+                                                  {"tokens": tok_t})
+                return c2, (logits[:, -1, :], c2)
 
-        def body(c, tok_t):
-            logits, c2 = registry.decode_step(cfg, p, c,
-                                              {"tokens": tok_t})
-            return c2, (logits[:, -1, :], c2)
-
-        xs = jnp.moveaxis(toks[:, :, None], 1, 0)        # (1,m) -> (m,1,1)
-        final, (lg, caches) = jax.lax.scan(body, snap, xs)
-        new_pool = registry.scatter_slots(cfg, pool_cache, final, slot_id)
-        last = lg[-1]
-        tok = sampling.sample(last, sp, step)
-        lp, tv, ti = sampling.token_logprobs(last, tok)
+            xs = jnp.moveaxis(toks[:, :, None], 1, 0)    # (1,m) -> (m,1,1)
+            final, (lg, caches) = jax.lax.scan(body, snap, xs)
+            new_pool = registry.scatter_slots(cfg, pool_cache, final,
+                                              slot_id)
+            if shard is not None:
+                # pin the pool output only; ``caches`` has an extra
+                # leading scan axis and stays wherever GSPMD puts it
+                new_pool = sharding.constrain_tree(new_pool, cax)
+            last = lg[-1]
+            tok = sampling.sample(last, sp, step)
+            lp, tv, ti = sampling.token_logprobs(last, tok)
         return tok[:, None], lp, tv, ti, last, new_pool, caches
     return jax.jit(_fn)
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_decode_sample(cfg):
+def _jit_decode_sample(cfg, shard=None):
     """Fused decode + per-slot sample: tokens stay on device so
     consecutive steps chain without a host round-trip (the burst loop
     syncs once per scheduling quantum, keeping XLA dispatch
     pipelined).  The logprob surface (chosen + top-k over the raw-logit
     log-softmax) rides along; the sampled-token math is untouched, so
     streams are bitwise the surface-free engine's."""
+    cax = registry.cache_axes(cfg) if shard is not None else None
+
     def _decode_fn(p, cache, toks, active, sp, step):
         sampling.TRACE_COUNTS["decode_step"] += 1
-        logits, new_cache = registry.decode_step(cfg, p, cache,
-                                                 {"tokens": toks})
-        new_cache = registry.mask_slots(cfg, cache, new_cache, active)
-        last = logits[:, -1, :]
-        tok = sampling.sample(last, sp, step)
-        lp, tv, ti = sampling.token_logprobs(last, tok)
+        with sharding.shard_ctx(shard):
+            logits, new_cache = registry.decode_step(cfg, p, cache,
+                                                     {"tokens": toks})
+            new_cache = registry.mask_slots(cfg, cache, new_cache,
+                                            active)
+            if shard is not None:
+                new_cache = sharding.constrain_tree(new_cache, cax)
+            last = logits[:, -1, :]
+            tok = sampling.sample(last, sp, step)
+            lp, tv, ti = sampling.token_logprobs(last, tok)
         return tok[:, None], lp, tv, ti, new_cache
     return jax.jit(_decode_fn)
 
@@ -237,6 +274,17 @@ class EngineConfig:
     # restore it with one scatter and prefill only the suffix —
     # token-identical to the cold prefill (gated in tests + bench).
     prefix_cache: Optional[PrefixCacheConfig] = None
+    # tensor-parallel serving: a jax.sharding.Mesh (typically
+    # launch/mesh.make_serving_mesh(tp) — 1-D over "model") shards the
+    # stacked weights on their TP axes (ffn/heads/vocab -> "model") and
+    # the pool's state/scale/KV leaves on the matching axes; slot
+    # (batch) axes stay replicated, so admit/evict/fork scatters are
+    # shard-local and every step chains reshard-free.  None (default)
+    # = single-device, bitwise unchanged (the jit caches key on the
+    # (mesh, rules) pair, so the unsharded traces are untouched).
+    mesh: Optional[jax.sharding.Mesh] = None
+    # logical-axis -> mesh-axis rules; None = sharding.ShardingRules()
+    rules: Optional[sharding.ShardingRules] = None
 
 
 @dataclasses.dataclass
@@ -308,6 +356,31 @@ class Engine:
             cfg = dataclasses.replace(cfg,
                                       kv_cache_dtype=ecfg.kv_cache_dtype)
         ecfg.default_params.validate()
+        # tensor-parallel serving: place the weights once (shape-aware
+        # specs — non-divisible dims fall back to replicated) and key
+        # every shared jit cache on the (mesh, rules) pair.  Committed
+        # sharded params + pool drive jit sharding inference; outputs
+        # are constrained back to the pool's placement, so no step ever
+        # reshards.  mesh=None leaves params and traces untouched.
+        self._shard = None
+        if ecfg.mesh is not None:
+            # MoE dispatch must stay on the pjit-auto dense path: the
+            # expert-parallel shard_map path drops overflow tokens per
+            # SHARD-local capacity, so its logits differ from the
+            # single-device global-capacity routing — which would break
+            # the sharded == single-device token-identity contract
+            # (moe.py's EP docstring states the same caveat for tests)
+            if getattr(cfg, "moe_impl", None) == "ep":
+                raise ValueError(
+                    "moe_impl='ep' is unsupported under a serving mesh: "
+                    "per-shard capacity drops break token identity")
+            if getattr(cfg, "moe_impl", None) == "auto":
+                cfg = dataclasses.replace(cfg, moe_impl="dense")
+            rules = ecfg.rules or sharding.ShardingRules()
+            self._shard = (ecfg.mesh, rules)
+            params = jax.device_put(
+                params, sharding.tree_shardings(
+                    registry.abstract_params(cfg), ecfg.mesh, rules))
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
@@ -315,15 +388,19 @@ class Engine:
         # draft in the same speculative pass
         n_scratch = ecfg.n_slots if ecfg.draft is not None else 0
         self.pool = SlotStatePool(cfg, ecfg.n_slots, ecfg.max_seq,
-                                  n_scratch=n_scratch)
-        self._spec = (SpecDecoder(cfg, params, ecfg.draft)
+                                  n_scratch=n_scratch, mesh=ecfg.mesh,
+                                  rules=ecfg.rules)
+        # after device_put: the spec decoder slices its draft param view
+        # from the already-sharded tree
+        self._spec = (SpecDecoder(cfg, params, ecfg.draft,
+                                  shard=self._shard)
                       if ecfg.draft is not None else None)
         self.stats = metrics_lib.ServeStats()
         self.logger = logger
         self._now = clock
-        self._prefill = _jit_prefill_admit(cfg)
-        self._decode = _jit_decode_sample(cfg)
-        self._prefill_prefix = _jit_prefill_prefix(cfg)
+        self._prefill = _jit_prefill_admit(cfg, self._shard)
+        self._decode = _jit_decode_sample(cfg, self._shard)
+        self._prefill_prefix = _jit_prefill_prefix(cfg, self._shard)
         self._prefix = (PrefixCache(ecfg.prefix_cache)
                         if ecfg.prefix_cache is not None else None)
         self._pending: list[Request] = []      # arrival-gated, sorted
@@ -538,7 +615,7 @@ class Engine:
             self.pool.cache = new_pool
         else:
             m = length - p_from
-            fn = _jit_suffix_admit(self.cfg, m)
+            fn = _jit_suffix_admit(self.cfg, m, self._shard)
             tok_dev, lp, tv, ti, last, new_pool, chain = fn(
                 self.params, snap, jnp.asarray(prompt[None, p_from:]),
                 self.pool.cache, slot_arr, sp_row, step0)

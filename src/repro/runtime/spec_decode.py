@@ -58,6 +58,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import registry
+from repro.parallel import sharding
 from repro.runtime import sampling
 
 
@@ -237,50 +238,67 @@ def accept_tokens(draft_toks, target_logits, temperature: float,
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
-def _jit_draft_step(cfg, dcfg, n_layers: int):
+def _jit_draft_step(cfg, dcfg, n_layers: int, shard=None):
     """One draft decode step over the pool: slice the first-n-layers
     cache view, run the draft model's decode_step, merge the updated
     layers back, freeze everything but the scratch slots, sample with
-    each slot's own params."""
+    each slot's own params.  ``shard`` ((mesh, rules) or None) keys a
+    separate tensor-parallel trace whose output cache is constrained to
+    the pool's sharding (fork/draft/verify chain reshard-free)."""
     full = n_layers == cfg.n_layers and dcfg == cfg
+    cax = registry.cache_axes(cfg) if shard is not None else None
 
     def _fn(pd, cache, toks, scratch_mask, sp, step):
         sampling.TRACE_COUNTS["draft_step"] += 1
-        cd = cache if full else registry.draft_cache(cfg, cache, n_layers)
-        logits, cd2 = registry.decode_step(dcfg, pd, cd, {"tokens": toks})
-        new_cache = (cd2 if full else
-                     registry.draft_cache_merge(cfg, cache, cd2, n_layers))
-        new_cache = registry.mask_slots(cfg, cache, new_cache,
-                                        scratch_mask)
-        tok = sampling.sample(logits[:, -1, :], sp, step)
+        with sharding.shard_ctx(shard):
+            cd = (cache if full
+                  else registry.draft_cache(cfg, cache, n_layers))
+            logits, cd2 = registry.decode_step(dcfg, pd, cd,
+                                               {"tokens": toks})
+            new_cache = (cd2 if full else
+                         registry.draft_cache_merge(cfg, cache, cd2,
+                                                    n_layers))
+            new_cache = registry.mask_slots(cfg, cache, new_cache,
+                                            scratch_mask)
+            if shard is not None:
+                new_cache = sharding.constrain_tree(new_cache, cax)
+            tok = sampling.sample(logits[:, -1, :], sp, step)
         return tok[:, None], logits[:, -1, :], new_cache
     return jax.jit(_fn)
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_verify(cfg, k: int):
+def _jit_verify(cfg, k: int, shard=None):
     """The fused verify pass: (k+1)-step micro-scan over
     [pending, drafts], per-step freeze of inactive slots, per-slot
     acceptance, and the per-slot rollback select — one dispatch, one
-    host sync.  Only the window depth k keys the compile (bounded by
-    DraftConfig.k); sampling params are traced arrays."""
+    host sync.  Only the window depth k (bounded by DraftConfig.k) and
+    the tensor-parallel shard key the compile; sampling params are
+    traced arrays."""
+    cax = registry.cache_axes(cfg) if shard is not None else None
+
     def _fn(p, cache, x0, draft_toks, draft_logits, active, sp, step,
             depth_limit):
         sampling.TRACE_COUNTS["verify"] += 1
-        # x0 (total, 1) pending tokens; draft_toks (k, total) proposals
-        inputs = jnp.concatenate(
-            [x0, jnp.moveaxis(draft_toks, 0, 1)], axis=1)    # (total, k+1)
-        logits, caches = registry.verify_scan(cfg, p, cache, inputs,
-                                              active=active)
-        tl = jnp.moveaxis(logits, 1, 0)                      # (k+1, b, V)
-        emit, n_acc, pending = accept_tokens_hetero(
-            draft_toks, tl, draft_logits, sp, step, depth_limit)
-        snap = registry.select_step(cfg, caches, n_acc)
-        # logprob surface for every emitted position (the engine keeps
-        # only the accepted prefix) — raw-logit log-softmax, so the
-        # emit/accept math above is untouched and token streams stay
-        # bitwise identical to the surface-free verify
-        lp, tv, ti = jax.vmap(sampling.token_logprobs)(tl, emit)
+        with sharding.shard_ctx(shard):
+            # x0 (total, 1) pending tokens; draft_toks (k, total)
+            inputs = jnp.concatenate(
+                [x0, jnp.moveaxis(draft_toks, 0, 1)], axis=1)  # (total, k+1)
+            logits, caches = registry.verify_scan(cfg, p, cache, inputs,
+                                                  active=active)
+            tl = jnp.moveaxis(logits, 1, 0)                  # (k+1, b, V)
+            emit, n_acc, pending = accept_tokens_hetero(
+                draft_toks, tl, draft_logits, sp, step, depth_limit)
+            snap = registry.select_step(cfg, caches, n_acc)
+            if shard is not None:
+                # the rolled-back cache replaces the pool's — pin its
+                # sharding so the next burst starts reshard-free
+                snap = sharding.constrain_tree(snap, cax)
+            # logprob surface for every emitted position (the engine
+            # keeps only the accepted prefix) — raw-logit log-softmax,
+            # so the emit/accept math above is untouched and token
+            # streams stay bitwise identical to the surface-free verify
+            lp, tv, ti = jax.vmap(sampling.token_logprobs)(tl, emit)
         return emit, n_acc, pending, snap, lp, tv, ti
     return jax.jit(_fn)
 
@@ -289,7 +307,7 @@ class SpecDecoder:
     """Per-engine speculative-decode driver (jit caches shared per
     config across instances, like the engine's step functions)."""
 
-    def __init__(self, cfg, params, draft: DraftConfig):
+    def __init__(self, cfg, params, draft: DraftConfig, shard=None):
         if draft.k < 1:
             raise ValueError("draft.k must be >= 1")
         n = draft.layers or cfg.n_layers
@@ -300,14 +318,18 @@ class SpecDecoder:
         self.dcfg = dcfg
         self.k = draft.k
         self.n_draft = n
+        # tensor-parallel shard key ((mesh, rules) or None) — the engine
+        # passes already-sharded params, so slicing the draft view below
+        # keeps the layer-stacked leaves on their TP placement
+        self._shard = shard
         # slice the draft's param view once (host-side, shares buffers)
         self.draft_params = (params if n == cfg.n_layers
                              else registry.draft_params(cfg, params, n))
-        self._draft = _jit_draft_step(cfg, dcfg, n)
+        self._draft = _jit_draft_step(cfg, dcfg, n, shard)
         # warm the full-depth verify jit cache entry; shallower windows
         # (end-of-request budget clamps, adaptive depth) compile on
         # demand, bounded by the k distinct depths
-        _jit_verify(cfg, draft.k)
+        _jit_verify(cfg, draft.k, shard)
 
     def propose(self, cache, toks, scratch_mask, sp, base_step,
                 k_eff: int):
@@ -337,6 +359,6 @@ class SpecDecoder:
         (total,), rolled-back cache, chosen-logprobs (K+1, total),
         top-logprob values (K+1, total, TOP), top-logprob ids).  K is
         taken from draft_toks."""
-        fn = _jit_verify(self.cfg, int(draft_toks.shape[0]))
+        fn = _jit_verify(self.cfg, int(draft_toks.shape[0]), self._shard)
         return fn(params, cache, x0, draft_toks, draft_logits,
                   active, sp, step, depth_limit)

@@ -29,31 +29,67 @@ from repro.parallel import sharding
 from repro.runtime import sampling
 
 
-# Shared per-config jit caches (cfg is frozen/hashable): every pool for a
-# given model reuses the same compiled gather/scatter/mask executables.
+# Shared per-(config, shard) jit caches (cfg is frozen/hashable; shard is
+# None or a hashable (Mesh, ShardingRules) pair): every pool for a given
+# model reuses the same compiled gather/scatter/mask executables, and a
+# sharded pool gets its OWN trace — the mesh context and the output
+# constraints are baked at trace time, so a single-device pool can never
+# alias a sharded compile (or vice versa).  Outputs are constrained to
+# the cache's logical axes: a slot op's output sharding equals its input
+# sharding, so admission/eviction/fork chains introduce zero resharding.
 @functools.lru_cache(maxsize=None)
-def _jit_gather(cfg):
-    return jax.jit(lambda c, i: registry.gather_slots(cfg, c, i))
+def _jit_gather(cfg, shard=None):
+    cax = registry.cache_axes(cfg) if shard is not None else None
+
+    def _fn(c, i):
+        with sharding.shard_ctx(shard):
+            out = registry.gather_slots(cfg, c, i)
+            if shard is not None:
+                out = sharding.constrain_tree(out, cax)
+        return out
+    return jax.jit(_fn)
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_scatter(cfg):
-    return jax.jit(lambda c, s, i: registry.scatter_slots(cfg, c, s, i))
+def _jit_scatter(cfg, shard=None):
+    cax = registry.cache_axes(cfg) if shard is not None else None
+
+    def _fn(c, s, i):
+        with sharding.shard_ctx(shard):
+            out = registry.scatter_slots(cfg, c, s, i)
+            if shard is not None:
+                out = sharding.constrain_tree(out, cax)
+        return out
+    return jax.jit(_fn)
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_mask(cfg):
-    return jax.jit(lambda o, n, m: registry.mask_slots(cfg, o, n, m))
+def _jit_mask(cfg, shard=None):
+    cax = registry.cache_axes(cfg) if shard is not None else None
+
+    def _fn(o, n, m):
+        with sharding.shard_ctx(shard):
+            out = registry.mask_slots(cfg, o, n, m)
+            if shard is not None:
+                out = sharding.constrain_tree(out, cax)
+        return out
+    return jax.jit(_fn)
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_fork(cfg):
+def _jit_fork(cfg, shard=None):
     """Fork = gather(src) + scatter(dst) fused into one dispatch.  Every
     cache leaf — quantized payloads AND their absmax scales — moves in
     the same op, so a fork can never tear payload from scale."""
+    cax = registry.cache_axes(cfg) if shard is not None else None
+
     def _fn(c, src, dst):
-        return registry.scatter_slots(
-            cfg, c, registry.gather_slots(cfg, c, src), dst)
+        with sharding.shard_ctx(shard):
+            out = registry.scatter_slots(
+                cfg, c, registry.gather_slots(cfg, c, src), dst)
+            if shard is not None:
+                out = sharding.constrain_tree(out, cax)
+        return out
     return jax.jit(_fn)
 
 
@@ -68,7 +104,7 @@ class SlotStatePool:
     """
 
     def __init__(self, cfg, n_slots: int, max_seq: int, dtype=None,
-                 n_scratch: int = 0):
+                 n_scratch: int = 0, mesh=None, rules=None):
         if n_slots < 1:
             raise ValueError("n_slots must be >= 1")
         if n_scratch < 0:
@@ -78,16 +114,34 @@ class SlotStatePool:
         self.n_scratch = n_scratch
         self.n_total = n_slots + n_scratch
         self.max_seq = max_seq
-        self.cache = sharding.tree_values(
-            registry.init_cache(cfg, self.n_total, max_seq, dtype))
+        cache_p = registry.init_cache(cfg, self.n_total, max_seq, dtype)
+        fresh_p = registry.init_cache(cfg, 1, max_seq, dtype)
+        self.cache = sharding.tree_values(cache_p)
         # the init state of a single slot — eviction scatters this (NOT
         # zeros: e.g. xLSTM stabilizer state m inits to -1e30)
-        self._fresh = sharding.tree_values(
-            registry.init_cache(cfg, 1, max_seq, dtype))
-        self._gather_fn = _jit_gather(cfg)
-        self._scatter_fn = _jit_scatter(cfg)
-        self._mask_fn = _jit_mask(cfg)
-        self._fork_fn = _jit_fork(cfg)
+        self._fresh = sharding.tree_values(fresh_p)
+        # tensor-parallel pool: place every cache leaf (payloads, absmax
+        # scales, KV strips, positions) on the mesh by its logical axes
+        # — TP-interior axes (act_ffn/act_heads) shard, slot axes stay
+        # replicated — so all the jit'd slot ops below run on sharded
+        # arrays in place.  mesh=None is the bitwise-unchanged
+        # single-device path.
+        self.mesh = mesh
+        self.rules = ((rules if rules is not None else
+                       sharding.ShardingRules())
+                      if mesh is not None else None)
+        self._shard = (mesh, self.rules) if mesh is not None else None
+        if mesh is not None:
+            self.cache = jax.device_put(
+                self.cache,
+                sharding.tree_shardings(cache_p, mesh, self.rules))
+            self._fresh = jax.device_put(
+                self._fresh,
+                sharding.tree_shardings(fresh_p, mesh, self.rules))
+        self._gather_fn = _jit_gather(cfg, self._shard)
+        self._scatter_fn = _jit_scatter(cfg, self._shard)
+        self._mask_fn = _jit_mask(cfg, self._shard)
+        self._fork_fn = _jit_fork(cfg, self._shard)
         # per-slot sampling parameters (temperature/top-k/top-p/key) ride
         # with the slot: set on admission, copied on fork, reset on
         # eviction — the engine passes params.device() into the jit'd
@@ -217,6 +271,28 @@ class SlotStatePool:
         """Slot capacity per GB of decode-state memory (the serving
         capacity axis cfg.state_dtype multiplies)."""
         return (1 << 30) / max(1, self.state_bytes_per_slot())
+
+    def device_state_bytes_per_slot(self) -> int:
+        """Per-DEVICE bytes one slot occupies.  Under a TP mesh the
+        sharded cache leaves split across devices (each holds one shard
+        shape's worth), while replicated leaves count in full on every
+        device — so this is the honest per-chip marginal cost of a slot
+        and the number the sharded slots-per-GB capacity claim gates.
+        Without a mesh it equals ``state_bytes_per_slot``."""
+        def per_dev(leaf):
+            sh = getattr(leaf, "sharding", None)
+            if sh is None:
+                return leaf.nbytes
+            shape = sh.shard_shape(leaf.shape)
+            return int(np.prod(shape, dtype=np.int64)) * leaf.dtype.itemsize
+        return sum(per_dev(leaf) for leaf in jax.tree.leaves(self.cache)
+                   ) // self.n_total
+
+    def device_slots_per_gb(self) -> float:
+        """Slot capacity per GB of PER-DEVICE decode-state memory —
+        under TP this exceeds ``slots_per_gb`` because sharded leaves
+        split across the mesh."""
+        return (1 << 30) / max(1, self.device_state_bytes_per_slot())
 
     def evict(self, slot: int) -> None:
         """Reset ``slot`` to the init state and return it to the free list.

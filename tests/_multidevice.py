@@ -1,0 +1,29 @@
+"""Shared helper for multi-device tests: the main pytest process must
+stay single-device (jax backends initialize once per process), so every
+multi-device case runs ``python -c`` in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` set before jax
+imports.  Used by tests/test_distributed.py and
+tests/test_sharded_serving.py (and runnable locally the same way CI's
+test-multidevice job does: ``bash scripts/test.sh --multidevice``).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run8(body: str, timeout=600):
+    """Run ``body`` (dedented) in a fresh CPU python with 8 fake devices;
+    assert it exits 0 and return its stdout."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    code = textwrap.dedent(body)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout

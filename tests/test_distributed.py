@@ -4,27 +4,10 @@ XLA_FLAGS set before jax import).
 
 Covers: pjit sharded training step == single-device step, elastic checkpoint
 reshard, compressed psum, pipeline parallelism, sequence-parallel scan,
-production-mesh construction error path.
+production-mesh construction error path.  (Sharded SERVING lives in
+tests/test_sharded_serving.py; both share the run8 subprocess helper.)
 """
-import os
-import subprocess
-import sys
-import textwrap
-
-
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def run8(body: str, timeout=600):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    env["JAX_PLATFORMS"] = "cpu"
-    code = textwrap.dedent(body)
-    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, timeout=timeout, env=env)
-    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
-    return r.stdout
+from _multidevice import run8
 
 
 def test_sharded_train_step_matches_single_device():

@@ -1,0 +1,247 @@
+"""Tensor-parallel sharded serving (8 fake host devices via subprocess,
+like tests/test_distributed.py; shared run8 helper in _multidevice.py).
+
+The contract under test: an Engine given ``EngineConfig.mesh`` (a 1-D
+"model" mesh from launch/mesh.make_serving_mesh) serves token streams
+IDENTICAL to the single-device engine — greedy, across model families,
+state dtypes, spec decode on/off, fused/megakernel step impls, and the
+prefix cache — while the pool's cache leaves live sharded on the mesh
+and every step's output sharding equals its input sharding (no per-step
+resharding).  Streaming callbacks and cancellation reclaim sharded
+slots/leases/params rows exactly like the single-device pool.
+
+Error paths (mesh construction on too few devices) run in the main
+process, which is deliberately single-device.
+"""
+import pytest
+
+from _multidevice import run8
+
+
+# Shared subprocess preamble: smoke-size model + tiny trace server.
+# serve() returns per-request token lists; identity asserts are exact
+# (== on int lists), matching the repo's bitwise-stream precedents.
+_PRELUDE = """
+    import dataclasses
+    import numpy as np
+    import jax
+    from repro import configs
+    from repro.models import registry
+    from repro.parallel import sharding
+    from repro.launch import mesh as mesh_lib
+    from repro.runtime.engine import Engine, EngineConfig
+    from repro.runtime.sampling import SamplingParams
+    from repro.runtime.spec_decode import DraftConfig
+
+    def make_model(arch):
+        cfg = configs.smoke_variant(configs.get_config(arch))
+        cfg = dataclasses.replace(cfg, vocab=256, dtype='float32')
+        params = sharding.tree_values(
+            registry.init_params(cfg, jax.random.key(0)))
+        return cfg, params
+
+    def make_prompts(n=4, seed=0):
+        rng = np.random.default_rng(seed)
+        return [rng.integers(1, 256, size=int(L)).tolist()
+                for L in rng.choice((6, 8, 12, 16), size=n)]
+
+    def serve(cfg, params, mesh, prompts, max_new=8, **kw):
+        eng = Engine(cfg, params,
+                     EngineConfig(n_slots=2, max_seq=64, mesh=mesh, **kw))
+        reqs = [eng.submit(p, SamplingParams(max_new=max_new))
+                for p in prompts]
+        eng.run()
+        return eng, [r.tokens for r in reqs]
+"""
+
+
+def _identity_body(arch):
+    return _PRELUDE + f"""
+    cfg, params = make_model('{arch}')
+    prompts = make_prompts()
+    mesh = mesh_lib.make_serving_mesh(2)
+    for sd in (None, 'int8'):
+        for draft in (None, DraftConfig(k=2, layers=0)):
+            _, single = serve(cfg, params, None, prompts,
+                              state_dtype=sd, draft=draft)
+            eng, shardd = serve(cfg, params, mesh, prompts,
+                                state_dtype=sd, draft=draft)
+            tag = f'{arch} sd={{sd}} spec={{draft is not None}}'
+            assert single == shardd, (tag, single, shardd)
+            # the pool really is sharded: at least one cache leaf has a
+            # non-replicated placement on the serving mesh
+            shs = [leaf.sharding for leaf in
+                   jax.tree.leaves(eng.pool.cache)]
+            assert any(not s.is_fully_replicated for s in shs), tag
+            print('ok', tag)
+    """
+
+
+@pytest.mark.parametrize("arch", ["mamba-130m", "jamba-v0.1-52b",
+                                  "xlstm-350m"])
+def test_sharded_greedy_token_identity(arch):
+    """Sharded tp=2 greedy streams == single-device streams for the
+    family, across {f32, int8} state x spec decode on/off."""
+    run8(_identity_body(arch), timeout=1200)
+
+
+def test_sharded_step_impls_and_tp4_token_identity():
+    """Fused + megakernel step routing under the mesh (the Pallas
+    interpreter lowers to partitionable XLA ops on CPU), and a tp=4
+    spot-check that wider meshes keep identity too."""
+    run8(_PRELUDE + """
+    cfg, params = make_model('mamba-130m')
+    prompts = make_prompts(n=2)
+    mesh = mesh_lib.make_serving_mesh(2)
+    for impl in ('fused', 'megakernel'):
+        _, single = serve(cfg, params, None, prompts, step_impl=impl)
+        _, shardd = serve(cfg, params, mesh, prompts, step_impl=impl)
+        assert single == shardd, (impl, single, shardd)
+        print('ok', impl)
+    _, single = serve(cfg, params, None, prompts)
+    _, shardd = serve(cfg, params, mesh_lib.make_serving_mesh(4), prompts)
+    assert single == shardd, ('tp4', single, shardd)
+    print('ok tp4')
+    """, timeout=1200)
+
+
+def test_sharded_prefix_cache_token_identity():
+    """Prefix-cache snapshot/restore on sharded state: hits restore a
+    sharded snapshot through the suffix micro-scan and streams stay
+    identical to both the cold sharded serve and the single-device
+    engine."""
+    run8(_PRELUDE + """
+    from repro.runtime.prefix_cache import PrefixCacheConfig
+    cfg, params = make_model('mamba-130m')
+    base = list(range(1, 13))
+    prompts = [base + [20 + i] for i in range(4)]   # shared 12-tok prefix
+    pc = PrefixCacheConfig(block=4)
+    _, single = serve(cfg, params, None, prompts, prefix_cache=pc)
+    mesh = mesh_lib.make_serving_mesh(2)
+    eng, shardd = serve(cfg, params, mesh, prompts, prefix_cache=pc)
+    assert single == shardd, (single, shardd)
+    assert eng.stats.summary()['prefix_hits'] >= 1
+    _, cold = serve(cfg, params, mesh, prompts)
+    assert cold == shardd, (cold, shardd)
+    print('ok prefix', eng.stats.summary()['prefix_hits'])
+    """, timeout=1200)
+
+
+def test_sharded_streaming_and_cancel_reclaims():
+    """Streaming callbacks and Engine.cancel under a sharded pool: a
+    mid-stream cancel (from its own stream_cb, during a spec pass so a
+    scratch lease is live) reclaims the slot, the scratch lease, and
+    the params row; the surviving request's stream is bitwise the
+    no-cancel sharded serve's."""
+    run8(_PRELUDE + """
+    cfg, params = make_model('mamba-130m')
+    prompts = make_prompts(n=2, seed=3)
+    mesh = mesh_lib.make_serving_mesh(2)
+    draft = DraftConfig(k=2, layers=0)
+
+    # reference: no cancellation
+    _, ref = serve(cfg, params, mesh, prompts, max_new=10, draft=draft)
+
+    eng = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=64,
+                                           mesh=mesh, draft=draft))
+    got = {}
+    def cb(req, new_toks):
+        got.setdefault(req.req_id, []).extend(new_toks)
+        if req.req_id == victim.req_id and len(req.tokens) >= 3:
+            eng.cancel(req.req_id)
+    victim = eng.submit(prompts[0], SamplingParams(max_new=10),
+                        stream_cb=cb)
+    keeper = eng.submit(prompts[1], SamplingParams(max_new=10),
+                        stream_cb=cb)
+    eng.run()
+    # survivor bitwise untouched by the co-resident cancellation
+    assert keeper.tokens == ref[1], (keeper.tokens, ref[1])
+    assert got[keeper.req_id] == keeper.tokens
+    # victim stopped early; delivered tokens stand and match the
+    # reference prefix (cancel never rewrites history)
+    assert victim.cancelled and len(victim.tokens) < 10
+    assert ref[0][:len(victim.tokens)] == victim.tokens
+    # full reclamation of sharded resources: slots, scratch leases,
+    # params rows (evict's clear() zeroes key_data; set() made it
+    # non-zero).  Scratch rows are exempt by design: release_scratch
+    # never resets — the next spec fork overwrites every leaf.
+    assert eng.pool.n_active == 0 and eng.pool.n_free == 2
+    assert len(eng.pool._scratch_free) == 2
+    assert not eng.pool.params.key_data[:eng.pool.n_slots].any()
+    print('ok cancel', victim.tokens, keeper.tokens)
+    """, timeout=1200)
+
+
+def test_sharded_decode_no_per_step_resharding():
+    """The compiled pooled decode step consumes and produces the cache
+    at the SAME shardings (chained bursts never reshard), and its
+    per-step collective counts are pinned deterministic and small."""
+    run8(_PRELUDE + """
+    import jax.numpy as jnp
+    from repro.launch import hlo_cost
+    cfg, params = make_model('mamba-130m')
+    mesh = mesh_lib.make_serving_mesh(2)
+    eng = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=64,
+                                           mesh=mesh))
+    toks = jnp.asarray(eng._next_tok)
+    act = jnp.asarray(eng.pool.active_mask())
+    sp = eng.pool.params.device()
+    step = jnp.zeros((eng.pool.n_total,), jnp.int32)
+    comp = eng._decode.lower(eng.params, eng.pool.cache, toks, act, sp,
+                             step).compile()
+    cache_in = jax.tree.leaves(comp.input_shardings[0][1])
+    cache_out = jax.tree.leaves(comp.output_shardings[4])
+    leaves = jax.tree.leaves(eng.pool.cache)
+    assert len(cache_in) == len(cache_out) == len(leaves) > 0
+    n_sharded = 0
+    for i, (a, b, x) in enumerate(zip(cache_in, cache_out, leaves)):
+        # equivalence, not ==: GSPMD may drop trailing replicated axes
+        # from a spec (P(None, 'model', None) vs P(None, 'model')) —
+        # the placement is identical
+        assert a.is_equivalent_to(b, x.ndim), (i, a, b)
+        n_sharded += not a.is_fully_replicated
+    assert n_sharded >= 1
+    c = hlo_cost.analyze(comp.as_text())
+    n_ar = c.coll_count.get('all-reduce', 0)
+    # >= 1 all-reduce per layer (the TP contraction joins), bounded by
+    # a small per-layer constant — a blowup here means GSPMD stopped
+    # partitioning the step
+    assert cfg.n_layers <= n_ar <= 16 * cfg.n_layers, dict(c.coll_count)
+    print('ok no-reshard', n_sharded, dict(c.coll_count))
+    """, timeout=1200)
+
+
+def test_sharded_pool_device_capacity():
+    """Sharded pool capacity accounting: per-device slot bytes shrink by
+    ~the TP degree for sharded leaves, so device_slots_per_gb grows."""
+    run8(_PRELUDE + """
+    from repro.runtime.state_pool import SlotStatePool
+    cfg, _ = make_model('mamba-130m')
+    mesh = mesh_lib.make_serving_mesh(2)
+    single = SlotStatePool(cfg, 2, 64)
+    shardd = SlotStatePool(cfg, 2, 64, mesh=mesh)
+    assert shardd.state_bytes_per_slot() == single.state_bytes_per_slot()
+    assert (shardd.device_state_bytes_per_slot()
+            < single.device_state_bytes_per_slot())
+    assert shardd.device_slots_per_gb() > single.device_slots_per_gb()
+    print('ok capacity', single.device_state_bytes_per_slot(),
+          shardd.device_state_bytes_per_slot())
+    """)
+
+
+def test_serving_mesh_error_paths():
+    """make_serving_mesh on too few devices: a clear RuntimeError naming
+    the requested and available counts plus the XLA_FLAGS escape hatch
+    (main pytest process is deliberately single-device)."""
+    import jax
+
+    from repro.launch.mesh import make_serving_mesh
+
+    n = jax.device_count()
+    with pytest.raises(RuntimeError) as ei:
+        make_serving_mesh(n + 1)
+    msg = str(ei.value)
+    assert str(n + 1) in msg and str(n) in msg
+    assert "xla_force_host_platform_device_count" in msg
+    with pytest.raises(ValueError):
+        make_serving_mesh(0)
