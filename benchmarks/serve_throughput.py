@@ -421,6 +421,76 @@ def state_dtype_comparison(arch, slots, requests, max_new,
 
 
 # ---------------------------------------------------------------------------
+# Quantized weights (EngineConfig.weight_dtype): bytes-per-token and agreement
+# ---------------------------------------------------------------------------
+
+def weight_dtype_comparison(arch, slots, requests, max_new, seed=0,
+                            quiet=False):
+    """Serve one saturated greedy trace twice — weight_dtype None (f32
+    params as handed in) vs "int8" (per-output-channel absmax codes,
+    dequantized inside the decode kernels) — and report the weight
+    bytes each decoded token streams from memory plus the token-stream
+    agreement vs the f32 engine.
+
+    Decode reads every weight once per token, so weight-bytes-per-token
+    IS the resident param footprint: sum of param leaf nbytes, a
+    deterministic layout count (embed/unembed stay f32 by design — they
+    are consumed as raw matrices).  Pass/fail: the int8 reduction
+    clears 1.5x, state_bytes_per_slot is IDENTICAL across the two
+    serves (weight quant must not touch slot state), and every request
+    gets all its tokens.  Agreement is reported here and floor-gated by
+    scripts/bench_ci.py; tok/s is reported only (CPU noise >20%)."""
+    cfg, params = _setup_model(arch)
+    rng = np.random.default_rng(seed)
+    max_seq = max(LEN_CHOICES) + max_new + 8
+    prompts = [rng.integers(0, cfg.vocab,
+                            size=(int(rng.choice(LEN_CHOICES)),))
+               .astype(np.int32) for _ in range(requests)]
+    out = {}
+    for label, wd in (("f32", None), ("int8", "int8")):
+        eng = Engine(cfg, params,
+                     EngineConfig(n_slots=slots, max_seq=max_seq,
+                                  weight_dtype=wd))
+        reqs = [eng.submit(p, max_new=max_new) for p in prompts]
+        eng.run()
+        s = eng.stats.summary()
+        assert s["useful_tokens"] == requests * max_new
+        out[label] = {
+            "tokens": [list(map(int, r.tokens)) for r in reqs],
+            "useful_tokens": int(s["useful_tokens"]),
+            "tokens_per_s": float(s["tokens_per_s"]),
+            "weight_bytes_per_token": int(sum(
+                l.nbytes for l in jax.tree.leaves(eng.params))),
+            "state_bytes_per_slot": int(eng.pool.state_bytes_per_slot()),
+        }
+    assert (out["int8"]["state_bytes_per_slot"]
+            == out["f32"]["state_bytes_per_slot"]), \
+        "weight quantization must not change slot state layout"
+    base = out["f32"]["tokens"]
+    n_tok = sum(len(t) for t in base)
+    for label in out:
+        same = sum(int(x == y) for a, b in zip(base, out[label]["tokens"])
+                   for x, y in zip(a, b))
+        out[label]["token_agreement_vs_f32"] = same / max(1, n_tok)
+    reduction = (out["f32"]["weight_bytes_per_token"]
+                 / out["int8"]["weight_bytes_per_token"])
+    assert reduction >= 1.5, \
+        f"int8 weight-bytes reduction {reduction:.2f}x < 1.5x"
+    out["reduction"] = reduction
+    if not quiet:
+        print(f"[serve_throughput] weight-dtype sweep, arch={arch} "
+              f"slots={slots} requests={requests} max_new={max_new}")
+        for label in ("f32", "int8"):
+            o = out[label]
+            print(f"  {label:5s}: {o['weight_bytes_per_token']:8d} "
+                  f"weight B/token | {o['tokens_per_s']:7.1f} tok/s | "
+                  f"agreement vs f32 {o['token_agreement_vs_f32']:.3f}")
+        print(f"  int8 weight-stream reduction : {reduction:0.2f}x "
+              "bytes/token (slot state layout unchanged)")
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Heterogeneous sampling (per-request SamplingParams): one jit cache
 # ---------------------------------------------------------------------------
 
@@ -855,6 +925,12 @@ def run():
                 sweep["int8"]["slots_per_gb"],
                 f"capacity_gain_vs_f32={gain:.2f}x;"
                 f"agreement={sweep['int8']['token_agreement_vs_f32']:.3f}")
+    wq = weight_dtype_comparison(arch="mamba-130m", slots=4, requests=8,
+                                 max_new=16, quiet=True)
+    common.emit("serve_weight_int8_bytes_per_token",
+                float(wq["int8"]["weight_bytes_per_token"]),
+                f"reduction_vs_f32={wq['reduction']:.2f}x;"
+                f"agreement={wq['int8']['token_agreement_vs_f32']:.3f}")
     hetero = hetero_sampling_comparison(arch="mamba-130m", slots=4,
                                         requests=8, max_new=16,
                                         quiet=True)
@@ -918,6 +994,9 @@ def main():
                            requests=min(args.requests, 8),
                            max_new=16, seed=args.seed,
                            dtypes=("f32", "bf16", "int8", "fp8"))
+    weight_dtype_comparison(args.arch, args.slots,
+                            requests=min(args.requests, 8),
+                            max_new=16, seed=args.seed)
     hetero_sampling_comparison(args.arch, args.slots,
                                requests=min(args.requests, 8),
                                max_new=16, seed=args.seed)

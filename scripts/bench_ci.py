@@ -1,5 +1,5 @@
 #!/usr/bin/env python
-"""Deterministic benchmark gate for CI (writes/checks BENCH_PR8.json).
+"""Deterministic benchmark gate for CI (writes/checks BENCH_PR9.json).
 
 Runs the serving benchmarks in *count mode*: every gated number is a
 deterministic function of the code — useful-token counts, token-stream
@@ -15,19 +15,22 @@ tensor-parallel sharded-serving counts (token identity vs the
 single-device engine, no-per-step-resharding of the pooled cache,
 per-decode-step collective counts from the compiled HLO, per-device
 slot bytes — collected in a subprocess with 8 forced host devices),
+quantized-weight counts (int8 weight-bytes-per-token reduction vs f32
+with floor-gated token agreement — decode streams every weight once
+per token, so param bytes ARE the per-token weight traffic),
 and fused-kernel-vs-oracle errors.  Wall-clock numbers are recorded
 under "informational" but never asserted: CPU timing noise exceeds 20%
 and a timing gate on shared CI runners is a flake generator.
 
-  python scripts/bench_ci.py            # compare against BENCH_PR8.json
+  python scripts/bench_ci.py            # compare against BENCH_PR9.json
   python scripts/bench_ci.py --update   # regenerate the baseline
 
-The committed BENCH_PR8.json is the baseline; CI runs compare mode and
+The committed BENCH_PR9.json is the baseline; CI runs compare mode and
 fails on drift, so a PR that changes a count (or breaks the >= 2x int8
 capacity claim / the > 1.0 accepted-tokens-per-target-pass claim / the
 one-launch-per-token megakernel claim / the sharded-serving identity
-and collective pins) must also regenerate — and thereby review — the
-file.
+and collective pins / the >= 1.5x int8 weight-bytes reduction) must
+also regenerate — and thereby review — the file.
 """
 from __future__ import annotations
 
@@ -43,7 +46,7 @@ REPO = pathlib.Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(REPO / "src"))
 sys.path.insert(0, str(REPO))
 
-BASELINE = REPO / "BENCH_PR8.json"
+BASELINE = REPO / "BENCH_PR9.json"
 
 #: |fresh - baseline| tolerance for token-agreement fractions: exact on
 #: one platform, but argmax near-ties may flip across jax/BLAS builds
@@ -60,6 +63,13 @@ MIN_SPEC_ACCEPTED_PER_PASS = 1.0
 #: acceptance depends on argmax near-ties and gets the loose tol.
 SPEC_FULL_TOL = 0.05
 SPEC_SHALLOW_TOL = 0.5
+#: hard floor (acceptance criterion): int8 weights must cut the param
+#: bytes each decoded token streams by >= 1.5x (embed/unembed stay f32,
+#: so the full 4x is not on the table)
+MIN_WEIGHT_BYTES_REDUCTION = 1.5
+#: hard floor (acceptance criterion): int8-weight greedy streams on the
+#: mamba benchmark model must agree with f32 weights at >= this fraction
+MIN_WEIGHT_AGREEMENT = 0.75
 
 
 def _kernel_vs_oracle():
@@ -182,6 +192,8 @@ def collect():
         arch="mamba-130m", slots=4, requests=8, max_new=16, quiet=True)
     prefix = st.prefix_cache_comparison(
         arch="mamba-130m", slots=4, requests=8, max_new=12, quiet=True)
+    wq = st.weight_dtype_comparison(
+        arch="mamba-130m", slots=4, requests=8, max_new=16, quiet=True)
     sharded, sharded_full = _collect_sharded()
     kernel = _kernel_vs_oracle()
 
@@ -253,6 +265,21 @@ def collect():
             "launches_per_token": mega["launches_megakernel"],
             "fused_launches_per_token": mega["launches_fused"],
         },
+        # quantized weights: the PR 9 gate — weight-bytes-per-token is a
+        # deterministic layout count (param leaf nbytes), the slot-state
+        # layout must be untouched (asserted inside the comparison), and
+        # agreement vs f32 weights is floor- and drift-gated
+        "weight_quant": {
+            "useful_tokens": wq["int8"]["useful_tokens"],
+            "weight_bytes_per_token_f32":
+                wq["f32"]["weight_bytes_per_token"],
+            "weight_bytes_per_token_int8":
+                wq["int8"]["weight_bytes_per_token"],
+            "bytes_reduction": round(wq["reduction"], 3),
+            "state_bytes_per_slot": wq["int8"]["state_bytes_per_slot"],
+            "token_agreement_vs_f32": round(
+                wq["int8"]["token_agreement_vs_f32"], 4),
+        },
         # tensor-parallel sharded serving: the PR 8 gate — token
         # identity, no-per-step-resharding and per-device capacity are
         # asserted inside the (subprocess) comparison; the collective
@@ -264,6 +291,7 @@ def collect():
             "fused_tps": round(fused["fused_tps"], 1),
             "unfused_tps": round(fused["unfused_tps"], 1),
             "megakernel_tps": round(mega["megakernel_tps"], 1),
+            "weight_int8_tps": round(wq["int8"]["tokens_per_s"], 1),
             "spec_full_tps": round(spec["spec_full"]["tokens_per_s"], 1),
             "plain_tps": round(spec["plain"]["tokens_per_s"], 1),
             "sharded_tps": round(sharded_full["sharded_tps"], 1),
@@ -376,6 +404,33 @@ def compare(fresh: dict, base: dict) -> list[str]:
             chk(mk_f[key] == mk_b[key],
                 f"megakernel.{key}: fresh {mk_f[key]} != "
                 f"baseline {mk_b[key]}")
+    # quantized weights: hard floors (bytes reduction, agreement) plus
+    # exact equality with the baseline for the layout counts — param
+    # bytes are static properties of the quantization recipe
+    wq_f, wq_b = fresh.get("weight_quant"), base.get("weight_quant")
+    if wq_f is None or wq_b is None:
+        fails.append("weight_quant section present only in "
+                     f"{'baseline' if wq_f is None else 'fresh'}")
+    else:
+        chk(wq_f["bytes_reduction"] >= MIN_WEIGHT_BYTES_REDUCTION,
+            f"int8 weight-bytes reduction {wq_f['bytes_reduction']}x "
+            f"< required {MIN_WEIGHT_BYTES_REDUCTION}x")
+        chk(wq_f["token_agreement_vs_f32"] >= MIN_WEIGHT_AGREEMENT,
+            f"int8-weight token agreement "
+            f"{wq_f['token_agreement_vs_f32']} < floor "
+            f"{MIN_WEIGHT_AGREEMENT}")
+        for key in ("useful_tokens", "weight_bytes_per_token_f32",
+                    "weight_bytes_per_token_int8", "state_bytes_per_slot"):
+            chk(wq_f[key] == wq_b[key],
+                f"weight_quant.{key}: fresh {wq_f[key]} != "
+                f"baseline {wq_b[key]}")
+        da = abs(wq_f["token_agreement_vs_f32"]
+                 - wq_b["token_agreement_vs_f32"])
+        chk(da <= AGREEMENT_TOL,
+            f"weight_quant.token_agreement_vs_f32 drifted {da:.3f} "
+            f"(> {AGREEMENT_TOL}): fresh "
+            f"{wq_f['token_agreement_vs_f32']} vs baseline "
+            f"{wq_b['token_agreement_vs_f32']}")
     # tensor-parallel sharded serving: hard invariants (token identity,
     # no per-step resharding, per-device bytes strictly below the
     # single-device pool) plus exact equality with the baseline for the
@@ -487,6 +542,14 @@ def main():
           f"without (must be strictly less), best-of-"
           f"{pc['bestofn_n']}: {pc['bestofn_distinct']} distinct "
           f"branches")
+    wq = fresh["weight_quant"]
+    print(f"[bench_ci] weight quant: "
+          f"{wq['weight_bytes_per_token_int8']} weight B/token vs "
+          f"{wq['weight_bytes_per_token_f32']} f32 "
+          f"({wq['bytes_reduction']}x reduction, floor "
+          f"{MIN_WEIGHT_BYTES_REDUCTION}x), agreement "
+          f"{wq['token_agreement_vs_f32']} (floor "
+          f"{MIN_WEIGHT_AGREEMENT})")
     sh = fresh["sharded_serving"]
     print(f"[bench_ci] sharded serving: tp={sh['tp']}, tokens identical "
           f"{sh['tokens_identical']}, no per-step resharding "

@@ -95,6 +95,14 @@ class ModelConfig:
     #: fixes the MHA decode_32k cells that exceed 16 GB/chip)
     kv_cache_dtype: str = "model"
 
+    #: Weight storage dtype: "f32" (params as handed in) | "int8"
+    #: (per-output-channel absmax codes with f32 scale leaves riding the
+    #: same pytree — see core/weight_quant.py).  Dense projections and
+    #: mamba's A dequantize where they are consumed — inside the decode
+    #: kernels for fused/megakernel steps — so decode streams ~4x fewer
+    #: weight bytes per token; embed/unembed/MoE stay f32.
+    weight_dtype: str = "f32"
+
     #: Recurrent-state storage dtype for the pooled decode state
     #: ("f32" | "bf16" | "int8" | "fp8").  int8/fp8 store the SSM h (and
     #: xLSTM matrix memory C) with per-slot-per-layer-per-channel-group

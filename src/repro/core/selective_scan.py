@@ -189,18 +189,28 @@ def resolve_cell_impl(name: str, needs_pallas: bool = True) -> str:
 
 def decode_step(h, x_t, dt_t, A, B_t, C_t, D=None, z_t=None,
                 impl: str = "xla",
-                exp_impl: str = "exact", silu_impl: str = "exact"):
+                exp_impl: str = "exact", silu_impl: str = "exact",
+                a_scale=None):
     """One fused-or-reference SSM decode step over the (pooled) batch.
 
     h (b, d, n) f32; x_t/dt_t (b, d); A (d, n); B_t/C_t (b, n).
     Returns (y (b, d), h_new (b, d, n) f32).  ``impl="fused"`` runs the
     single-launch Pallas kernel (interpret-mode on CPU); "xla" the
-    pure-jnp reference with identical semantics."""
+    pure-jnp reference with identical semantics.
+
+    ``a_scale`` (d,) marks A as int8 weight codes (cfg.weight_dtype):
+    the fused kernel dequantizes in its dequant phase; the XLA path runs
+    the identical ``weight_quant.dequantize_rows`` multiply up front, so
+    both impls consume bit-identical A values."""
+    if a_scale is not None and impl == "xla":
+        from repro.core import weight_quant
+        A = weight_quant.dequantize_rows(A, a_scale)
+        a_scale = None
     if impl in ("fused", "pallas"):
         from repro.kernels import decode_step as dsk   # lazy: import cycle
         return dsk.selective_state_step(
             h, x_t, dt_t, A, B_t, C_t, D=D, z_t=z_t,
-            exp_impl=exp_impl, silu_impl=silu_impl)
+            exp_impl=exp_impl, silu_impl=silu_impl, a_scale=a_scale)
     if impl != "xla":
         # "auto" must go through resolve_step_impl first; a typo or raw
         # cfg string silently falling back to the unfused path would eat
@@ -213,7 +223,8 @@ def decode_step(h, x_t, dt_t, A, B_t, C_t, D=None, z_t=None,
 
 def decode_step_q(hq, h_scale, x_t, dt_t, A, B_t, C_t, D=None, z_t=None,
                   state_dtype: str = "int8", impl: str = "xla",
-                  exp_impl: str = "exact", silu_impl: str = "exact"):
+                  exp_impl: str = "exact", silu_impl: str = "exact",
+                  a_scale=None):
     """Quantized-state decode step (cfg.state_dtype in {int8, fp8}).
 
     hq (b, d, n) storage payload, h_scale (b, g) f32 group scales (see
@@ -223,12 +234,16 @@ def decode_step_q(hq, h_scale, x_t, dt_t, A, B_t, C_t, D=None, z_t=None,
     (the two match to within one quantization code — XLA may contract
     da*h + dbx into an FMA, which can flip a value sitting exactly on a
     rounding boundary)."""
+    if a_scale is not None and impl == "xla":
+        from repro.core import weight_quant
+        A = weight_quant.dequantize_rows(A, a_scale)
+        a_scale = None
     if impl in ("fused", "pallas"):
         from repro.kernels import decode_step as dsk   # lazy: import cycle
         return dsk.selective_state_step_q(
             hq, h_scale, x_t, dt_t, A, B_t, C_t, D=D, z_t=z_t,
             state_dtype=state_dtype, exp_impl=exp_impl,
-            silu_impl=silu_impl)
+            silu_impl=silu_impl, a_scale=a_scale)
     if impl != "xla":
         raise KeyError(f"unknown step impl {impl!r}")
     return kref.selective_state_step_q(
@@ -251,7 +266,8 @@ def decode_step_q(hq, h_scale, x_t, dt_t, A, B_t, C_t, D=None, z_t=None,
 
 def decode_scan(h, x_seq, dt_seq, A, B_seq, C_seq, D=None, z_seq=None,
                 impl: str = "xla",
-                exp_impl: str = "exact", silu_impl: str = "exact"):
+                exp_impl: str = "exact", silu_impl: str = "exact",
+                a_scale=None):
     """Chain ``decode_step`` over a K-token window.
 
     h (b, d, n) f32 start state; x_seq/dt_seq (b, K, d); B_seq/C_seq
@@ -265,7 +281,7 @@ def decode_scan(h, x_seq, dt_seq, A, B_seq, C_seq, D=None, z_seq=None,
         z_t = inp[4] if has_z else None
         y, h_new = decode_step(h_c, x_t, dt_t, A, B_t, C_t, D=D, z_t=z_t,
                                impl=impl, exp_impl=exp_impl,
-                               silu_impl=silu_impl)
+                               silu_impl=silu_impl, a_scale=a_scale)
         return h_new, (y, h_new)
 
     seqs = (x_seq, dt_seq, B_seq, C_seq) + ((z_seq,) if has_z else ())
@@ -276,7 +292,8 @@ def decode_scan(h, x_seq, dt_seq, A, B_seq, C_seq, D=None, z_seq=None,
 
 def decode_scan_q(hq, h_scale, x_seq, dt_seq, A, B_seq, C_seq, D=None,
                   z_seq=None, state_dtype: str = "int8", impl: str = "xla",
-                  exp_impl: str = "exact", silu_impl: str = "exact"):
+                  exp_impl: str = "exact", silu_impl: str = "exact",
+                  a_scale=None):
     """Quantized-state K-step micro-scan: chains ``decode_step_q`` so the
     storage round-trip (dequant on read, decayed-absmax requant on
     write) happens per step exactly as in serving — the per-step
@@ -294,7 +311,7 @@ def decode_scan_q(hq, h_scale, x_seq, dt_seq, A, B_seq, C_seq, D=None,
         y, hq_new, s_new = decode_step_q(
             hq_c, s_c, x_t, dt_t, A, B_t, C_t, D=D, z_t=z_t,
             state_dtype=state_dtype, impl=impl, exp_impl=exp_impl,
-            silu_impl=silu_impl)
+            silu_impl=silu_impl, a_scale=a_scale)
         return (hq_new, s_new), (y, hq_new, s_new)
 
     seqs = (x_seq, dt_seq, B_seq, C_seq) + ((z_seq,) if has_z else ())

@@ -1,0 +1,203 @@
+"""Quantized weight storage (cfg.weight_dtype): W8A8 decode.
+
+Single-token decode is memory-bound and PR 3's state quantization only
+cut the *state* stream — the weights still ride HBM at f32 every token,
+which is the dominant bandwidth term MARCA's buffer-management analysis
+targets.  FastMamba (W8A8 FPGA Mamba) and eMamba both show per-channel
+int8 weights hold Mamba accuracy, so the dense projection matrices (and
+mamba's A) are stored int8 with f32 absmax scales; the matmul inputs
+dequantize where they are consumed — inside the decode kernels for the
+fused and megakernel paths.
+
+The quantization is deliberately DECODE-side: prefill is compute-bound
+and touches the weights once per request, so the serving engine keeps
+the caller's f32 tree aliased for prefill (``Engine.prefill_params``)
+and streams the int8 tree only on the per-token decode/verify path
+where the bandwidth win lives.  That also means a request's first
+token (sampled from prefill logits) is exact, and quantization error
+only enters through per-decode-step rounding.
+
+Scale layout
+------------
+Same leaf-travels-with-scale invariant as ``core.state_quant``: a
+quantized payload's f32 scale lives as a SIBLING pytree leaf ("w" gets
+"w_scale" next to it; mamba's "A_log" becomes "A_q" + "A_scale"), so
+every tree operation the serving stack performs — stacked-layer vmap
+init, megakernel restacking, draft-view slicing (``p["layers"][:n]``),
+mesh device_put — moves payload and scale together with no special
+cases.
+
+Granularity is per OUTPUT channel for dense ``w`` (absmax over the
+input dim, one scale per column: each output feature keeps its own
+dynamic range, the standard W8A8 recipe) and per row for mamba's
+``A = -exp(A_log)`` (one scale per d_inner channel over its d_state
+entries — matching the decode kernels' channel blocking so in-kernel
+dequant is grid-local).  Weights are static, so scales are one-shot
+absmax — no running update, no EMA.
+
+Sharding: a scale leaf's logical axes are derived from its payload's
+(``axes[:-2] + (axes[-1],)`` for dense, ``axes[:-1]`` for A), so under
+a TP mesh the scales shard on the same "model" axes as the output
+channels they describe and every matmul stays shard-local.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.parallel import sharding
+
+#: storage dtypes accepted by cfg.weight_dtype
+WEIGHT_DTYPES = ("f32", "int8")
+
+#: largest int8 code magnitude the absmax is mapped to (symmetric)
+QMAX = 127.0
+
+#: absmax floor — an all-zero column still gets a positive scale so
+#: quantization never divides by zero
+EPS_AMAX = 1e-30
+
+#: param subtrees the quantization walk must NOT descend into:
+#: embed/unembed are consumed as raw matrices (tied-embedding transpose,
+#: direct ``p["w"]`` access in unembed_apply), and MoE expert weights /
+#: the router feed shard_map einsums that index the dict directly.
+SKIP_KEYS = frozenset({"embed", "unembed", "moe", "router"})
+
+
+def is_quantized(weight_dtype: str) -> bool:
+    """True for the scale-carrying dtypes; f32 is the baseline."""
+    if weight_dtype not in WEIGHT_DTYPES:
+        raise KeyError(
+            f"unknown weight_dtype {weight_dtype!r}; one of {WEIGHT_DTYPES}")
+    return weight_dtype == "int8"
+
+
+def storage_dtype(weight_dtype: str):
+    """jnp dtype the weight payload is stored as."""
+    if weight_dtype not in WEIGHT_DTYPES:
+        raise KeyError(
+            f"unknown weight_dtype {weight_dtype!r}; one of {WEIGHT_DTYPES}")
+    return {"f32": jnp.float32, "int8": jnp.int8}[weight_dtype]
+
+
+# ---------------------------------------------------------------------------
+# Dense matrices: (..., d_in, d_out) payload, (..., d_out) scales
+# ---------------------------------------------------------------------------
+
+def quantize_w(w):
+    """Per-output-channel symmetric absmax: (..., d_in, d_out) ->
+    (int8 codes, f32 scale (..., d_out)).  Works unchanged on stacked
+    leaves ((L, d_in, d_out) -> (L, d_out) scales)."""
+    wf = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=-2)
+    scale = jnp.maximum(amax, EPS_AMAX) / QMAX
+    codes = jnp.clip(jnp.round(wf / scale[..., None, :]),
+                     -QMAX, QMAX).astype(jnp.int8)
+    return codes, scale
+
+
+def dequantize_w(q, scale):
+    """Inverse of quantize_w (up to rounding): (..., d_in, d_out) f32."""
+    return q.astype(jnp.float32) * scale[..., None, :]
+
+
+# ---------------------------------------------------------------------------
+# Row-scaled matrices (mamba A): (..., r, c) payload, (..., r) scales
+# ---------------------------------------------------------------------------
+
+def quantize_rows(x):
+    """Per-row symmetric absmax over the LAST axis: (..., r, c) ->
+    (int8 codes, f32 scale (..., r)).  For mamba's A (d_inner, d_state)
+    each d_inner channel keeps its own range — the orientation the
+    decode kernels' channel blocking dequantizes grid-locally."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.maximum(amax, EPS_AMAX) / QMAX
+    codes = jnp.clip(jnp.round(xf / scale[..., None]),
+                     -QMAX, QMAX).astype(jnp.int8)
+    return codes, scale
+
+
+def dequantize_rows(q, scale):
+    """Inverse of quantize_rows (up to rounding): f32.  This is THE
+    scale multiply — the fused kernel's dequant phase, the megakernel
+    body, and the XLA reference all compute exactly ``code_f32 * scale``
+    per element, so the three step impls see bit-identical A values."""
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+# ---------------------------------------------------------------------------
+# Param-tree transform
+# ---------------------------------------------------------------------------
+
+def _is_param(x):
+    return isinstance(x, sharding.Param)
+
+
+def _val(x):
+    return x.value if _is_param(x) else x
+
+
+def _dense_like(node):
+    """A blocks.dense param dict: {"w": (..., d_in, d_out)} (+ "b")."""
+    if not isinstance(node, dict) or "w" not in node:
+        return False
+    if not set(node) <= {"w", "b"}:
+        return False
+    return getattr(_val(node["w"]), "ndim", 0) >= 2
+
+
+def _quantize_dense(node):
+    w = node["w"]
+    q, s = quantize_w(_val(w))
+    if _is_param(w):
+        out = {"w": sharding.Param(q, w.axes),
+               "w_scale": sharding.Param(s, w.axes[:-2] + (w.axes[-1],))}
+    else:
+        out = {"w": q, "w_scale": s}
+    if "b" in node:
+        out["b"] = node["b"]
+    return out
+
+
+def _quantize_a(a_log):
+    """mamba A_log -> (A_q, A_scale): codes of A = -exp(A_log)."""
+    q, s = quantize_rows(-jnp.exp(_val(a_log).astype(jnp.float32)))
+    if _is_param(a_log):
+        return (sharding.Param(q, a_log.axes),
+                sharding.Param(s, a_log.axes[:-1]))
+    return q, s
+
+
+def quantize_tree(params):
+    """Quantize every dense projection (and mamba A) in a param tree.
+
+    Works on Param trees (init path: scale leaves get derived logical
+    axes) and plain-value trees (serving path: Engine quantizing the
+    caller's weights) alike, and under ``jax.eval_shape`` (abstract
+    params keep structural parity with real ones).  Subtrees under
+    ``SKIP_KEYS`` and non-dense leaves (norms, biases, convs, einsum
+    weights) pass through untouched at f32.  Raises on an
+    already-quantized tree — double-quantization silently destroys the
+    weights."""
+    def rec(node):
+        if isinstance(node, dict):
+            if "w_scale" in node or "A_q" in node:
+                raise ValueError(
+                    "param tree is already weight-quantized "
+                    "(found w_scale/A_q leaves)")
+            if _dense_like(node):
+                return _quantize_dense(node)
+            out = {}
+            for k, v in node.items():
+                if k in SKIP_KEYS:
+                    out[k] = v
+                elif k == "A_log":
+                    out["A_q"], out["A_scale"] = _quantize_a(v)
+                else:
+                    out[k] = rec(v)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(rec(v) for v in node)
+        return node
+
+    return rec(params)

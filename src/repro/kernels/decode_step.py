@@ -69,13 +69,24 @@ class CellSkeleton:
     ``state_update(state, ins) -> state_new``;
     ``contract(state_new, ins) -> y``;
     ``gate(y, state_new, ins) -> y`` (None = identity).  ``state`` is an
-    array or tuple of arrays; ``ins`` a dict of per-token inputs."""
+    array or tuple of arrays; ``ins`` a dict of per-token inputs.
+
+    ``dequant(ins) -> ins`` (None = identity) is a fourth, *leading*
+    phase: when weights are stored quantized (cfg.weight_dtype="int8")
+    the per-channel scale multiply expanding int8 codes into the f32
+    operands the other phases consume runs here — inside the kernel, on
+    the grid cell's own weight block — so weight bytes cross HBM at
+    int8.  In MARCA terms, one more reconfigured PE mode ahead of the
+    FMA."""
     name: str
     state_update: Callable
     contract: Callable
     gate: Optional[Callable] = None
+    dequant: Optional[Callable] = None
 
     def __call__(self, state, ins):
+        if self.dequant is not None:
+            ins = self.dequant(ins)
         state_new = self.state_update(state, ins)
         y = self.contract(state_new, ins)
         if self.gate is not None:
@@ -85,12 +96,25 @@ class CellSkeleton:
 
 @functools.lru_cache(maxsize=None)
 def s6_cell(exp_impl: str, silu_impl: str, has_d: bool,
-            has_z: bool) -> CellSkeleton:
+            has_z: bool, wq: bool = False) -> CellSkeleton:
     """The mamba/jamba selective-SSM cell.  State (..., N, D) f32; ins:
     x/dt (..., D), at (N, D) [A transposed], b/c (..., N), d (D,)|None,
-    z (..., D)|None — all f32."""
+    z (..., D)|None — all f32.
+
+    ``wq=True``: ``at`` holds int8 codes cast to f32 and ``ins`` carries
+    ``at_scale`` (D,) — the per-d_inner-channel absmax scales from
+    core.weight_quant — which the dequant phase multiplies back in.  The
+    broadcasting serves the per-layer kernel's (N, BD) block and the
+    megakernel's (n, d_inner) slice with the same line, and the multiply
+    is element-for-element the one ``weight_quant.dequantize_rows`` runs
+    on the XLA path, so all step impls see bit-identical A."""
     exp = approx.get_exp(exp_impl)
     silu = approx.get_silu(silu_impl)
+
+    def dequant(ins):
+        out = dict(ins)
+        out["at"] = ins["at"] * ins["at_scale"][..., None, :]
+        return out
 
     def state_update(h, ins):
         da = exp(ins["dt"][..., None, :] * ins["at"])     # EW + "shift"
@@ -110,7 +134,8 @@ def s6_cell(exp_impl: str, silu_impl: str, has_d: bool,
         return y
 
     return CellSkeleton("s6", state_update, contract,
-                        gate if (has_d or has_z) else None)
+                        gate if (has_d or has_z) else None,
+                        dequant if wq else None)
 
 
 @functools.lru_cache(maxsize=None)
@@ -171,12 +196,16 @@ def slstm_cell() -> CellSkeleton:
     return CellSkeleton("slstm", state_update, contract, gate)
 
 
-def _chain(h, x_ref, dt_ref, at_ref, b_ref, c_ref, d_ref, z_ref, *,
-           exp_impl: str, silu_impl: str, has_d: bool, has_z: bool):
+def _chain(h, x_ref, dt_ref, at_ref, at_scale_ref, b_ref, c_ref, d_ref,
+           z_ref, *, exp_impl: str, silu_impl: str, has_d: bool,
+           has_z: bool, wq: bool):
     """The fused per-token chain on one (slot, D-block) grid cell:
     block loads + f32 casts around the S6 cell skeleton.
-    h (N, BD) f32 already dequantized; returns (y (BD,), h_new (N, BD))."""
-    cell = s6_cell(exp_impl, silu_impl, has_d, has_z)
+    h (N, BD) f32 already dequantized; with ``wq`` the At block holds
+    int8 codes and at_scale_ref the (1, BD) per-channel scales the
+    cell's dequant phase expands them with.
+    Returns (y (BD,), h_new (N, BD))."""
+    cell = s6_cell(exp_impl, silu_impl, has_d, has_z, wq)
     ins = {
         "x": x_ref[0, :].astype(jnp.float32),          # (BD,)
         "dt": dt_ref[0, :].astype(jnp.float32),        # (BD,)
@@ -186,24 +215,26 @@ def _chain(h, x_ref, dt_ref, at_ref, b_ref, c_ref, d_ref, z_ref, *,
         "d": d_ref[0, :].astype(jnp.float32) if has_d else None,
         "z": z_ref[0, :].astype(jnp.float32) if has_z else None,
     }
+    if wq:
+        ins["at_scale"] = at_scale_ref[0, :].astype(jnp.float32)  # (BD,)
     return cell(h, ins)
 
 
-def _step_kernel(h_ref, x_ref, dt_ref, at_ref, b_ref, c_ref, d_ref, z_ref,
-                 y_ref, hout_ref, *, exp_impl: str, silu_impl: str,
-                 has_d: bool, has_z: bool):
+def _step_kernel(h_ref, x_ref, dt_ref, at_ref, at_scale_ref, b_ref, c_ref,
+                 d_ref, z_ref, y_ref, hout_ref, *, exp_impl: str,
+                 silu_impl: str, has_d: bool, has_z: bool, wq: bool):
     h = h_ref[0].astype(jnp.float32)               # (N, BD)
-    y, h_new = _chain(h, x_ref, dt_ref, at_ref, b_ref, c_ref, d_ref,
-                      z_ref, exp_impl=exp_impl, silu_impl=silu_impl,
-                      has_d=has_d, has_z=has_z)
+    y, h_new = _chain(h, x_ref, dt_ref, at_ref, at_scale_ref, b_ref, c_ref,
+                      d_ref, z_ref, exp_impl=exp_impl, silu_impl=silu_impl,
+                      has_d=has_d, has_z=has_z, wq=wq)
     y_ref[0, :] = y.astype(y_ref.dtype)
     hout_ref[0] = h_new.astype(hout_ref.dtype)
 
 
-def _step_kernel_q(h_ref, scale_ref, x_ref, dt_ref, at_ref, b_ref, c_ref,
-                   d_ref, z_ref, y_ref, hout_ref, scale_out_ref, *,
-                   exp_impl: str, silu_impl: str, has_d: bool, has_z: bool,
-                   state_dtype: str):
+def _step_kernel_q(h_ref, scale_ref, x_ref, dt_ref, at_ref, at_scale_ref,
+                   b_ref, c_ref, d_ref, z_ref, y_ref, hout_ref,
+                   scale_out_ref, *, exp_impl: str, silu_impl: str,
+                   has_d: bool, has_z: bool, state_dtype: str, wq: bool):
     """Quantized-state variant: the int8/fp8 payload is dequantized on
     read and requantized on write *inside* the kernel, so the f32 state
     lives only in VMEM/registers — never in HBM.  Each grid cell owns
@@ -211,9 +242,9 @@ def _step_kernel_q(h_ref, scale_ref, x_ref, dt_ref, at_ref, b_ref, c_ref,
     the running-absmax update needs no cross-block reduction."""
     s_in = scale_ref[0, 0]
     h = h_ref[0].astype(jnp.float32) * s_in        # dequant on read
-    y, h_new = _chain(h, x_ref, dt_ref, at_ref, b_ref, c_ref, d_ref,
-                      z_ref, exp_impl=exp_impl, silu_impl=silu_impl,
-                      has_d=has_d, has_z=has_z)
+    y, h_new = _chain(h, x_ref, dt_ref, at_ref, at_scale_ref, b_ref, c_ref,
+                      d_ref, z_ref, exp_impl=exp_impl, silu_impl=silu_impl,
+                      has_d=has_d, has_z=has_z, wq=wq)
     y_ref[0, :] = y.astype(y_ref.dtype)
     amax = jnp.max(jnp.abs(h_new))
     s_out = state_quant.update_scale(amax, s_in, state_dtype)
@@ -224,13 +255,16 @@ def _step_kernel_q(h_ref, scale_ref, x_ref, dt_ref, at_ref, b_ref, c_ref,
 @functools.partial(
     jax.jit,
     static_argnames=("block_d", "exp_impl", "silu_impl", "interpret"))
-def _step_padded(h, x_t, dt_t, at, b_t, c_t, d_skip, z_t,
+def _step_padded(h, x_t, dt_t, at, at_scale, b_t, c_t, d_skip, z_t,
                  block_d: int, exp_impl: str, silu_impl: str,
                  interpret: bool):
-    """All channel-dim inputs pre-padded: D % block_d == 0."""
+    """All channel-dim inputs pre-padded: D % block_d == 0.  ``at_scale``
+    (1, D) rides the same d_skip-style per-channel blocking; None means
+    f32 weights (placeholder block, dequant phase compiled out)."""
     bsz, n, d_in = h.shape
     has_d = d_skip is not None
     has_z = z_t is not None
+    wq = at_scale is not None
     grid = (bsz, d_in // block_d)
 
     def _row(_):
@@ -240,10 +274,19 @@ def _step_padded(h, x_t, dt_t, at, b_t, c_t, d_skip, z_t,
         pl.BlockSpec((1, n, block_d), lambda bb, dd: (bb, 0, dd)),   # h
         _row("x"), _row("dt"),
         pl.BlockSpec((n, block_d), lambda bb, dd: (0, dd)),          # At
+    ]
+    args = [h, x_t, dt_t, at]
+    if wq:
+        in_specs.append(pl.BlockSpec((1, block_d), lambda bb, dd: (0, dd)))
+        args.append(at_scale)
+    else:
+        in_specs.append(pl.BlockSpec((1, 1), lambda bb, dd: (0, 0)))
+        args.append(jnp.zeros((1, 1), jnp.float32))
+    in_specs += [
         pl.BlockSpec((1, n), lambda bb, dd: (bb, 0)),                # B_t
         pl.BlockSpec((1, n), lambda bb, dd: (bb, 0)),                # C_t
     ]
-    args = [h, x_t, dt_t, at, b_t, c_t]
+    args += [b_t, c_t]
     if has_d:
         in_specs.append(pl.BlockSpec((1, block_d), lambda bb, dd: (0, dd)))
         args.append(d_skip)
@@ -268,7 +311,7 @@ def _step_padded(h, x_t, dt_t, at, b_t, c_t, d_skip, z_t,
 
     kernel = functools.partial(
         _step_kernel, exp_impl=exp_impl, silu_impl=silu_impl,
-        has_d=has_d, has_z=has_z)
+        has_d=has_d, has_z=has_z, wq=wq)
 
     return pl.pallas_call(
         kernel,
@@ -287,14 +330,16 @@ def _step_padded(h, x_t, dt_t, at, b_t, c_t, d_skip, z_t,
     jax.jit,
     static_argnames=("block_d", "exp_impl", "silu_impl", "state_dtype",
                      "interpret"))
-def _step_padded_q(h, h_scale, x_t, dt_t, at, b_t, c_t, d_skip, z_t,
-                   block_d: int, exp_impl: str, silu_impl: str,
+def _step_padded_q(h, h_scale, x_t, dt_t, at, at_scale, b_t, c_t, d_skip,
+                   z_t, block_d: int, exp_impl: str, silu_impl: str,
                    state_dtype: str, interpret: bool):
     """Quantized-state launch: D % block_d == 0 and the scale array has
-    exactly one entry per (slot, D-block)."""
+    exactly one entry per (slot, D-block).  ``at_scale`` as in
+    ``_step_padded`` — W8A8 composes with the quantized state."""
     bsz, n, d_in = h.shape
     has_d = d_skip is not None
     has_z = z_t is not None
+    wq = at_scale is not None
     g = d_in // block_d
     grid = (bsz, g)
 
@@ -306,10 +351,19 @@ def _step_padded_q(h, h_scale, x_t, dt_t, at, b_t, c_t, d_skip, z_t,
         pl.BlockSpec((1, 1), lambda bb, dd: (bb, dd)),               # scale
         _row("x"), _row("dt"),
         pl.BlockSpec((n, block_d), lambda bb, dd: (0, dd)),          # At
+    ]
+    args = [h, h_scale, x_t, dt_t, at]
+    if wq:
+        in_specs.append(pl.BlockSpec((1, block_d), lambda bb, dd: (0, dd)))
+        args.append(at_scale)
+    else:
+        in_specs.append(pl.BlockSpec((1, 1), lambda bb, dd: (0, 0)))
+        args.append(jnp.zeros((1, 1), jnp.float32))
+    in_specs += [
         pl.BlockSpec((1, n), lambda bb, dd: (bb, 0)),                # B_t
         pl.BlockSpec((1, n), lambda bb, dd: (bb, 0)),                # C_t
     ]
-    args = [h, h_scale, x_t, dt_t, at, b_t, c_t]
+    args += [b_t, c_t]
     if has_d:
         in_specs.append(pl.BlockSpec((1, block_d), lambda bb, dd: (0, dd)))
         args.append(d_skip)
@@ -337,7 +391,7 @@ def _step_padded_q(h, h_scale, x_t, dt_t, at, b_t, c_t, d_skip, z_t,
 
     kernel = functools.partial(
         _step_kernel_q, exp_impl=exp_impl, silu_impl=silu_impl,
-        has_d=has_d, has_z=has_z, state_dtype=state_dtype)
+        has_d=has_d, has_z=has_z, state_dtype=state_dtype, wq=wq)
 
     return pl.pallas_call(
         kernel,
@@ -449,6 +503,7 @@ def selective_state_step_q(hq, h_scale, x_t, dt_t, A, B_t, C_t, D=None,
                            z_t=None, state_dtype: str = "int8",
                            exp_impl: str = "exact",
                            silu_impl: str = "exact",
+                           a_scale=None,
                            interpret: bool | None = None):
     """Fused quantized-state decode step.  Same semantics as
     kernels.ref.selective_state_step_q.
@@ -477,11 +532,14 @@ def selective_state_step_q(hq, h_scale, x_t, dt_t, A, B_t, C_t, D=None,
 
     hp = jnp.pad(hq.swapaxes(1, 2), ((0, 0), (0, 0), (0, pad_d)))
     at = jnp.pad(A.astype(jnp.float32), ((0, pad_d), (0, 0))).T  # (n, Dp)
+    asp = (None if a_scale is None
+           else jnp.pad(a_scale.astype(jnp.float32),
+                        (0, pad_d)).reshape(1, -1))
     dp = (None if D is None
           else jnp.pad(D.astype(jnp.float32), (0, pad_d)).reshape(1, -1))
 
     y, hq_new, scale_new = _step_padded_q(
-        hp, h_scale, _pad_row(x_t), _pad_row(dt_t), at, B_t, C_t, dp,
+        hp, h_scale, _pad_row(x_t), _pad_row(dt_t), at, asp, B_t, C_t, dp,
         _pad_row(z_t), block_d=block_d, exp_impl=exp_impl,
         silu_impl=silu_impl, state_dtype=state_dtype, interpret=interpret)
     return (y[:, :d_in], hq_new[:, :, :d_in].swapaxes(1, 2), scale_new)
@@ -490,11 +548,15 @@ def selective_state_step_q(hq, h_scale, x_t, dt_t, A, B_t, C_t, D=None,
 def selective_state_step(h, x_t, dt_t, A, B_t, C_t, D=None, z_t=None,
                          block_d: int = 512,
                          exp_impl: str = "exact", silu_impl: str = "exact",
+                         a_scale=None,
                          interpret: bool | None = None):
     """Fused decode step.  Same semantics as kernels.ref.selective_state_step.
 
     h (b, d, n) f32 pooled state; x_t/dt_t (b, d); A (d, n); B_t/C_t (b, n);
     D (d,)|None; z_t (b, d)|None.
+    With ``a_scale`` (d,) set, A holds int8 codes (cfg.weight_dtype) and
+    the kernel's dequant phase expands them per channel in VMEM — the A
+    matrix streams from HBM at one byte per entry.
     Returns (y (b, d) in x_t.dtype, h_new (b, d, n) f32).
 
     ``interpret=None`` resolves per backend: compiled on TPU, the Pallas
@@ -515,11 +577,14 @@ def selective_state_step(h, x_t, dt_t, A, B_t, C_t, D=None, z_t=None,
     hp = jnp.pad(h.astype(jnp.float32).swapaxes(1, 2),
                  ((0, 0), (0, 0), (0, pad_d)))                  # (b, n, Dp)
     at = jnp.pad(A.astype(jnp.float32), ((0, pad_d), (0, 0))).T  # (n, Dp)
+    asp = (None if a_scale is None
+           else jnp.pad(a_scale.astype(jnp.float32),
+                        (0, pad_d)).reshape(1, -1))
     dp = (None if D is None
           else jnp.pad(D.astype(jnp.float32), (0, pad_d)).reshape(1, -1))
 
     y, h_new = _step_padded(
-        hp, _pad_row(x_t), _pad_row(dt_t), at, B_t, C_t, dp, _pad_row(z_t),
-        block_d=block_d, exp_impl=exp_impl, silu_impl=silu_impl,
-        interpret=interpret)
+        hp, _pad_row(x_t), _pad_row(dt_t), at, asp, B_t, C_t, dp,
+        _pad_row(z_t), block_d=block_d, exp_impl=exp_impl,
+        silu_impl=silu_impl, interpret=interpret)
     return y[:, :d_in], h_new[:, :, :d_in].swapaxes(1, 2)

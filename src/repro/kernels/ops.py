@@ -76,22 +76,25 @@ def selective_scan(x, dt, A, B, C, D=None, z=None, h0=None,
 
 def selective_state_step(h, x_t, dt_t, A, B_t, C_t, D=None, z_t=None,
                          impl: str = "xla",
-                         exp_impl: str = "exact", silu_impl: str = "exact"):
+                         exp_impl: str = "exact", silu_impl: str = "exact",
+                         a_scale=None):
     """Single-token decode step; impl in {xla, fused/pallas}.
 
     The fused impl is one Pallas launch for the whole state-update /
     contraction / gate chain (interpret-mode on CPU); xla is the ref.py
-    oracle with identical semantics."""
+    oracle with identical semantics.  ``a_scale`` (d,) marks A as int8
+    weight codes (cfg.weight_dtype="int8") dequantized at the point of
+    consumption — in-kernel for the fused impl."""
     from repro.core import selective_scan as css
     return css.decode_step(h, x_t, dt_t, A, B_t, C_t, D=D, z_t=z_t,
                            impl=impl, exp_impl=exp_impl,
-                           silu_impl=silu_impl)
+                           silu_impl=silu_impl, a_scale=a_scale)
 
 
 def selective_state_step_q(hq, h_scale, x_t, dt_t, A, B_t, C_t, D=None,
                            z_t=None, state_dtype: str = "int8",
                            impl: str = "xla", exp_impl: str = "exact",
-                           silu_impl: str = "exact"):
+                           silu_impl: str = "exact", a_scale=None):
     """Quantized-state single-token decode step; impl in {xla, fused}.
 
     Same chain as selective_state_step but the state payload stays in
@@ -101,7 +104,8 @@ def selective_state_step_q(hq, h_scale, x_t, dt_t, A, B_t, C_t, D=None,
     from repro.core import selective_scan as css
     return css.decode_step_q(hq, h_scale, x_t, dt_t, A, B_t, C_t, D=D,
                              z_t=z_t, state_dtype=state_dtype, impl=impl,
-                             exp_impl=exp_impl, silu_impl=silu_impl)
+                             exp_impl=exp_impl, silu_impl=silu_impl,
+                             a_scale=a_scale)
 
 
 def causal_conv1d(x, w, b=None, x_prev=None, impl: str = "xla"):

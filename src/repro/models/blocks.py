@@ -33,8 +33,18 @@ def dense_init(key, d_in, d_out, axes, bias=False, dtype=jnp.float32,
 
 
 def dense(p, x, compute_dtype=None):
-    """Apply-time: p is a PLAIN value tree (Params stripped by registry)."""
+    """Apply-time: p is a PLAIN value tree (Params stripped by registry).
+
+    When ``p`` carries a ``w_scale`` sibling (cfg.weight_dtype="int8"),
+    ``w`` holds per-output-channel int8 codes and is dequantized HERE —
+    at the point of consumption.  The megakernel bodies call this inside
+    their Pallas launch, so for the cross-layer decode path the int8 ->
+    f32 expansion happens in-kernel on the grid-local (per-layer) weight
+    block; the XLA reference and prefill paths run the identical scale
+    multiply, keeping all step impls on one scale math."""
     w = p["w"]
+    if "w_scale" in p:
+        w = w.astype(jnp.float32) * p["w_scale"]
     if compute_dtype is not None:
         w = w.astype(compute_dtype)
         x = x.astype(compute_dtype)

@@ -14,10 +14,22 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import approx, state_quant
+from repro.core import approx, state_quant, weight_quant
 from repro.kernels import ops
 from repro.models import blocks
 from repro.parallel.sharding import Param, constrain
+
+
+def _a_and_scale(p):
+    """The SSM A matrix as the step math consumes it: (A, a_scale).
+
+    f32 weights (no "A_q" leaf) recompute A = -exp(A_log) and carry no
+    scale; int8 weights (cfg.weight_dtype="int8") hand back the stored
+    codes plus their per-d_inner-channel scales, leaving the dequant to
+    the point of consumption — in-kernel for fused/megakernel steps."""
+    if "A_q" in p:
+        return p["A_q"], p["A_scale"]
+    return -jnp.exp(p["A_log"]), None
 
 
 def read_state_h(cfg, state):
@@ -99,7 +111,11 @@ def mamba_block_apply(cfg, p, x, state=None):
         impl=cfg.conv_impl)
     x_a = silu(x_c)
     dt, B, C = _ssm_inputs(cfg, p, x_a)
-    A = -jnp.exp(p["A_log"])
+    A, a_scale = _a_and_scale(p)
+    if a_scale is not None:
+        # prefill is compute-bound; dequant up front with the same
+        # multiply the decode kernels run in their dequant phase
+        A = weight_quant.dequantize_rows(A, a_scale)
     h0 = None if state is None else read_state_h(cfg, state)
     y, h_last = ops.selective_scan(
         x_a, dt, A, B, C, D=p["D"], z=z, h0=h0,
@@ -132,7 +148,7 @@ def mamba_block_step(cfg, p, x_t, state):
         impl=cfg.conv_impl)
     x_a = silu(x_c)
     dt, B, C = _ssm_inputs(cfg, p, x_a)
-    A = -jnp.exp(p["A_log"])
+    A, a_scale = _a_and_scale(p)
     impl = resolve_cell_impl(cfg.step_impl)
     if state_quant.is_quantized(cfg.state_dtype):
         # storage-dtype round-trip stays inside the step: dequant on
@@ -142,13 +158,14 @@ def mamba_block_step(cfg, p, x_t, state):
             state["h"], state["h_scale"], x_a[:, 0], dt[:, 0], A,
             B[:, 0], C[:, 0], D=p["D"], z_t=z[:, 0],
             state_dtype=cfg.state_dtype, impl=impl,
-            exp_impl=cfg.exp_impl, silu_impl=cfg.silu_impl)
+            exp_impl=cfg.exp_impl, silu_impl=cfg.silu_impl,
+            a_scale=a_scale)
         out = blocks.dense(p["out_proj"], y[:, None, :], x_t.dtype)
         return out, {"h": hq, "h_scale": scale, "conv": new_conv}
     y, h = ops.selective_state_step(
         read_state_h(cfg, state), x_a[:, 0], dt[:, 0], A, B[:, 0],
         C[:, 0], D=p["D"], z_t=z[:, 0], impl=impl,
-        exp_impl=cfg.exp_impl, silu_impl=cfg.silu_impl)
+        exp_impl=cfg.exp_impl, silu_impl=cfg.silu_impl, a_scale=a_scale)
     out = blocks.dense(p["out_proj"], y[:, None, :], x_t.dtype)
     return out, {**write_state_h(cfg, h), "conv": new_conv}
 
@@ -174,8 +191,10 @@ def mamba_block_megastep(cfg, p, x_t, state):
         x_in, p["conv_w"], p["conv_b"], x_prev=state["conv"])
     x_a = silu(x_c)
     dt, B, C = _ssm_inputs(cfg, p, x_a)
-    cell = dsk.s6_cell(cfg.exp_impl, cfg.silu_impl, True, True)
-    at = -jnp.exp(p["A_log"]).astype(jnp.float32).T      # (n, di)
+    A, a_scale = _a_and_scale(p)
+    wq = a_scale is not None
+    cell = dsk.s6_cell(cfg.exp_impl, cfg.silu_impl, True, True, wq)
+    at = A.astype(jnp.float32).T                         # (n, di)
     ins = {
         "x": x_a[:, 0].astype(jnp.float32),
         "dt": dt[:, 0].astype(jnp.float32),
@@ -185,6 +204,11 @@ def mamba_block_megastep(cfg, p, x_t, state):
         "d": p["D"].astype(jnp.float32),
         "z": z[:, 0].astype(jnp.float32),
     }
+    if wq:
+        # at holds int8 codes (transposed, cast f32); the cell's dequant
+        # phase multiplies the per-channel scales back in — inside the
+        # megakernel launch, on this layer's grid-local weight slice
+        ins["at_scale"] = a_scale.astype(jnp.float32)
     h = read_state_h(cfg, state).swapaxes(1, 2)          # (b, n, di)
     y, h_new = cell(h, ins)
     y = y.astype(x_a.dtype)
@@ -234,18 +258,20 @@ def mamba_block_verify(cfg, p, x, state):
     conv_all = _conv_tail_states(state["conv"], x_in)
     x_a = silu(x_c)
     dt, B, C = _ssm_inputs(cfg, p, x_a)
-    A = -jnp.exp(p["A_log"])
+    A, a_scale = _a_and_scale(p)
     impl = resolve_cell_impl(cfg.step_impl)
     if state_quant.is_quantized(cfg.state_dtype):
         y, hq_all, scale_all = decode_scan_q(
             state["h"], state["h_scale"], x_a, dt, A, B, C,
             D=p["D"], z_seq=z, state_dtype=cfg.state_dtype, impl=impl,
-            exp_impl=cfg.exp_impl, silu_impl=cfg.silu_impl)
+            exp_impl=cfg.exp_impl, silu_impl=cfg.silu_impl,
+            a_scale=a_scale)
         out = blocks.dense(p["out_proj"], y, x.dtype)
         return out, {"h": hq_all, "h_scale": scale_all, "conv": conv_all}
     y, h_all = decode_scan(
         read_state_h(cfg, state), x_a, dt, A, B, C, D=p["D"], z_seq=z,
-        impl=impl, exp_impl=cfg.exp_impl, silu_impl=cfg.silu_impl)
+        impl=impl, exp_impl=cfg.exp_impl, silu_impl=cfg.silu_impl,
+        a_scale=a_scale)
     out = blocks.dense(p["out_proj"], y, x.dtype)
     storage = state_quant.storage_dtype(cfg.state_dtype)
     return out, {"h": h_all.astype(storage), "conv": conv_all}

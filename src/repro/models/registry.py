@@ -39,13 +39,30 @@ def family(cfg):
 # ---------------------------------------------------------------------------
 
 def init_params(cfg, key):
-    return family(cfg).init(cfg, key)
+    from repro.core import weight_quant
+    p = family(cfg).init(cfg, key)
+    if weight_quant.is_quantized(cfg.weight_dtype):
+        p = weight_quant.quantize_tree(p)
+    return p
 
 
 def abstract_params(cfg):
-    """Param tree of ShapeDtypeStructs — Param.axes survive eval_shape."""
+    """Param tree of ShapeDtypeStructs — Param.axes survive eval_shape.
+    Routed through the quantizing ``init_params`` so the abstract tree
+    (and the shardings derived from it) matches the real one leaf for
+    leaf under any cfg.weight_dtype."""
     return jax.eval_shape(
-        lambda k: family(cfg).init(cfg, k), jax.random.key(0))
+        lambda k: init_params(cfg, k), jax.random.key(0))
+
+
+def quantize_params(cfg, values):
+    """Quantize a PLAIN-VALUE param tree per cfg.weight_dtype (no-op for
+    "f32").  Serving entry: the Engine hands f32 weights in and this
+    produces the int8+scale tree its jitted steps expect."""
+    from repro.core import weight_quant
+    if not weight_quant.is_quantized(cfg.weight_dtype):
+        return values
+    return weight_quant.quantize_tree(values)
 
 
 def init_cache(cfg, batch, max_seq, dtype=None):

@@ -261,6 +261,20 @@ class EngineConfig:
     # and kv_cache_dtype the per-position KV strips (which dominate
     # slot bytes at long max_seq).  None = keep the model config's.
     kv_cache_dtype: Optional[str] = None
+    # override for the weight storage dtype (cfg.weight_dtype):
+    # "f32" | "int8".  int8 quantizes the handed-in f32 params
+    # per output channel (core/weight_quant.py) so decode streams
+    # ~4x fewer weight bytes per token, dequantizing inside the
+    # fused/megakernel decode kernels; embed/unembed/MoE stay f32.
+    # The quantization is DECODE-side: prefill is compute-bound and
+    # runs once per request, so it keeps serving from the caller's
+    # f32 master weights (``Engine.prefill_params`` aliases them —
+    # no copy) while every per-token decode/verify step streams the
+    # int8 tree.  Composes with state_dtype/kv_cache_dtype (W8A8 +
+    # quantized state/KV) and with ``mesh`` (scale leaves shard with
+    # their payloads).  None = keep the model config's setting — the
+    # default leaves engines byte-identical to unquantized serving.
+    weight_dtype: Optional[str] = None
     # speculative decoding: None = plain decode bursts; a DraftConfig
     # turns every decode step into a fork -> K-draft -> batched-verify
     # -> rollback pass emitting 1..K+1 tokens per slot per target pass.
@@ -355,6 +369,22 @@ class Engine:
         if ecfg.kv_cache_dtype is not None:
             cfg = dataclasses.replace(cfg,
                                       kv_cache_dtype=ecfg.kv_cache_dtype)
+        prefill_params = params
+        if ecfg.weight_dtype is not None:
+            from repro.core import weight_quant
+            already = weight_quant.is_quantized(cfg.weight_dtype)
+            cfg = dataclasses.replace(cfg, weight_dtype=ecfg.weight_dtype)
+            if weight_quant.is_quantized(ecfg.weight_dtype) and not already:
+                # quantize BEFORE the mesh device_put below so sharded
+                # engines place the int8+scale tree (abstract_params
+                # reflects the quantized structure for the same cfg).
+                # prefill_params keeps aliasing the caller's f32 tree:
+                # weight quantization is a decode-bandwidth lever, and
+                # the compute-bound prefill stays exact on the master
+                # weights (a caller handing in an already-quantized
+                # tree has no f32 master, so prefill then dequantizes
+                # the codes like the XLA decode reference does)
+                params = registry.quantize_params(cfg, params)
         ecfg.default_params.validate()
         # tensor-parallel serving: place the weights once (shape-aware
         # specs — non-divisible dims fall back to replicated) and key
@@ -378,11 +408,23 @@ class Engine:
                 cfg = dataclasses.replace(cfg, moe_impl="dense")
             rules = ecfg.rules or sharding.ShardingRules()
             self._shard = (ecfg.mesh, rules)
+            distinct = prefill_params is not params
             params = jax.device_put(
                 params, sharding.tree_shardings(
                     registry.abstract_params(cfg), ecfg.mesh, rules))
+            if distinct:
+                # the f32 prefill master shards under the same rules as
+                # an unquantized engine's weights would
+                f32_cfg = dataclasses.replace(cfg, weight_dtype="f32")
+                prefill_params = jax.device_put(
+                    prefill_params, sharding.tree_shardings(
+                        registry.abstract_params(f32_cfg), ecfg.mesh,
+                        rules))
+            else:
+                prefill_params = params
         self.cfg = cfg
         self.params = params
+        self.prefill_params = prefill_params
         self.ecfg = ecfg
         # one scratch slot per live slot: every live slot can fork a
         # draft in the same speculative pass
@@ -605,19 +647,21 @@ class Engine:
                 # snapshot; the suffix scan below computes the rest
                 p_from = pc.cfg.block
                 snap = self._prefill_prefix(
-                    self.params, self.pool.fresh,
+                    self.prefill_params, self.pool.fresh,
                     jnp.asarray(prompt[None, :p_from]))
                 pc.insert(prompt[:p_from], snap)
         if snap is None:
             tok_dev, lp, tv, ti, last, new_pool = self._prefill(
-                self.params, self.pool.fresh, jnp.asarray(prompt[None]),
+                self.prefill_params, self.pool.fresh,
+                jnp.asarray(prompt[None]),
                 self.pool.cache, slot_arr, sp_row, step0)
             self.pool.cache = new_pool
         else:
             m = length - p_from
             fn = _jit_suffix_admit(self.cfg, m, self._shard)
             tok_dev, lp, tv, ti, last, new_pool, chain = fn(
-                self.params, snap, jnp.asarray(prompt[None, p_from:]),
+                self.prefill_params, snap,
+                jnp.asarray(prompt[None, p_from:]),
                 self.pool.cache, slot_arr, sp_row, step0)
             self.pool.cache = new_pool
             # chain index j is the state after prompt[:p_from + j + 1]

@@ -79,6 +79,7 @@ class ServeStats:
         self.prefix_cached_tokens = 0  # prompt tokens skipped via restore
         self.prefix_inserts = 0        # snapshots stored
         self.prefix_evictions = 0      # snapshots LRU-evicted
+        self.prefix_rejects = 0        # snapshots refused (> max_bytes)
         self.prefix_bytes = 0          # bytes currently resident
         self._ttft: list[float] = []
         self._latency: list[float] = []
@@ -140,6 +141,7 @@ class ServeStats:
         (the cache is the source of truth for its storage accounting)."""
         self.prefix_inserts = counters["inserts"]
         self.prefix_evictions = counters["evictions"]
+        self.prefix_rejects = counters.get("rejects", 0)
         self.prefix_bytes = counters["bytes"]
 
     def record_request(self, ttft: float, latency: float):
@@ -192,6 +194,7 @@ class ServeStats:
             "prefix_cached_tokens": self.prefix_cached_tokens,
             "prefix_inserts": self.prefix_inserts,
             "prefix_evictions": self.prefix_evictions,
+            "prefix_rejects": self.prefix_rejects,
             "prefix_bytes": self.prefix_bytes,
         }
 
@@ -216,8 +219,15 @@ class StragglerDetector:
             self.mean = (self.mean * (self.n - 1) + dt) / self.n
             self.var = max(self.var, (dt - self.mean) ** 2)
             return False
-        std = math.sqrt(self.var) if self.var > 0 else float("inf")
-        is_straggler = dt > self.mean + self.z * max(std, 1e-9)
+        # var == 0 after a constant-time warmup is legitimate, not a
+        # "not enough data" signal: an inf std would make the detector
+        # blind forever (the first genuine straggler passes unflagged
+        # AND corrupts the EMA mean/var).  Floor the std relative to
+        # the mean instead, so a step several times the steady rate
+        # always trips the z-threshold.
+        std = math.sqrt(self.var)
+        floor = max(1e-9, 0.05 * abs(self.mean))
+        is_straggler = dt > self.mean + self.z * max(std, floor)
         if is_straggler:
             self.flagged.append((step, dt))
         else:

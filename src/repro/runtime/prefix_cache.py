@@ -105,11 +105,14 @@ class PrefixCache:
         self.cfg = pcfg
         self._entries: "collections.OrderedDict[bytes, _Entry]" = \
             collections.OrderedDict()
-        self._pending: list[bytes] = []   # host-store: not yet offloaded
+        # host-store: not yet offloaded.  A deque: flush_pending drains
+        # from the left every sync, and list.pop(0) is O(n) per drain.
+        self._pending: "collections.deque[bytes]" = collections.deque()
         self.hits = 0
         self.misses = 0
         self.inserts = 0
         self.evictions = 0
+        self.rejects = 0                  # snapshots refused (> max_bytes)
         self._bytes = 0
 
     # -- keys & boundaries --------------------------------------------------
@@ -171,6 +174,14 @@ class PrefixCache:
             return
         ent = _Entry(snap=snap, n_tokens=len(prefix_tokens),
                      nbytes=_tree_bytes(snap), on_host=False)
+        if (self.cfg.max_bytes is not None
+                and ent.nbytes > self.cfg.max_bytes):
+            # a snapshot that can NEVER fit would first evict every
+            # older entry and then be evicted itself — a full-cache
+            # thrash with zero retained value.  Refuse it up front and
+            # count the refusal (surfaced via ServeStats.sync_prefix).
+            self.rejects += 1
+            return
         self._entries[key] = ent
         self._bytes += ent.nbytes
         self.inserts += 1
@@ -207,11 +218,16 @@ class PrefixCache:
         device round trip.  Returns the number offloaded."""
         done = 0
         while self._pending and (limit is None or done < limit):
-            key = self._pending.pop(0)
+            key = self._pending.popleft()
             ent = self._entries.get(key)
-            if ent is not None and not ent.on_host:
-                ent.snap = jax.device_get(ent.snap)
-                ent.on_host = True
+            if ent is None or ent.on_host:
+                # dead key (entry LRU-evicted since it was queued) or
+                # already offloaded: skip WITHOUT charging the limit —
+                # under churn a run of dead keys must not starve the
+                # live snapshots behind them of their offload slot.
+                continue
+            ent.snap = jax.device_get(ent.snap)
+            ent.on_host = True
             done += 1
         return done
 
@@ -220,4 +236,5 @@ class PrefixCache:
     def counters(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
                 "inserts": self.inserts, "evictions": self.evictions,
+                "rejects": self.rejects,
                 "entries": len(self._entries), "bytes": self._bytes}

@@ -119,6 +119,58 @@ def test_host_store_defers_offload_until_flush():
     assert isinstance(jax.tree.leaves(snap)[0], jnp.ndarray)
 
 
+def test_flush_pending_dead_keys_do_not_consume_limit():
+    """Regression: a queued key whose entry has since died (LRU-evicted
+    between queueing and the sync) must be skipped WITHOUT charging the
+    per-sync limit — previously a run of dead keys at the head of the
+    queue starved the live snapshots behind them of their offload slot,
+    leaving them device-resident indefinitely."""
+    pc = PrefixCache(PrefixCacheConfig(block=2, store="host"))
+    pc.insert(np.arange(2, dtype=np.int32), {"x": jnp.zeros((1, 2))})
+    # stale keys at the head of the queue (the eviction-while-pending
+    # interleaving, constructed directly)
+    pc._pending.appendleft(b"dead-1")
+    pc._pending.appendleft(b"dead-0")
+    assert pc.flush_pending(limit=1) == 1   # live snapshot offloaded
+    ent = next(iter(pc._entries.values()))
+    assert ent.on_host
+    assert not pc.has_pending()
+    # the drain structure is a deque: popleft is O(1) per sync, where
+    # the old list.pop(0) walked the whole queue
+    import collections
+    assert isinstance(pc._pending, collections.deque)
+
+
+def test_oversized_insert_refused_without_thrashing_cache():
+    """Regression: a snapshot larger than max_bytes can never be
+    retained — inserting it used to evict EVERY resident entry and then
+    evict itself (full-cache thrash, zero value).  It must be refused
+    up front, counted, and leave the cache untouched."""
+    pc = PrefixCache(PrefixCacheConfig(block=2, max_entries=100,
+                                       max_bytes=16))
+    for i in range(2):
+        pc.insert(np.arange(i, i + 2, dtype=np.int32),
+                  {"x": jnp.full((1, 2), i, jnp.float32)})   # 8 B each
+    assert len(pc) == 2 and pc.n_bytes == 16
+    pc.insert(np.arange(8, 10, dtype=np.int32),
+              {"x": jnp.zeros((1, 6), jnp.float32)})         # 24 B > cap
+    assert pc.rejects == 1 and pc.counters()["rejects"] == 1
+    assert len(pc) == 2 and pc.n_bytes == 16
+    assert pc.evictions == 0, "oversized insert must not thrash"
+    assert pc.lookup(np.arange(0, 3, dtype=np.int32)) is not None
+
+
+def test_serve_stats_surface_prefix_rejects():
+    """ServeStats.sync_prefix adopts the cache's reject counter and the
+    summary exposes it (the ops signal that max_bytes is mis-sized for
+    the model's snapshot footprint)."""
+    from repro.runtime.metrics import ServeStats
+    stats = ServeStats()
+    stats.sync_prefix({"inserts": 2, "evictions": 1, "rejects": 3,
+                       "bytes": 16})
+    assert stats.summary()["prefix_rejects"] == 3
+
+
 def test_config_validation():
     for bad in (PrefixCacheConfig(block=0), PrefixCacheConfig(max_entries=0),
                 PrefixCacheConfig(max_bytes=0),

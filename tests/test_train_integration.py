@@ -141,6 +141,21 @@ class TestStraggler:
         assert d.record(20, 1.0) is True
         assert d.flagged and d.flagged[0][0] == 20
 
+    def test_constant_warmup_does_not_blind_detector(self):
+        """Regression: a perfectly constant warmup leaves var == 0, and
+        the old inf-std fallback made the detector permanently blind —
+        a 100x straggler passed unflagged AND corrupted the EMA mean.
+        The std floor (relative to the mean) must flag it while leaving
+        ordinary jitter below the floor unflagged."""
+        d = StragglerDetector(z=3.0, warmup=5)
+        for i in range(5):
+            assert not d.record(i, 0.1)
+        mean_before = d.mean
+        assert d.record(5, 10.0) is True        # 100x step must flag
+        assert d.flagged == [(5, 10.0)]
+        assert d.mean == mean_before            # flagged: EMA untouched
+        assert not d.record(6, 0.101)           # 1% jitter stays quiet
+
     def test_adapts_to_drift(self):
         d = StragglerDetector(z=4.0, warmup=5)
         for i in range(100):

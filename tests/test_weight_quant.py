@@ -1,0 +1,488 @@
+"""Quantized weight storage (cfg.weight_dtype): round-trip error bounds,
+param-tree transform invariants (scale leaves ride the tree, skip-keys
+stay raw, abstract/real parity), in-kernel dequant parity against the
+XLA reference, and engine token-stream agreement int8-vs-f32 weights
+across model families x step impls, composed with quantized state and
+spec decode.  Sharded int8-weight identity runs in an 8-fake-device
+subprocess (tests/_multidevice.py)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # degrade to the deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from _multidevice import run8
+from repro import configs
+from repro.core import weight_quant
+from repro.kernels import ops
+from repro.models import registry
+from repro.parallel import sharding
+from repro.runtime.engine import Engine, EngineConfig
+from repro.runtime.sampling import SamplingParams
+from repro.runtime.spec_decode import DraftConfig
+
+jax.config.update("jax_platform_name", "cpu")
+RNG = np.random.default_rng(11)
+
+# Same rationale as tests/test_state_quant.py: greedy decode on
+# random-weight smoke models sits near argmax ties and one flipped token
+# poisons the rest of an autoregressive stream, so the gate is a
+# documented agreement fraction.  Prefill runs on the f32 master
+# weights (decode-side quantization), so only per-decode-step rounding
+# noise can flip tokens.  Measured on this platform with the pinned
+# INIT_KEY/prompt seeds: mamba 1.0, jamba 1.0, xlstm 1.0 — floors
+# leave wide margin for cross-version argmax-near-tie drift.
+AGREEMENT_FLOOR = {"mamba-130m": 0.75, "jamba-v0.1-52b": 0.75,
+                   "xlstm-350m": 0.5}
+FAMILIES = list(AGREEMENT_FLOOR)
+STEP_IMPLS = ("fused", "megakernel", "xla")
+# Per-family init keys for the agreement gates: random smoke weights
+# draw their argmax-margin distribution from the init key, and a
+# degenerate draw sits in near-ties that ANY numerical change (even
+# f32 FMA reassociation between step impls) flips — the same reason
+# test_state_quant pins its seeds.  These keys were picked by
+# measuring margins, not by retrying until green: agreement at the
+# pinned keys is 1.0, not floor-grazing.
+INIT_KEY = {"mamba-130m": 0, "jamba-v0.1-52b": 1, "xlstm-350m": 0}
+
+
+def _setup(name, **over):
+    cfg = configs.smoke_variant(configs.get_config(name))
+    cfg = dataclasses.replace(cfg, vocab=64, dtype="float32", **over)
+    params = sharding.tree_values(
+        registry.init_params(cfg, jax.random.key(INIT_KEY.get(name, 0))))
+    return cfg, params
+
+
+def _prompts(cfg, n=6, rng=None):
+    # agreement gates pass an explicit seeded rng so their prompt draw
+    # does not depend on which tests ran before them (the shared module
+    # RNG advances with every use)
+    rng = RNG if rng is None else rng
+    return [rng.integers(0, cfg.vocab, size=(int(m),)).astype(np.int32)
+            for m in rng.choice([4, 6, 8], size=n)]
+
+
+def _serve(cfg, params, prompts, max_new=8, sp=None, **ecfg_kw):
+    ecfg_kw.setdefault("n_slots", 2)
+    ecfg_kw.setdefault("max_seq", 40)
+    eng = Engine(cfg, params, EngineConfig(**ecfg_kw))
+    reqs = [eng.submit(p, sp, max_new=max_new) for p in prompts]
+    done = eng.run()
+    assert len(done) == len(reqs)
+    assert all(len(r.tokens) == max_new for r in reqs)
+    return eng, [r.tokens for r in reqs]
+
+
+def _agreement(a_streams, b_streams):
+    total = sum(len(t) for t in a_streams)
+    agree = sum(int(x == y) for a, b in zip(a_streams, b_streams)
+                for x, y in zip(a, b))
+    return agree / total
+
+
+# ---------------------------------------------------------------------------
+# Round-trip property: |dequant(quant(w)) - w| is scale-bounded
+# ---------------------------------------------------------------------------
+
+class TestRoundTrip:
+    @given(st.integers(2, 96), st.integers(1, 64), st.floats(0.01, 100.0))
+    @settings(max_examples=25, deadline=None)
+    def test_w_roundtrip_per_column(self, d_in, d_out, mag):
+        """int8 per-output-channel: per-element error <= column scale/2
+        (linear symmetric code, absmax over the input dim -> 127)."""
+        w = jnp.asarray(RNG.normal(size=(d_in, d_out)) * mag, jnp.float32)
+        q, s = weight_quant.quantize_w(w)
+        assert q.shape == w.shape and q.dtype == jnp.int8
+        assert s.shape == (d_out,) and s.dtype == jnp.float32
+        err = np.abs(np.asarray(weight_quant.dequantize_w(q, s) - w))
+        bound = np.asarray(s)[None, :] * (0.5 + 1e-4) + 1e-9
+        assert (err <= bound).all(), (err.max(), bound.min())
+
+    @given(st.integers(2, 96), st.integers(1, 32), st.floats(0.01, 100.0))
+    @settings(max_examples=25, deadline=None)
+    def test_rows_roundtrip_per_row(self, r, c, mag):
+        """mamba-A orientation: per-row scales over the last axis."""
+        x = jnp.asarray(-np.abs(RNG.normal(size=(r, c))) * mag, jnp.float32)
+        q, s = weight_quant.quantize_rows(x)
+        assert q.dtype == jnp.int8 and s.shape == (r,)
+        err = np.abs(np.asarray(weight_quant.dequantize_rows(q, s) - x))
+        assert (err <= np.asarray(s)[:, None] * (0.5 + 1e-4) + 1e-9).all()
+
+    def test_stacked_leaves_scale_shapes(self):
+        """Quantization maps stacked (L, ...) leaves with per-layer
+        scales — the invariant layer-slicing draft views rely on."""
+        w = jnp.asarray(RNG.normal(size=(3, 8, 6)), jnp.float32)
+        _, s = weight_quant.quantize_w(w)
+        assert s.shape == (3, 6)
+        a = jnp.asarray(RNG.normal(size=(3, 8, 4)), jnp.float32)
+        _, sa = weight_quant.quantize_rows(a)
+        assert sa.shape == (3, 8)
+
+    def test_zero_column_is_safe(self):
+        """An all-zero output channel gets a positive scale (no divide
+        by zero) and dequantizes to exactly zero."""
+        w = jnp.zeros((16, 4), jnp.float32)
+        q, s = weight_quant.quantize_w(w)
+        assert (np.asarray(s) > 0).all()
+        assert float(jnp.max(jnp.abs(
+            weight_quant.dequantize_w(q, s)))) == 0.0
+
+    def test_unknown_dtype_raises(self):
+        with pytest.raises(KeyError):
+            weight_quant.is_quantized("int7")
+        with pytest.raises(KeyError):
+            weight_quant.storage_dtype("bf16")
+
+
+# ---------------------------------------------------------------------------
+# Param-tree transform: scale leaves ride the tree, skip keys stay raw
+# ---------------------------------------------------------------------------
+
+class TestTreeTransform:
+    def test_mamba_tree_structure(self):
+        """int8 init: every dense dict gains an f32 "w_scale" sibling,
+        "A_log" becomes int8 "A_q" + f32 "A_scale", and non-dense leaves
+        (conv filters, norms) stay f32."""
+        _, p = _setup("mamba-130m", weight_dtype="int8")
+        layers = p["layers"]["mixer"]
+        for name in ("in_proj", "x_proj", "dt_proj", "out_proj"):
+            assert layers[name]["w"].dtype == jnp.int8, name
+            assert layers[name]["w_scale"].dtype == jnp.float32, name
+            assert (layers[name]["w_scale"].shape
+                    == layers[name]["w"].shape[:-2]
+                    + layers[name]["w"].shape[-1:]), name
+        assert "A_log" not in layers
+        assert layers["A_q"].dtype == jnp.int8
+        assert layers["A_scale"].shape == layers["A_q"].shape[:-1]
+        assert layers["conv_w"].dtype == jnp.float32
+
+    def test_skip_keys_stay_raw(self):
+        """embed/unembed (tied-transpose consumers) and jamba's MoE
+        expert stacks / router (shard_map einsum consumers) must pass
+        through unquantized."""
+        for name in ("mamba-130m", "jamba-v0.1-52b"):
+            _, p = _setup(name, weight_dtype="int8")
+            for key in weight_quant.SKIP_KEYS:
+                for path, leaf in jax.tree_util.tree_flatten_with_path(p)[0]:
+                    ks = jax.tree_util.keystr(path)
+                    if f"'{key}'" in ks:
+                        assert leaf.dtype != jnp.int8, ks
+                        assert "w_scale" not in ks, ks
+
+    def test_double_quantize_raises(self):
+        _, p = _setup("mamba-130m", weight_dtype="int8")
+        with pytest.raises(ValueError, match="already"):
+            weight_quant.quantize_tree(p)
+
+    @pytest.mark.parametrize("name", FAMILIES)
+    def test_abstract_params_structural_parity(self, name):
+        """registry.abstract_params must mirror the quantized real tree
+        exactly (structure, shapes, dtypes) — TP sharding inference and
+        engine validation both key off the abstract tree."""
+        cfg, real = _setup(name, weight_dtype="int8")
+        abstract = sharding.tree_values(registry.abstract_params(cfg))
+        flat_r, td_r = jax.tree_util.tree_flatten(real)
+        flat_a, td_a = jax.tree_util.tree_flatten(abstract)
+        assert td_r == td_a
+        for r, a in zip(flat_r, flat_a):
+            assert r.shape == a.shape and r.dtype == a.dtype
+
+    def test_scale_param_axes_derive_from_payload(self):
+        """Under the Param (init) tree, every scale leaf's logical axes
+        are derived from its payload's — dense scales take the OUTPUT
+        axis, A scales drop the state axis — so TP sharding keeps scale
+        rows on the same shards as the channels they describe."""
+        cfg, _ = _setup("mamba-130m")
+        cfg = dataclasses.replace(cfg, weight_dtype="int8")
+        p = registry.init_params(cfg, jax.random.key(0))
+
+        def walk(node):
+            if isinstance(node, dict):
+                if "w_scale" in node:
+                    w, s = node["w"], node["w_scale"]
+                    assert s.axes == w.axes[:-2] + (w.axes[-1],)
+                if "A_q" in node:
+                    assert node["A_scale"].axes == node["A_q"].axes[:-1]
+                for v in node.values():
+                    walk(v)
+
+        walk(p)
+        assert isinstance(p["layers"]["mixer"]["A_q"], sharding.Param)
+
+
+# ---------------------------------------------------------------------------
+# Step parity: in-kernel dequant vs pre-dequantized / XLA reference
+# ---------------------------------------------------------------------------
+
+class TestStepParity:
+    def _operands(self, b=4, d=96, n=16):
+        h = jnp.asarray(RNG.normal(size=(b, d, n)) * 2, jnp.float32)
+        x = jnp.asarray(RNG.normal(size=(b, d)), jnp.float32)
+        dt = jnp.abs(jnp.asarray(RNG.normal(size=(b, d)), jnp.float32))
+        A = -jnp.abs(jnp.asarray(RNG.normal(size=(d, n)), jnp.float32))
+        B = jnp.asarray(RNG.normal(size=(b, n)), jnp.float32)
+        C = jnp.asarray(RNG.normal(size=(b, n)), jnp.float32)
+        D = jnp.asarray(RNG.normal(size=(d,)), jnp.float32)
+        z = jnp.asarray(RNG.normal(size=(b, d)), jnp.float32)
+        return h, x, dt, A, B, C, D, z
+
+    @pytest.mark.parametrize("d", [96, 128])
+    def test_fused_in_kernel_dequant_is_exact(self, d):
+        """The fused kernel's dequant phase computes code_f32 * scale —
+        the SAME two f32 operands as dequantizing outside the kernel —
+        so in-kernel dequant must be bitwise the pre-dequantized step."""
+        h, x, dt, A, B, C, D, z = self._operands(d=d)
+        A_q, s = weight_quant.quantize_rows(A)
+        y_in, h_in = ops.selective_state_step(
+            h, x, dt, A_q, B, C, D=D, z_t=z, impl="fused", a_scale=s)
+        y_pre, h_pre = ops.selective_state_step(
+            h, x, dt, weight_quant.dequantize_rows(A_q, s), B, C,
+            D=D, z_t=z, impl="fused")
+        assert np.array_equal(np.asarray(y_in), np.asarray(y_pre))
+        assert np.array_equal(np.asarray(h_in), np.asarray(h_pre))
+
+    def test_fused_matches_xla_with_a_scale(self):
+        """Same scale math in both impls: any residual difference is the
+        pre-existing FMA contraction noise, not quantization."""
+        h, x, dt, A, B, C, D, z = self._operands()
+        A_q, s = weight_quant.quantize_rows(A)
+        outs = {impl: ops.selective_state_step(
+                    h, x, dt, A_q, B, C, D=D, z_t=z,
+                    impl=impl, a_scale=s)
+                for impl in ("xla", "fused")}
+        np.testing.assert_allclose(np.asarray(outs["xla"][0]),
+                                   np.asarray(outs["fused"][0]),
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(outs["xla"][1]),
+                                   np.asarray(outs["fused"][1]),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_quantized_state_composes_with_a_scale(self):
+        """int8 weights + int8 state in one step: the q-state kernel
+        takes a_scale too, and fused tracks the XLA q-oracle within the
+        same tolerances as the unquantized-weight case."""
+        from repro.core import state_quant
+        h, x, dt, A, B, C, D, z = self._operands(d=128)
+        q, s_h = state_quant.quantize_h(h, "int8")
+        A_q, s_a = weight_quant.quantize_rows(A)
+        outs = {impl: ops.selective_state_step_q(
+                    q, s_h, x, dt, A_q, B, C, D=D, z_t=z,
+                    state_dtype="int8", impl=impl, a_scale=s_a)
+                for impl in ("xla", "fused")}
+        np.testing.assert_allclose(np.asarray(outs["xla"][0]),
+                                   np.asarray(outs["fused"][0]),
+                                   atol=1e-4, rtol=1e-4)
+        code_diff = np.max(np.abs(
+            np.asarray(outs["xla"][1].astype(jnp.float32))
+            - np.asarray(outs["fused"][1].astype(jnp.float32))))
+        assert code_diff <= 1.0, code_diff
+
+
+# ---------------------------------------------------------------------------
+# Engine agreement: int8 weights vs f32 weights across families x impls
+# ---------------------------------------------------------------------------
+
+class TestEngineAgreement:
+    @pytest.mark.parametrize("impl", STEP_IMPLS)
+    @pytest.mark.parametrize("name", FAMILIES)
+    def test_int8_weight_stream_agreement(self, name, impl):
+        """Greedy-serve 6 requests through 2 slots (slot churn) with f32
+        and int8 weights on every step impl; agreement must clear the
+        per-family floor and every request must get all its tokens."""
+        cfg, params = _setup(name)
+        prompts = _prompts(cfg, rng=np.random.default_rng(11))
+        streams = {}
+        for wd in (None, "int8"):
+            _, streams[wd] = _serve(cfg, params, prompts,
+                                    weight_dtype=wd, step_impl=impl)
+        frac = _agreement(streams[None], streams["int8"])
+        floor = AGREEMENT_FLOOR[name]
+        assert frac >= floor, (
+            f"{name}/{impl}: int8-weight agreement {frac:.3f} "
+            f"below floor {floor}")
+
+    @pytest.mark.parametrize("name", FAMILIES)
+    def test_composes_with_int8_state(self, name):
+        """weight_dtype="int8" + state_dtype="int8" together: agreement
+        vs f32-weights/int8-state clears the same family floor (the
+        weight error budget stacks on the state one)."""
+        cfg, params = _setup(name)
+        prompts = _prompts(cfg, rng=np.random.default_rng(11))
+        streams = {}
+        for wd in (None, "int8"):
+            _, streams[wd] = _serve(cfg, params, prompts,
+                                    weight_dtype=wd, state_dtype="int8")
+        frac = _agreement(streams[None], streams["int8"])
+        assert frac >= AGREEMENT_FLOOR[name], (name, frac)
+
+    def test_fused_and_megakernel_streams_identical(self):
+        """Both Pallas paths dequantize with the identical scale
+        multiply on identical operands — token streams must match
+        exactly, not just above a floor."""
+        cfg, params = _setup("mamba-130m")
+        prompts = _prompts(cfg, n=4)
+        streams = {}
+        for impl in ("fused", "megakernel"):
+            _, streams[impl] = _serve(cfg, params, prompts,
+                                      weight_dtype="int8", step_impl=impl)
+        assert streams["fused"] == streams["megakernel"]
+
+    def test_weight_dtype_none_leaves_params_untouched(self):
+        """The default is byte-identical to not having the feature: the
+        engine must not copy, cast, or re-wrap the caller's tree."""
+        cfg, params = _setup("mamba-130m")
+        eng = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=40))
+        assert eng.params is params
+        assert eng.prefill_params is params
+        for leaf in jax.tree.leaves(eng.params):
+            assert leaf.dtype != jnp.int8
+
+    def test_prefill_serves_from_f32_master(self):
+        """Decode-side quantization: the engine keeps the caller's f32
+        tree aliased (no copy) for the compute-bound prefill while
+        decode streams the int8 tree — and the first token of every
+        request (sampled from prefill logits) therefore matches the f32
+        engine exactly."""
+        cfg, params = _setup("mamba-130m")
+        eng = Engine(cfg, params,
+                     EngineConfig(n_slots=2, max_seq=40,
+                                  weight_dtype="int8"))
+        assert eng.prefill_params is params
+        assert eng.params is not params
+        prompts = _prompts(cfg, n=4, rng=np.random.default_rng(5))
+        _, f32_streams = _serve(cfg, params, prompts)
+        _, q_streams = _serve(cfg, params, prompts, weight_dtype="int8")
+        for a, b in zip(f32_streams, q_streams):
+            assert a[0] == b[0], "prefill-sampled first token drifted"
+
+    def test_prefix_cache_identical_with_int8_weights(self):
+        """The cached-prefix suffix micro-scan must run on the same f32
+        prefill master as the cold full prefill, or warm admissions
+        would produce different tokens than cold ones."""
+        from repro.runtime.prefix_cache import PrefixCacheConfig
+        cfg, params = _setup("mamba-130m")
+        rng = np.random.default_rng(9)
+        common = rng.integers(0, cfg.vocab, size=(8,)).astype(np.int32)
+        prompts = [np.concatenate([common, t]) for t in
+                   (rng.integers(0, cfg.vocab, size=(3,)).astype(np.int32),
+                    rng.integers(0, cfg.vocab, size=(5,)).astype(np.int32))]
+        cold_kw = dict(weight_dtype="int8")
+        warm_kw = dict(weight_dtype="int8",
+                       prefix_cache=PrefixCacheConfig(block=4))
+        _, cold = _serve(cfg, params, prompts, **cold_kw)
+        eng, warm = _serve(cfg, params, prompts, **warm_kw)
+        assert cold == warm
+        assert eng._prefix.hits >= 1
+
+    def test_weight_bytes_reduction(self):
+        """The point of the PR: int8 weight storage must cut total
+        param bytes >= 1.5x (embed/unembed stay f32, so not a full 4x)."""
+        cfg, params = _setup("mamba-130m")
+        eng = Engine(cfg, params,
+                     EngineConfig(n_slots=2, max_seq=40,
+                                  weight_dtype="int8"))
+        f32_bytes = sum(l.nbytes for l in jax.tree.leaves(params))
+        q_bytes = sum(l.nbytes for l in jax.tree.leaves(eng.params))
+        gain = f32_bytes / q_bytes
+        assert gain >= 1.5, f"weight bytes reduction {gain:.2f}x < 1.5x"
+
+    def test_params_bitwise_unchanged_after_forked_serve(self):
+        """Serving with forks (best-of-n) and slot churn must never
+        write into the weight tree: quantized payloads and scales stay
+        bitwise identical, and no scale leaf leaks into slot state
+        handling."""
+        cfg, params = _setup("mamba-130m")
+        eng = Engine(cfg, params,
+                     EngineConfig(n_slots=2, max_seq=40,
+                                  weight_dtype="int8"))
+        before = jax.device_get(eng.params)
+        sp = SamplingParams(n=2, temperature=0.8, seed=3, max_new=6)
+        reqs = [eng.submit(p, sp) for p in _prompts(cfg, n=3)[:2]]
+        reqs += [eng.submit(p, max_new=6) for p in _prompts(cfg, n=2)]
+        eng.run()
+        assert all(len(r.tokens) == 6 for r in reqs)
+        after = jax.device_get(eng.params)
+        flat_b, td_b = jax.tree_util.tree_flatten(before)
+        flat_a, td_a = jax.tree_util.tree_flatten(after)
+        assert td_b == td_a
+        for b, a in zip(flat_b, flat_a):
+            assert b.dtype == a.dtype
+            assert np.array_equal(b, a)
+
+    def test_spec_decode_token_identity_with_int8_weights(self):
+        """Spec decode's exactness contract survives weight quant: the
+        draft slices the SAME quantized stacked leaves (scales ride the
+        layer slice), so greedy spec == greedy plain, token for token."""
+        cfg, params = _setup("mamba-130m")
+        prompts = _prompts(cfg, n=4)
+        _, plain = _serve(cfg, params, prompts, weight_dtype="int8")
+        _, spec = _serve(cfg, params, prompts, weight_dtype="int8",
+                         draft=DraftConfig(k=2, layers=0))
+        assert plain == spec
+
+    def test_model_cfg_already_int8_not_requantized(self):
+        """A caller handing in already-quantized params (cfg says int8)
+        must not be double-quantized by the engine knob."""
+        cfg, qparams = _setup("mamba-130m", weight_dtype="int8")
+        eng = Engine(cfg, qparams,
+                     EngineConfig(n_slots=2, max_seq=40,
+                                  weight_dtype="int8"))
+        assert eng.params is qparams
+        req = eng.submit(np.arange(1, 6, dtype=np.int32), max_new=4)
+        eng.run()
+        assert len(req.tokens) == 4
+
+
+# ---------------------------------------------------------------------------
+# Sharded: int8 weights under a TP mesh stream token-identical
+# ---------------------------------------------------------------------------
+
+def test_sharded_int8_weights_token_identity():
+    """Under a tp=2 serving mesh, int8-weight greedy streams must equal
+    the single-device int8-weight streams, with the scale leaves
+    sharded alongside their payload columns (at least one quantized
+    leaf non-replicated)."""
+    run8("""
+    import dataclasses
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro import configs
+    from repro.models import registry
+    from repro.parallel import sharding
+    from repro.launch import mesh as mesh_lib
+    from repro.runtime.engine import Engine, EngineConfig
+
+    cfg = configs.smoke_variant(configs.get_config('mamba-130m'))
+    cfg = dataclasses.replace(cfg, vocab=256, dtype='float32')
+    params = sharding.tree_values(
+        registry.init_params(cfg, jax.random.key(0)))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, 256, size=int(L)).tolist()
+               for L in rng.choice((6, 8, 12), size=4)]
+
+    def serve(mesh):
+        eng = Engine(cfg, params,
+                     EngineConfig(n_slots=2, max_seq=64, mesh=mesh,
+                                  weight_dtype='int8'))
+        reqs = [eng.submit(p, max_new=8) for p in prompts]
+        eng.run()
+        return eng, [r.tokens for r in reqs]
+
+    _, single = serve(None)
+    eng, shardd = serve(mesh_lib.make_serving_mesh(2))
+    assert single == shardd, (single, shardd)
+    qleaves = [l for l in jax.tree.leaves(eng.params)
+               if l.dtype == jnp.int8]
+    assert qleaves, 'sharded engine must hold int8 weight leaves'
+    assert any(not l.sharding.is_fully_replicated
+               for l in jax.tree.leaves(eng.params)), \\
+        'params must actually shard on the mesh'
+    print('ok sharded int8 weights')
+    """, timeout=1200)
