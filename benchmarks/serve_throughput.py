@@ -59,6 +59,22 @@ single-device pool (the TP capacity claim).  Requires
 jax.device_count() >= tp, so scripts/bench_ci.py collects this section
 in a subprocess with 8 forced host devices.
 
+Also reported: SLO-aware multi-tenant admission (runtime/scheduler.py)
+— a bursty adversarial tenant mix served through the WFQ admission
+scheduler.  Every gated number is deterministic (submission order +
+token counts + config; no wall-clock): exact shed counts with the
+flood's tail rejected AT THE DOOR while every admitted request still
+receives its full token budget, a no-starvation bound on WFQ
+pass-overs, degradation-ladder counts (best-of-n shrunk under
+pressure), and per-tenant admission shares.
+
+Also reported: prefill/decode disaggregation (runtime/disagg.py) — the
+same trace served monolithic vs prefill-worker -> bounded transfer
+queue -> decode pool.  Token streams must match bitwise (the handoff is
+the prefix-cache snapshot path: same compiled prefill, scatter of a
+gathered state block), and the wire accounting (transfers,
+bytes-per-snapshot, max queue depth) is exact layout arithmetic.
+
 Flake policy: pass/fail decisions use deterministic token counts only;
 wall-clock (CPU timing noise exceeds 20%) uses median-of-k and is
 asserted only off-CPU, with a generous margin.
@@ -888,6 +904,189 @@ def sharded_serving_comparison(arch, slots, requests, max_new, tp=2,
     return res
 
 
+# ---------------------------------------------------------------------------
+# SLO-aware multi-tenant admission (runtime/scheduler.py): bursty trace
+# ---------------------------------------------------------------------------
+
+def frontend_sched_comparison(arch, slots=2, max_new=8, seed=0,
+                              quiet=False):
+    """Serve one adversarial multi-tenant trace through the WFQ
+    admission scheduler: tenant "burst" floods 10 standard-class
+    requests (two of them sampled best-of-2) before "steady" and
+    "premium" (non-sheddable gold class; premium at 4x weight) submit
+    3 each.  All submissions land before the engine runs, so every
+    admission decision is a pure function of (order, token counts,
+    config) — no wall-clock anywhere.
+
+    Pass/fail signals (all deterministic, pinned by bench_ci):
+      * shed-before-violation — the flood's tail is rejected at the
+        door (exact shed count, all of it tenant "burst"), and every
+        ADMITTED request still receives its full token budget: the
+        residents never pay for the burst;
+      * no starvation — every steady/premium request is admitted and
+        the WFQ pass-over bound stays small;
+      * degradation ladder — the best-of-2 submitted inside the
+        degrade window is admitted at n=1 (exact degraded count);
+      * per-tenant admission/shed counts (ServeStats breakdowns).
+    """
+    from repro.runtime.sampling import SamplingParams
+    from repro.runtime.scheduler import SchedConfig, SLOClass, SLOScheduler
+
+    cfg, params = _setup_model(arch)
+    max_seq = max(LEN_CHOICES) + max_new + 8
+    eng = Engine(cfg, params, EngineConfig(n_slots=slots, max_seq=max_seq,
+                                           seed=seed))
+    sched = SLOScheduler(eng, SchedConfig(
+        weights={"burst": 1.0, "steady": 1.0, "premium": 4.0},
+        classes=(SLOClass(name="standard", ttft_budget=64),
+                 SLOClass(name="gold", ttft_budget=10_000,
+                          sheddable=False)),
+        default_class="standard"))
+    rng = np.random.default_rng(seed)
+
+    def prompt():
+        return rng.integers(0, cfg.vocab, size=(8,)).astype(np.int32)
+
+    bo2 = SamplingParams(temperature=0.9, n=2, max_new=max_new, seed=5)
+    for i in range(10):                       # the flood, first in line
+        if i in (6, 7):                       # land inside the ladder
+            sched.submit(prompt(), dataclasses.replace(bo2, seed=5 + i),
+                         tenant="burst")
+        else:
+            sched.submit(prompt(), tenant="burst", max_new=max_new)
+    for _ in range(3):
+        sched.submit(prompt(), tenant="steady", max_new=max_new,
+                     slo="gold")
+    for _ in range(3):
+        sched.submit(prompt(), tenant="premium", max_new=max_new,
+                     slo="gold")
+    done = sched.run()
+    c = sched.counters()
+    s = eng.stats.summary()
+
+    # hard invariants (exact counts are additionally pinned by bench_ci)
+    assert c["shed"] > 0, "the flood's tail was not shed"
+    assert s["per_tenant"].get("steady", {}).get("shed", 0) == 0
+    assert s["per_tenant"].get("premium", {}).get("shed", 0) == 0
+    assert c["admitted_per_tenant"]["steady"] == 3
+    assert c["admitted_per_tenant"]["premium"] == 3
+    assert all(len(r.tokens) == max_new for r in done), \
+        "an admitted request was short-changed by the burst"
+    # SFQ pass-over bound is weight-relative: between two of burst's
+    # (w=1) admissions, steady (w=1) admits <= 1 and premium (w=4)
+    # admits <= 4, so <= 5 pass-overs; exact value pinned by bench_ci
+    assert c["starvation_bound"] <= 5
+    out = {
+        "admitted": c["admitted"],
+        "shed": c["shed"],
+        "degraded": c["degraded"],
+        "starvation_bound": c["starvation_bound"],
+        "admitted_per_tenant": dict(sorted(
+            c["admitted_per_tenant"].items())),
+        "shed_per_tenant": {t: int(s["per_tenant"][t]["shed"])
+                            for t in sorted(s["per_tenant"])},
+        "useful_tokens": int(s["useful_tokens"]),
+        "finished": len(done),
+    }
+    if not quiet:
+        print(f"[serve_throughput] multi-tenant admission, arch={arch} "
+              f"slots={slots} max_new={max_new}")
+        print(f"  admitted {out['admitted']} "
+              f"({out['admitted_per_tenant']}), shed {out['shed']} "
+              f"(all burst: {out['shed_per_tenant']}), degraded "
+              f"{out['degraded']} best-of-n -> n=1")
+        print(f"  starvation bound {out['starvation_bound']} pass-overs; "
+              f"every admitted request got its full {max_new} tokens")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Prefill/decode disaggregation (runtime/disagg.py): handoff exactness
+# ---------------------------------------------------------------------------
+
+def disagg_comparison(arch, slots=2, requests=6, max_new=8,
+                      queue_depth=2, seed=0, quiet=False):
+    """Serve one mixed greedy/sampled trace twice — monolithic Engine
+    vs DisaggPipeline (1-slot prefill worker -> bounded transfer queue
+    -> decode pool) — and gate the handoff claims, all deterministic:
+
+      * token identity — every disaggregated stream (and its cumulative
+        logprob) is BITWISE the monolithic engine's: the worker runs
+        the same compiled prefill with the same derived seed, and the
+        handoff is scatter(gather(state)) — exact data movement;
+      * no local prefill — the decode pool admits snapshots only
+        (prefill_tokens == 0, snapshot_admits == requests);
+      * wire accounting — transfers, bytes-per-snapshot (fixed state
+        block layout arithmetic) and the bounded queue's max depth.
+
+    Wall-clock is never asserted (two pools on one CPU say nothing
+    about a real two-pool deployment's latency)."""
+    from repro.runtime.disagg import DisaggConfig, DisaggPipeline
+    from repro.runtime.sampling import SamplingParams
+
+    cfg, params = _setup_model(arch)
+    rng = np.random.default_rng(seed)
+    max_seq = max(LEN_CHOICES) + max_new + 8
+    trace = []
+    for i in range(requests):
+        p = rng.integers(0, cfg.vocab,
+                         size=(int(rng.choice(LEN_CHOICES)),)) \
+            .astype(np.int32)
+        sp = (SamplingParams(max_new=max_new) if i % 2 == 0 else
+              SamplingParams(temperature=0.9, top_k=12, max_new=max_new))
+        trace.append((p, sp))
+
+    mono = Engine(cfg, params, EngineConfig(n_slots=slots,
+                                            max_seq=max_seq, seed=seed))
+    for p, sp in trace:
+        mono.submit(p, sp)
+    ref = {r.req_id: (r.tokens, r.cum_logprob) for r in mono.run()}
+
+    pipe = DisaggPipeline(cfg, params,
+                          EngineConfig(n_slots=slots, max_seq=max_seq,
+                                       seed=seed),
+                          DisaggConfig(queue_depth=queue_depth))
+    items = [pipe.submit(p, sp) for p, sp in trace]
+    pipe.run()
+    identical = all(
+        item.req.tokens == ref[i][0]
+        and item.req.cum_logprob == ref[i][1]
+        for i, item in enumerate(items))
+    assert identical, "disaggregated stream diverged from monolithic"
+    s = pipe.decode.stats.summary()
+    assert s["prefill_tokens"] == 0, \
+        "decode pool ran a local prefill instead of a snapshot admit"
+    assert s["snapshot_admits"] == requests
+    c = pipe.counters()
+    assert c["transfers"] == requests
+    assert c["max_queue_depth"] <= queue_depth
+    out = {
+        "tokens_identical": True,
+        "requests": requests,
+        "transfers": c["transfers"],
+        "transfer_bytes": c["transfer_bytes"],
+        "bytes_per_snapshot": c["transfer_bytes"] // max(1, c["transfers"]),
+        "max_queue_depth": c["max_queue_depth"],
+        "queue_depth_bound": queue_depth,
+        "snapshot_admits": int(s["snapshot_admits"]),
+        "snapshot_tokens": int(s["snapshot_tokens"]),
+        "decode_prefill_tokens": int(s["prefill_tokens"]),
+        "useful_tokens": int(s["useful_tokens"]),
+    }
+    if not quiet:
+        print(f"[serve_throughput] disaggregated serving, arch={arch} "
+              f"slots={slots} requests={requests} max_new={max_new} "
+              f"queue_depth={queue_depth}")
+        print(f"  handoff: {out['transfers']} snapshots, "
+              f"{out['bytes_per_snapshot']} B each "
+              f"({out['transfer_bytes']} B total), queue depth peaked "
+              f"at {out['max_queue_depth']}/{queue_depth}")
+        print(f"  decode pool: {out['snapshot_admits']} snapshot admits, "
+              f"0 local prefill tokens — token streams and cumulative "
+              "logprobs identical to monolithic")
+    return out
+
+
 def run():
     """benchmarks/run.py protocol: quick saturated comparison, CSV rows."""
     from benchmarks import common
@@ -959,6 +1158,17 @@ def run():
                 f"{pc['off']['prefill_tokens'] - pc['on']['prefill_tokens']};"
                 f"bestofn_distinct={pc['bestofn']['distinct']};"
                 "tokens_identical=1")
+    # admission + disagg counts are deterministic (no cpu_interpret tag)
+    fs = frontend_sched_comparison(arch="mamba-130m", slots=2, quiet=True)
+    common.emit("serve_multi_tenant_shed", float(fs["shed"]),
+                f"admitted={fs['admitted']};degraded={fs['degraded']};"
+                f"starvation_bound={fs['starvation_bound']}")
+    dg = disagg_comparison(arch="mamba-130m", slots=2, quiet=True)
+    common.emit("serve_disagg_bytes_per_snapshot",
+                float(dg["bytes_per_snapshot"]),
+                f"transfers={dg['transfers']};"
+                f"max_queue_depth={dg['max_queue_depth']};"
+                "tokens_identical=1")
 
 
 def main():
@@ -1006,6 +1216,9 @@ def main():
     prefix_cache_comparison(args.arch, args.slots,
                             requests=min(args.requests, 8),
                             max_new=16, seed=args.seed)
+    frontend_sched_comparison(args.arch, slots=2)
+    disagg_comparison(args.arch, slots=2,
+                      requests=min(args.requests, 6))
     # Exit status: deterministic token accounting already asserted above;
     # the timing ratio is only asserted off-CPU, and generously — a
     # same-order engine is not a regression, a 2x slowdown is.

@@ -1,5 +1,5 @@
 #!/usr/bin/env python
-"""Deterministic benchmark gate for CI (writes/checks BENCH_PR9.json).
+"""Deterministic benchmark gate for CI (writes/checks BENCH_PR10.json).
 
 Runs the serving benchmarks in *count mode*: every gated number is a
 deterministic function of the code — useful-token counts, token-stream
@@ -18,14 +18,19 @@ slot bytes — collected in a subprocess with 8 forced host devices),
 quantized-weight counts (int8 weight-bytes-per-token reduction vs f32
 with floor-gated token agreement — decode streams every weight once
 per token, so param bytes ARE the per-token weight traffic),
+multi-tenant admission counts on a bursty adversarial trace (exact
+shed/degraded counts with no tenant starved — load shedding fires at
+the door, before resident requests lose tokens), disaggregated-serving
+counts (prefill/decode handoff bitwise identical to monolithic, exact
+bytes-per-snapshot and bounded-queue depth),
 and fused-kernel-vs-oracle errors.  Wall-clock numbers are recorded
 under "informational" but never asserted: CPU timing noise exceeds 20%
 and a timing gate on shared CI runners is a flake generator.
 
-  python scripts/bench_ci.py            # compare against BENCH_PR9.json
+  python scripts/bench_ci.py            # compare against BENCH_PR10.json
   python scripts/bench_ci.py --update   # regenerate the baseline
 
-The committed BENCH_PR9.json is the baseline; CI runs compare mode and
+The committed BENCH_PR10.json is the baseline; CI runs compare mode and
 fails on drift, so a PR that changes a count (or breaks the >= 2x int8
 capacity claim / the > 1.0 accepted-tokens-per-target-pass claim / the
 one-launch-per-token megakernel claim / the sharded-serving identity
@@ -46,7 +51,7 @@ REPO = pathlib.Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(REPO / "src"))
 sys.path.insert(0, str(REPO))
 
-BASELINE = REPO / "BENCH_PR9.json"
+BASELINE = REPO / "BENCH_PR10.json"
 
 #: |fresh - baseline| tolerance for token-agreement fractions: exact on
 #: one platform, but argmax near-ties may flip across jax/BLAS builds
@@ -194,6 +199,11 @@ def collect():
         arch="mamba-130m", slots=4, requests=8, max_new=12, quiet=True)
     wq = st.weight_dtype_comparison(
         arch="mamba-130m", slots=4, requests=8, max_new=16, quiet=True)
+    sched = st.frontend_sched_comparison(
+        arch="mamba-130m", slots=2, quiet=True)
+    disagg = st.disagg_comparison(
+        arch="mamba-130m", slots=2, requests=6, max_new=8,
+        queue_depth=2, quiet=True)
     sharded, sharded_full = _collect_sharded()
     kernel = _kernel_vs_oracle()
 
@@ -280,6 +290,17 @@ def collect():
             "token_agreement_vs_f32": round(
                 wq["int8"]["token_agreement_vs_f32"], 4),
         },
+        # multi-tenant SLO admission: the PR 10 gate — shed/degraded
+        # counts, per-tenant admission shares and the WFQ starvation
+        # bound are pure functions of (submission order, token counts,
+        # config); shed-before-violation and no-starvation invariants
+        # are additionally asserted inside the comparison
+        "frontend_sched": sched,
+        # prefill/decode disaggregation: the PR 10 gate — token
+        # identity vs the monolithic engine is asserted inside the
+        # comparison; transfers, bytes-per-snapshot (state block layout
+        # arithmetic) and bounded-queue depth are pinned exactly
+        "disagg": disagg,
         # tensor-parallel sharded serving: the PR 8 gate — token
         # identity, no-per-step-resharding and per-device capacity are
         # asserted inside the (subprocess) comparison; the collective
@@ -431,6 +452,56 @@ def compare(fresh: dict, base: dict) -> list[str]:
             f"(> {AGREEMENT_TOL}): fresh "
             f"{wq_f['token_agreement_vs_f32']} vs baseline "
             f"{wq_b['token_agreement_vs_f32']}")
+    # multi-tenant admission: hard invariants (the flood's tail sheds,
+    # none of it from the protected tenants, no starvation beyond the
+    # weighted SFQ bound) plus exact count equality with the baseline —
+    # every decision is submission-order arithmetic, so any drift is a
+    # policy change that must regenerate the baseline
+    fs_f, fs_b = fresh.get("frontend_sched"), base.get("frontend_sched")
+    if fs_f is None or fs_b is None:
+        fails.append("frontend_sched section present only in "
+                     f"{'baseline' if fs_f is None else 'fresh'}")
+    else:
+        chk(fs_f["shed"] > 0,
+            "bursty trace shed nothing — admission control never fired")
+        chk(fs_f["shed_per_tenant"].get("steady", 0) == 0
+            and fs_f["shed_per_tenant"].get("premium", 0) == 0,
+            f"protected tenants were shed: {fs_f['shed_per_tenant']}")
+        chk(fs_f["starvation_bound"] <= 5,
+            f"WFQ starvation bound {fs_f['starvation_bound']} exceeds "
+            "the weighted SFQ limit (5 pass-overs)")
+        chk(fs_f["finished"] == fs_f["admitted"],
+            "an admitted request never finished")
+        for key in ("admitted", "shed", "degraded", "starvation_bound",
+                    "admitted_per_tenant", "shed_per_tenant",
+                    "useful_tokens", "finished"):
+            chk(fs_f[key] == fs_b[key],
+                f"frontend_sched.{key}: fresh {fs_f[key]} != "
+                f"baseline {fs_b[key]}")
+    # disaggregation: hard invariants (bitwise identity, no local
+    # prefill on the decode pool, bounded queue respected) plus exact
+    # wire-accounting equality — bytes-per-snapshot is state-block
+    # layout arithmetic, so a change means the handoff payload changed
+    dg_f, dg_b = fresh.get("disagg"), base.get("disagg")
+    if dg_f is None or dg_b is None:
+        fails.append("disagg section present only in "
+                     f"{'baseline' if dg_f is None else 'fresh'}")
+    else:
+        chk(dg_f["tokens_identical"],
+            "disaggregated streams diverged from the monolithic engine")
+        chk(dg_f["decode_prefill_tokens"] == 0,
+            f"decode pool ran {dg_f['decode_prefill_tokens']} local "
+            "prefill tokens (must admit snapshots only)")
+        chk(dg_f["max_queue_depth"] <= dg_f["queue_depth_bound"],
+            f"transfer queue overflowed its bound "
+            f"({dg_f['max_queue_depth']} > {dg_f['queue_depth_bound']})")
+        for key in ("requests", "transfers", "transfer_bytes",
+                    "bytes_per_snapshot", "max_queue_depth",
+                    "queue_depth_bound", "snapshot_admits",
+                    "snapshot_tokens", "useful_tokens"):
+            chk(dg_f[key] == dg_b[key],
+                f"disagg.{key}: fresh {dg_f[key]} != "
+                f"baseline {dg_b[key]}")
     # tensor-parallel sharded serving: hard invariants (token identity,
     # no per-step resharding, per-device bytes strictly below the
     # single-device pool) plus exact equality with the baseline for the
@@ -550,6 +621,17 @@ def main():
           f"{MIN_WEIGHT_BYTES_REDUCTION}x), agreement "
           f"{wq['token_agreement_vs_f32']} (floor "
           f"{MIN_WEIGHT_AGREEMENT})")
+    fs = fresh["frontend_sched"]
+    print(f"[bench_ci] multi-tenant admission: {fs['admitted']} admitted "
+          f"{fs['admitted_per_tenant']}, {fs['shed']} shed "
+          f"{fs['shed_per_tenant']}, {fs['degraded']} degraded, "
+          f"starvation bound {fs['starvation_bound']} (limit 5)")
+    dg = fresh["disagg"]
+    print(f"[bench_ci] disagg: tokens identical {dg['tokens_identical']}, "
+          f"{dg['transfers']} snapshots x {dg['bytes_per_snapshot']} B, "
+          f"queue depth {dg['max_queue_depth']}/"
+          f"{dg['queue_depth_bound']}, decode-pool prefill tokens "
+          f"{dg['decode_prefill_tokens']} (must be 0)")
     sh = fresh["sharded_serving"]
     print(f"[bench_ci] sharded serving: tp={sh['tp']}, tokens identical "
           f"{sh['tokens_identical']}, no per-step resharding "

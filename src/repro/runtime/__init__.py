@@ -48,4 +48,26 @@ branches whose sampling keys are re-derived per branch
 cumulative-logprob branch with all branches ranked in ``branches``.
 Per-token logprob surfaces (SamplingParams.logprobs / top_logprobs)
 ride every decode path without touching token math.
+
+Serving front-end (PR 10):
+
+  scheduler.py — SLOScheduler holds requests outside the engine and
+    releases them by weighted fair queuing (per-tenant virtual-time
+    tags; no tenant starves under burst), with per-class TTFT budgets
+    in deterministic service steps driving a degradation ladder (cap
+    speculative depth -> shrink best-of-n -> shed) that rejects new
+    work BEFORE resident requests pay for it.
+  frontend.py — AsyncFrontend pumps the engine in an executor and
+    exposes submit/stream/cancel as asyncio primitives: per-request
+    async token iterators fed via call_soon_threadsafe, per-tenant
+    contexts, shed-aware handles.
+  disagg.py — prefill/decode disaggregation: a 1-slot PrefillWorker
+    runs the same compiled admission programs, ships the O(d_inner *
+    d_state) state block (+ scales + position + first-token surface)
+    over a bounded queue, and the decode pool restores it with the
+    pool's one-scatter admit — token streams bitwise identical to the
+    monolithic engine by construction, at any state_dtype.
+  Engine.submit(session=True) — infinite-stream sessions: no max_new
+    horizon, slot pinned against eviction (state_pool pin/unpin);
+    legal only for families whose decode state is max_seq-independent.
 """

@@ -75,6 +75,18 @@ Caveat: MoE families route tokens across the batch through shared expert
 capacity, so slot composition can perturb logits at tight
 capacity_factor.  Pure Mamba / dense attention families are exactly
 slot-independent (the engine's correctness tests assert this).
+
+Front-end hooks (PR 10): ``submit(tenant=...)`` threads a tenant label
+into per-tenant ServeStats; ``submit(session=True)`` opens an
+infinite-stream session (no max_new horizon, slot pinned against
+eviction — legal only for families whose decode state does not grow
+with max_seq); ``submit_snapshot`` admits a request whose prompt was
+prefilled elsewhere (runtime/disagg.py) by restoring the shipped state
+block with the pool's one-scatter admit; ``spec_cap`` is the
+scheduler's degradation knob (clamps speculative depth under load
+without retracing).  A raising ``stream_cb`` no longer propagates into
+the scheduler loop: the engine counts it, drops the callback, and
+auto-cancels that request — co-resident streams are untouched.
 """
 from __future__ import annotations
 
@@ -94,7 +106,8 @@ from repro.models import registry
 from repro.parallel import sharding
 from repro.runtime import metrics as metrics_lib
 from repro.runtime import sampling
-from repro.runtime.prefix_cache import PrefixCache, PrefixCacheConfig
+from repro.runtime.prefix_cache import (PrefixCache, PrefixCacheConfig,
+                                        snapshot_to_device)
 from repro.runtime.sampling import SamplingParams
 from repro.runtime.spec_decode import DraftConfig, SpecDecoder
 from repro.runtime.state_pool import SlotStatePool
@@ -225,6 +238,14 @@ def _jit_decode_sample(cfg, shard=None):
     return jax.jit(_decode_fn)
 
 
+def derive_seed(engine_seed: int, req_id: int) -> int:
+    """Per-request seed for unseeded requests — module-level because a
+    disaggregated pipeline must derive the SAME seed for request i that
+    a monolithic engine would, or the token-identity contract breaks at
+    the first sampled request."""
+    return (engine_seed * 1_000_003 + req_id) & 0x7FFFFFFF
+
+
 @dataclasses.dataclass
 class EngineConfig:
     n_slots: int = 4
@@ -316,6 +337,15 @@ class Request:
     stream_cb: Optional[Callable] = None  # (req, new_tokens) per sync
     cancelled: bool = False
     arrival: float = 0.0                  # offset (s) from run() start
+    tenant: Optional[str] = None          # per-tenant stats label
+    # infinite-stream session: no max_new horizon; the slot is pinned
+    # (eviction-free lease) until a stop token/sequence or cancel()
+    session: bool = False
+    # disaggregated admission: a shipped prefill snapshot (state block +
+    # scales + position + first-token surface) restored instead of
+    # running the prefill locally — see Engine.submit_snapshot
+    snapshot: Optional[object] = dataclasses.field(default=None,
+                                                   repr=False)
     tokens: list = dataclasses.field(default_factory=list)
     t_submit: float = 0.0
     t_admit: Optional[float] = None       # prefill start
@@ -437,6 +467,20 @@ class Engine:
         self._spec = (SpecDecoder(cfg, params, ecfg.draft,
                                   shard=self._shard)
                       if ecfg.draft is not None else None)
+        # scheduler degradation knob: clamp every slot's speculative
+        # window to this depth (None = uncapped).  Pure host-side depth
+        # arithmetic — flipping it never retraces, and the clamp flows
+        # through _slot_depth so greedy identity survives.
+        self.spec_cap: Optional[int] = None
+        # infinite-stream sessions are legal only when the decode state
+        # is max_seq-independent (mamba/xlstm fixed blocks yes; jamba's
+        # per-position KV strips no).  Probe by comparing abstract cache
+        # shapes at two horizons — family-agnostic, no allocation.
+        a = registry.abstract_cache(cfg, 1, ecfg.max_seq)
+        b = registry.abstract_cache(cfg, 1, ecfg.max_seq + 1)
+        self._cache_growable = any(
+            x.shape != y.shape for x, y in
+            zip(jax.tree.leaves(a), jax.tree.leaves(b)))
         self.stats = metrics_lib.ServeStats()
         self.logger = logger
         self._now = clock
@@ -464,7 +508,9 @@ class Engine:
                eos_id: Optional[int] = None,
                arrival: Optional[float] = None,
                priority: int = 0,
-               stream_cb: Optional[Callable] = None) -> Request:
+               stream_cb: Optional[Callable] = None,
+               tenant: Optional[str] = None,
+               session: bool = False) -> Request:
         """Enqueue a request.
 
         params: per-request SamplingParams (None = the engine's
@@ -478,8 +524,19 @@ class Engine:
         stream_cb: ``cb(req, new_tokens)`` called at every scheduler
           sync with the >= 1 tokens appended since the last call; the
           final call has ``req.finished`` True.  The callback may call
-          ``Engine.cancel`` (including on its own request); it must not
-          raise (an exception aborts ``run()``).
+          ``Engine.cancel`` (including on its own request).  A raising
+          callback is isolated: counted in
+          ``ServeStats.n_callback_errors``, dropped, and its request
+          auto-cancelled — co-resident requests are unaffected.
+        tenant: label for per-tenant ServeStats breakdowns (TTFT/TPOT
+          percentiles, shed/degraded/SLO-violation counters).
+        session: infinite-stream session — no max_new horizon (the
+          stream runs until a stop token/sequence or cancel) and the
+          slot holds an eviction-free lease (pinned).  Legal only for
+          families whose decode state is max_seq-independent: a fixed
+          O(d_inner * d_state) block decodes forever in constant
+          bytes, which is exactly what per-position KV strips cannot
+          do, so jamba-style hybrids are refused up front.
         """
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size < 1:
@@ -491,7 +548,19 @@ class Engine:
             params = dataclasses.replace(
                 params, stop=tuple(params.stop) + (eos_id,))
         params.validate()
-        if prompt.size + params.max_new > self.ecfg.max_seq:
+        if session:
+            if self._cache_growable:
+                raise ValueError(
+                    "infinite-stream sessions need a max_seq-independent "
+                    "decode state; this family's cache grows with "
+                    "max_seq (per-position KV strips)")
+            if params.n > 1:
+                raise ValueError("sessions are single-stream (n == 1)")
+            if prompt.size > self.ecfg.max_seq:
+                raise ValueError(
+                    f"session prompt ({prompt.size}) exceeds max_seq "
+                    f"({self.ecfg.max_seq})")
+        elif prompt.size + params.max_new > self.ecfg.max_seq:
             raise ValueError(
                 f"prompt ({prompt.size}) + max_new ({params.max_new}) "
                 f"exceeds max_seq ({self.ecfg.max_seq})")
@@ -510,7 +579,8 @@ class Engine:
                       seed=seed, max_new=params.max_new,
                       stop_ids=frozenset(params.stop), eos_id=eos_id,
                       priority=priority, stream_cb=stream_cb,
-                      arrival=arrival or 0.0, t_submit=self._now())
+                      arrival=arrival or 0.0, t_submit=self._now(),
+                      tenant=tenant, session=session)
         self._by_id[req_id] = req
         if arrival is None:
             self._push_ready(req)
@@ -525,7 +595,69 @@ class Engine:
         """Deterministic per-request seed for unseeded requests: a
         function of (engine seed, request id) only, so streams stay
         reproducible per trace and distinct across requests."""
-        return (self.ecfg.seed * 1_000_003 + req_id) & 0x7FFFFFFF
+        return derive_seed(self.ecfg.seed, req_id)
+
+    def submit_snapshot(self, snap, arrival: Optional[float] = None,
+                        priority: int = 0,
+                        stream_cb: Optional[Callable] = None,
+                        tenant: Optional[str] = None,
+                        session: bool = False) -> Request:
+        """Enqueue a request whose prompt was already prefilled by a
+        disaggregated prefill worker (runtime/disagg.py).
+
+        ``snap`` carries the prompt, resolved SamplingParams + seed,
+        the post-prompt state block (batch-1 cache pytree: payload,
+        absmax scales, stream position — one tree), and the worker's
+        first-token surface (token, logprob, top-k rows).  Admission
+        restores the state with the pool's one-scatter admit and
+        installs the shipped first token — no local prefill — so the
+        resulting stream is bitwise the monolithic engine's by
+        construction: the worker ran the SAME compiled prefill program
+        with the same seed/params, and scatter(gather(x)) is exact
+        data movement at any state_dtype.
+
+        The snapshot must come from a compatible engine: same model
+        config and state/kv dtypes (checked structurally against the
+        pool's cache leaves).
+        """
+        prompt = np.asarray(snap.prompt, np.int32).reshape(-1)
+        params = snap.params
+        params.validate()
+        if params.n > 1:
+            raise ValueError("snapshot admission is single-stream "
+                             "(best-of-n forks decode-side state that "
+                             "does not exist yet)")
+        if session and self._cache_growable:
+            raise ValueError(
+                "infinite-stream sessions need a max_seq-independent "
+                "decode state")
+        if not session and prompt.size + params.max_new > self.ecfg.max_seq:
+            raise ValueError(
+                f"prompt ({prompt.size}) + max_new ({params.max_new}) "
+                f"exceeds max_seq ({self.ecfg.max_seq})")
+        want = jax.tree.leaves(registry.abstract_cache(
+            self.cfg, 1, self.ecfg.max_seq))
+        got = jax.tree.leaves(snap.state)
+        if len(want) != len(got) or any(
+                w.shape != g.shape or w.dtype != g.dtype
+                for w, g in zip(want, got)):
+            raise ValueError(
+                "snapshot state does not match this engine's cache "
+                "layout (model config / state_dtype / max_seq mismatch)")
+        req_id = self._next_id
+        self._next_id += 1
+        req = Request(req_id=req_id, prompt=prompt, params=params,
+                      seed=snap.seed, max_new=params.max_new,
+                      stop_ids=frozenset(params.stop),
+                      priority=priority, stream_cb=stream_cb,
+                      arrival=arrival or 0.0, t_submit=self._now(),
+                      tenant=tenant, session=session, snapshot=snap)
+        self._by_id[req_id] = req
+        if arrival is None:
+            self._push_ready(req)
+        else:
+            bisect.insort(self._pending, req, key=lambda r: r.arrival)
+        return req
 
     def _push_ready(self, req: Request) -> None:
         heapq.heappush(self._ready, (-req.priority, self._seq, req))
@@ -597,9 +729,28 @@ class Engine:
 
     def _deliver(self, req: Request, new_toks: list) -> None:
         """Stream delivery at a scheduler sync; the callback may flag a
-        cancellation, which the caller reclaims right after."""
-        if req.stream_cb is not None and new_toks:
+        cancellation, which the caller reclaims right after.
+
+        A RAISING callback is the client's failure, not the batch's:
+        the exception is caught here (it used to propagate out of the
+        scheduler loop and abort every co-resident stream), counted in
+        ``ServeStats.n_callback_errors``, the callback dropped so it is
+        never called again, and the offending request auto-cancelled —
+        its slot is reclaimed at this same sync by the caller's
+        existing cancelled-check, and every other stream is bitwise
+        untouched (delivery never feeds back into token math)."""
+        if req.stream_cb is None or not new_toks:
+            return
+        try:
             req.stream_cb(req, new_toks)
+        except Exception:
+            self.stats.n_callback_errors += 1
+            req.stream_cb = None
+            if self.logger:
+                self.logger.log(event="stream_cb_error", req=req.req_id,
+                                n_tokens=len(req.tokens))
+            if not req.finished and not req.cancelled:
+                self.cancel(req.req_id)
 
     def _append_token(self, req: Request, tok: int, lp, tv, ti) -> None:
         """Record one emitted token plus its logprob surface: chosen
@@ -700,11 +851,32 @@ class Engine:
         if req.cancelled and not req.finished:
             self._finish(slot)
 
+    def _admit_snapshot_into_slot(self, req: Request, slot: int):
+        """Disaggregated admission: one scatter of the shipped state
+        block into ``slot`` — the same ``SlotStatePool.admit`` a prefix
+        restore uses — then install the worker's first token.  No local
+        prefill ran, so prefill_tokens is untouched; the transfer is
+        accounted in the snapshot_* counters."""
+        t0 = self._now()
+        req.t_admit = t0
+        snap = req.snapshot
+        self.pool.admit(slot, snapshot_to_device(snap.state))
+        req.t_first = self._now()
+        self.stats.record_snapshot_admit(n_tokens=int(req.prompt.size),
+                                         nbytes=snap.nbytes)
+        return snap.tok, snap.lp, np.asarray(snap.tv), np.asarray(snap.ti)
+
     def _admit(self, req: Request) -> None:
         slot = self.pool.alloc()
         assert slot is not None
         self.pool.params.set(slot, req.params, req.seed)
-        tok, lp, tv, ti, _ = self._admit_into_slot(req, slot)
+        if req.snapshot is not None:
+            tok, lp, tv, ti = self._admit_snapshot_into_slot(req, slot)
+        else:
+            tok, lp, tv, ti, _ = self._admit_into_slot(req, slot)
+        if req.session:
+            # eviction-free lease: _finish unpins before evicting
+            self.pool.pin(slot)
         self._install(req, slot, tok, lp, tv, ti)
 
     def _branch_request(self, parent: Request, b: int) -> Request:
@@ -760,7 +932,8 @@ class Engine:
             self._install(children[b], slots[b], tok, lp, tv, ti)
 
     def _hit_stop(self, req: Request) -> bool:
-        if len(req.tokens) >= req.max_new:
+        # a session has no token horizon: only stops / cancel end it
+        if not req.session and len(req.tokens) >= req.max_new:
             return True
         if req.stop_ids and req.tokens[-1] in req.stop_ids:
             return True
@@ -785,7 +958,11 @@ class Engine:
             self.stats.record_cancelled()
         else:
             self.stats.record_request(ttft=req.t_first - req.t_submit,
-                                      latency=req.t_done - req.t_submit)
+                                      latency=req.t_done - req.t_submit,
+                                      n_tokens=len(req.tokens),
+                                      tenant=req.tenant)
+        if req.session:
+            self.pool.unpin(slot)
         self.pool.evict(slot)
         self._slot_req[slot] = None
         self._next_tok[slot, 0] = 0
@@ -823,7 +1000,8 @@ class Engine:
         else:
             self.stats.record_request(
                 ttft=parent.t_first - parent.t_submit,
-                latency=parent.t_done - parent.t_submit)
+                latency=parent.t_done - parent.t_submit,
+                n_tokens=len(parent.tokens), tenant=parent.tenant)
         self._finished.append(parent)
         self._by_id.pop(parent.req_id, None)
         if self.logger:
@@ -840,6 +1018,16 @@ class Engine:
             base[s] = len(self._slot_req[s].tokens)
         return base
 
+    @staticmethod
+    def _remaining(req: Request) -> int:
+        """Token budget left before the CERTAIN eviction — a session
+        has none (only stops/cancel end it), so it reports an effectively
+        infinite horizon and must never be the burst planner's certain
+        event."""
+        if req.session:
+            return 1 << 30
+        return req.max_new - len(req.tokens)
+
     def _burst_len(self, active) -> int:
         """Decode steps until the next scheduling event.
 
@@ -854,13 +1042,17 @@ class Engine:
         the burst ends), a streaming callback must be serviced
         regularly (it may cancel mid-stream), a pending prefix-cache
         snapshot offload is waiting for the next host sync (the
-        cache-snapshot deadline), and a free slot plus queued/pending
-        work means an admission check is worth taking."""
-        remaining = min(self._slot_req[s].max_new - len(self._slot_req[s].tokens)
+        cache-snapshot deadline), a free slot plus queued/pending
+        work means an admission check is worth taking, and an
+        infinite-stream session can only ever end on an uncertain
+        event (its ``_remaining`` is unbounded — without the quantum
+        cap the burst would never return to the host)."""
+        remaining = min(self._remaining(self._slot_req[s])
                         for s in active)
         uncertain = any(self._slot_req[s].stop_ids
                         or self._slot_req[s].params.stop_seqs
                         or self._slot_req[s].stream_cb is not None
+                        or self._slot_req[s].session
                         for s in active)
         if self._prefix is not None and self._prefix.has_pending():
             uncertain = True
@@ -924,12 +1116,17 @@ class Engine:
         optimism — pure depth arithmetic, never touches token values,
         so greedy identity survives."""
         dc = self.ecfg.draft
+        # the scheduler's degradation cap composes with (never replaces)
+        # the adaptive clamp: under load the window shrinks to spec_cap
+        # even for a perfectly-accepting slot
+        kmax = (self._spec.k if self.spec_cap is None
+                else max(1, min(self._spec.k, self.spec_cap)))
         # warmup floors at 1 pass: the clamp needs at least one realized
         # pass or the division below has nothing to divide by
         if not dc.adaptive or req.spec_passes < max(1, dc.adapt_warmup):
-            return self._spec.k
+            return kmax
         realized = req.spec_accepted / req.spec_passes
-        return int(min(self._spec.k, max(1, math.ceil(realized) + 1)))
+        return int(min(kmax, max(1, math.ceil(realized) + 1)))
 
     def _spec_pass(self) -> None:
         """One fork -> K-draft -> batched-verify -> rollback pass over
@@ -947,8 +1144,8 @@ class Engine:
         # (stop tokens stay an uncertain event and are still trimmed
         # host-side); adaptive per-slot depth shrinks it further when
         # every slot's realized acceptance is low
-        remaining = min(self._slot_req[s].max_new
-                        - len(self._slot_req[s].tokens) for s in active)
+        remaining = min(self._remaining(self._slot_req[s])
+                        for s in active)
         depths = {s: self._slot_depth(self._slot_req[s]) for s in active}
         k_eff = min(max(depths.values()), remaining - 1)
         if k_eff < 1:

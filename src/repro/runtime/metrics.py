@@ -7,7 +7,12 @@ it logs and counts (tests inject artificial delays).
 
 ServeStats: throughput/latency counters for the continuous-batching
 engine — prefill/decode token counts and wall time, slot occupancy, and
-per-request TTFT/latency distributions."""
+per-request TTFT/TPOT/latency distributions, with per-tenant breakdowns
+and SLO-violation / load-shed counters for the front-end scheduler
+(runtime/scheduler.py).  Cancelled requests stay out of every
+percentile; TPOT (time per OUTPUT token, the decode-side SLO axis) is
+measured from first token to completion over the tokens after the
+first, so a one-token request has no TPOT sample rather than a zero."""
 from __future__ import annotations
 
 import json
@@ -81,10 +86,32 @@ class ServeStats:
         self.prefix_evictions = 0      # snapshots LRU-evicted
         self.prefix_rejects = 0        # snapshots refused (> max_bytes)
         self.prefix_bytes = 0          # bytes currently resident
+        # front-end scheduler (runtime/scheduler.py) + disaggregation
+        # (runtime/disagg.py) — all deterministic counts
+        self.n_shed = 0                # requests rejected by load shedding
+        self.n_degraded = 0            # requests admitted with shrunk n
+        self.n_slo_ttft_violations = 0
+        self.n_slo_tpot_violations = 0
+        self.n_callback_errors = 0     # stream_cb raised (request cancelled)
+        self.snapshot_admits = 0       # slots admitted from a shipped
+        self.snapshot_tokens = 0       #   prefill snapshot (disagg decode
+        self.snapshot_bytes = 0        #   side); bytes = transfer payload
         self._ttft: list[float] = []
+        self._tpot: list[float] = []
         self._latency: list[float] = []
+        self._tenants: dict[str, dict] = {}
         self._t0: Optional[float] = None
         self.wall = 0.0
+
+    def _tenant(self, name: str) -> dict:
+        t = self._tenants.get(name)
+        if t is None:
+            t = self._tenants[name] = {
+                "requests": 0, "shed": 0, "degraded": 0,
+                "slo_ttft_violations": 0, "slo_tpot_violations": 0,
+                "ttft": [], "tpot": [],
+            }
+        return t
 
     def start(self):
         self._t0 = time.perf_counter()
@@ -144,10 +171,64 @@ class ServeStats:
         self.prefix_rejects = counters.get("rejects", 0)
         self.prefix_bytes = counters["bytes"]
 
-    def record_request(self, ttft: float, latency: float):
+    def record_request(self, ttft: float, latency: float,
+                       n_tokens: int = 0, tenant: Optional[str] = None):
         self.n_requests += 1
         self._ttft.append(ttft)
         self._latency.append(latency)
+        tpot = None
+        if n_tokens > 1:
+            tpot = (latency - ttft) / (n_tokens - 1)
+            self._tpot.append(tpot)
+        if tenant is not None:
+            t = self._tenant(tenant)
+            t["requests"] += 1
+            t["ttft"].append(ttft)
+            if tpot is not None:
+                t["tpot"].append(tpot)
+
+    def record_shed(self, tenant: Optional[str] = None):
+        """A request rejected at admission control — it never entered the
+        engine, so it touches no throughput or latency counter."""
+        self.n_shed += 1
+        if tenant is not None:
+            self._tenant(tenant)["shed"] += 1
+
+    def record_degraded(self, tenant: Optional[str] = None):
+        """A request admitted with a shrunk sampling budget (best-of-n
+        collapsed to 1) instead of being shed."""
+        self.n_degraded += 1
+        if tenant is not None:
+            self._tenant(tenant)["degraded"] += 1
+
+    def record_slo_violation(self, kind: str,
+                             tenant: Optional[str] = None):
+        """A completed request that blew its wall-clock SLO budget;
+        ``kind`` is "ttft" or "tpot".  Decision-making never reads these
+        (admission control uses deterministic projected-wait proxies) —
+        they are accounting for dashboards and the serve report."""
+        if kind == "ttft":
+            self.n_slo_ttft_violations += 1
+        elif kind == "tpot":
+            self.n_slo_tpot_violations += 1
+        else:
+            raise ValueError(f"unknown SLO kind: {kind!r}")
+        if tenant is not None:
+            self._tenant(tenant)[f"slo_{kind}_violations"] += 1
+
+    def record_snapshot_admit(self, n_tokens: int, nbytes: int):
+        """Decode-side disaggregated admission: a prefill snapshot
+        (state block + scales + stream position + first-token surface)
+        restored into a slot with one scatter.  ``n_tokens`` is the
+        prompt length the prefill worker consumed on our behalf —
+        deliberately NOT added to prefill_tokens, which stays the honest
+        local compute count.  The first token shipped with the snapshot
+        is delivered to the client, hence useful_tokens += 1 (mirroring
+        record_prefill)."""
+        self.snapshot_admits += 1
+        self.snapshot_tokens += n_tokens
+        self.snapshot_bytes += nbytes
+        self.useful_tokens += 1
 
     def record_cancelled(self):
         """A cancelled request: its slot time already counted in the
@@ -160,7 +241,22 @@ class ServeStats:
         wall = self.wall if self.wall > 0 else (
             self.prefill_time + self.decode_time)
         ttft = sorted(self._ttft)
+        tpot = sorted(self._tpot)
         lat = sorted(self._latency)
+        per_tenant = {}
+        for name in sorted(self._tenants):
+            t = self._tenants[name]
+            tt = sorted(t["ttft"])
+            tp = sorted(t["tpot"])
+            per_tenant[name] = {
+                "requests": t["requests"],
+                "shed": t["shed"],
+                "degraded": t["degraded"],
+                "slo_ttft_violations": t["slo_ttft_violations"],
+                "slo_tpot_violations": t["slo_tpot_violations"],
+                "ttft_p95_s": _percentile(tt, 0.95),
+                "tpot_p95_s": _percentile(tp, 0.95),
+            }
         return {
             "requests": self.n_requests,
             "cancelled": self.n_cancelled,
@@ -173,8 +269,20 @@ class ServeStats:
                           if self.slot_steps else 0.0),
             "ttft_mean_s": sum(ttft) / len(ttft) if ttft else 0.0,
             "ttft_p95_s": _percentile(ttft, 0.95),
+            "tpot_mean_s": sum(tpot) / len(tpot) if tpot else 0.0,
+            "tpot_p95_s": _percentile(tpot, 0.95),
             "latency_mean_s": sum(lat) / len(lat) if lat else 0.0,
             "latency_p95_s": _percentile(lat, 0.95),
+            # front-end scheduler + disaggregation (deterministic counts)
+            "n_shed": self.n_shed,
+            "n_degraded": self.n_degraded,
+            "slo_ttft_violations": self.n_slo_ttft_violations,
+            "slo_tpot_violations": self.n_slo_tpot_violations,
+            "callback_errors": self.n_callback_errors,
+            "snapshot_admits": self.snapshot_admits,
+            "snapshot_tokens": self.snapshot_tokens,
+            "snapshot_bytes": self.snapshot_bytes,
+            "per_tenant": per_tenant,
             # speculative decode: tokens delivered per slot per target
             # pass (1.0 = plain decode; upper bound draft k + 1) and
             # the draft-token acceptance fraction

@@ -89,8 +89,31 @@ class _Entry:
     on_host: bool
 
 
-def _tree_bytes(tree) -> int:
+def tree_bytes(tree) -> int:
+    """Total leaf nbytes of a cache/snapshot pytree — the honest payload
+    size of a snapshot transfer (quantized payloads at storage width,
+    absmax scales included)."""
     return sum(leaf.nbytes for leaf in jax.tree.leaves(tree))
+
+
+# Snapshot transport helpers — shared by the host-store path below and
+# by prefill/decode disaggregation (runtime/disagg.py), which ships the
+# same batch-1 cache pytrees across a worker boundary.  Keeping both
+# directions here means there is exactly one definition of "serialize a
+# state snapshot" in the runtime: payload, scales and stream position
+# always travel as one pytree.
+
+def snapshot_to_host(snap):
+    """Device -> host: one synchronizing device_get of every leaf."""
+    return jax.device_get(snap)
+
+
+def snapshot_to_device(snap):
+    """Host -> device: upload every leaf (no-op on jnp-resident trees)."""
+    return jax.tree.map(jnp.asarray, snap)
+
+
+_tree_bytes = tree_bytes  # internal alias (pre-existing call sites)
 
 
 class PrefixCache:

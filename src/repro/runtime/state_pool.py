@@ -153,6 +153,10 @@ class SlotStatePool:
         # live slot no matter how admission/eviction interleave.
         self._scratch_free: list[int] = list(range(n_slots, self.n_total))
         self._active: list[bool] = [False] * self.n_total
+        # eviction-free leases (infinite-stream sessions): a pinned slot
+        # is active state under an open-ended lease — evicting it is a
+        # bug, not a policy choice, so evict() refuses until unpin.
+        self._pinned: list[bool] = [False] * self.n_total
 
     @property
     def fresh(self):
@@ -183,6 +187,26 @@ class SlotStatePool:
         self._free.remove(slot)
         self._active[slot] = True
         return slot
+
+    # -- eviction-free leases (infinite-stream sessions) --------------------
+
+    @property
+    def n_pinned(self) -> int:
+        return sum(self._pinned)
+
+    def pin(self, slot: int) -> None:
+        """Mark an active slot as holding an open-ended lease: evict()
+        refuses it until unpin().  The scheduler subtracts pinned slots
+        from its effective capacity, so admission-control projections
+        never assume a session slot will free up."""
+        assert self._active[slot], f"slot {slot} not active"
+        self._pinned[slot] = True
+
+    def unpin(self, slot: int) -> None:
+        self._pinned[slot] = False
+
+    def is_pinned(self, slot: int) -> bool:
+        return self._pinned[slot]
 
     # -- scratch slots (speculative-decode draft forks) ---------------------
     #
@@ -305,6 +329,10 @@ class SlotStatePool:
         cannot leak a stale scale into the next admitted sequence.
         """
         assert self._active[slot], f"slot {slot} not active"
+        if self._pinned[slot]:
+            raise RuntimeError(
+                f"slot {slot} holds an eviction-free lease (pinned "
+                "session) — unpin before evicting")
         self.cache = self._scatter_fn(self.cache, self._fresh,
                                       jnp.asarray([slot]))
         self.params.clear(slot)

@@ -1,0 +1,236 @@
+"""Prefill/decode disaggregation + infinite-stream session tests.
+
+The load-bearing contract: a disaggregated prefill -> snapshot ->
+one-scatter decode admission produces token streams BITWISE identical
+to the monolithic engine, per family and per state_dtype — not close,
+identical, because the worker runs the same compiled prefill program
+with the same seed and scatter(gather(x)) is exact data movement.
+
+Sessions: an infinite stream holds its state bytes exactly constant
+while decoding far past both max_new and max_seq (the whole point of a
+max_seq-independent state), its slot is pinned against eviction, and
+families whose cache grows with max_seq are refused up front.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import registry
+from repro.parallel import sharding
+from repro.runtime.disagg import DisaggConfig, DisaggPipeline, PrefillWorker
+from repro.runtime.engine import Engine, EngineConfig
+from repro.runtime.sampling import SamplingParams
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _setup(name):
+    cfg = configs.smoke_variant(configs.get_config(name))
+    cfg = dataclasses.replace(cfg, vocab=64, dtype="float32",
+                              capacity_factor=float(max(cfg.n_experts, 1)))
+    params = sharding.tree_values(
+        registry.init_params(cfg, jax.random.key(0)))
+    return cfg, params
+
+
+DISAGG_ARCHS = ["mamba-130m", "jamba-v0.1-52b", "xlstm-350m"]
+
+
+def _mixed_requests(rng, n=5):
+    """Mixed greedy/sampled, varied lengths — the traffic shape that
+    would expose any seed/params drift between the two serving paths."""
+    out = []
+    for i in range(n):
+        prompt = rng.integers(1, 60, size=int(rng.integers(4, 12)))
+        params = (SamplingParams(max_new=6) if i % 2 == 0 else
+                  SamplingParams(temperature=0.9, top_k=12, max_new=6))
+        out.append((prompt, params))
+    return out
+
+
+@pytest.mark.parametrize("name", DISAGG_ARCHS)
+@pytest.mark.parametrize("state_dtype", ["f32", "int8"])
+def test_disagg_bitwise_identical_to_monolithic(name, state_dtype):
+    """Same submissions, same order: every request's token stream (and
+    cumulative logprob) from the disaggregated pipeline equals the
+    monolithic engine's bitwise."""
+    cfg, params = _setup(name)
+    rng = np.random.default_rng(3)
+    reqs = _mixed_requests(rng)
+    ecfg = EngineConfig(n_slots=2, max_seq=48, seed=11,
+                        state_dtype=state_dtype)
+
+    mono = Engine(cfg, params, ecfg)
+    for prompt, sp in reqs:
+        mono.submit(prompt, sp)
+    ref = {r.req_id: (r.tokens, r.cum_logprob) for r in mono.run()}
+
+    pipe = DisaggPipeline(cfg, params,
+                          EngineConfig(n_slots=2, max_seq=48, seed=11,
+                                       state_dtype=state_dtype),
+                          DisaggConfig(queue_depth=3))
+    items = [pipe.submit(prompt, sp) for prompt, sp in reqs]
+    pipe.run()
+    assert pipe.decode.stats.snapshot_admits == len(reqs)
+    assert pipe.decode.stats.prefill_tokens == 0   # no local prefill ran
+    for i, item in enumerate(items):
+        tokens, cum = ref[i]
+        assert item.req.tokens == tokens, (
+            f"req {i}: disagg stream diverged from monolithic")
+        assert item.req.cum_logprob == cum
+
+
+def test_bounded_transfer_queue_backpressure():
+    """Prefill production stalls at queue_depth: with depth 1 and a
+    1-slot decode pool, the queue never holds more than one snapshot."""
+    cfg, params = _setup("mamba-130m")
+    pipe = DisaggPipeline(cfg, params,
+                          EngineConfig(n_slots=1, max_seq=48, seed=0),
+                          DisaggConfig(queue_depth=1))
+    rng = np.random.default_rng(0)
+    items = [pipe.submit(rng.integers(1, 60, size=6), max_new=4)
+             for _ in range(5)]
+    done = pipe.run()
+    assert len(done) == 5
+    assert pipe.max_queue_depth == 1
+    assert pipe.transfers == 5
+    # every transfer ships the same fixed-size state block
+    assert pipe.transfer_bytes == 5 * items[0].snap.nbytes
+
+
+def test_snapshot_layout_mismatch_rejected():
+    """A snapshot from an incompatible engine (different state_dtype)
+    is refused with a clear error, not silently mis-scattered."""
+    cfg, params = _setup("mamba-130m")
+    worker = PrefillWorker(cfg, params,
+                           EngineConfig(n_slots=1, max_seq=48, seed=0,
+                                        state_dtype="f32"))
+    snap = worker.prefill(np.arange(1, 7), SamplingParams(max_new=4),
+                          seed=1)
+    other = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=48,
+                                             state_dtype="int8"))
+    with pytest.raises(ValueError, match="does not match"):
+        other.submit_snapshot(snap)
+
+
+def test_disagg_rejects_best_of_n():
+    cfg, params = _setup("mamba-130m")
+    pipe = DisaggPipeline(cfg, params, EngineConfig(n_slots=2, max_seq=48))
+    with pytest.raises(ValueError, match="single-stream"):
+        pipe.submit(np.arange(1, 5), SamplingParams(n=2, temperature=1.0,
+                                                    max_new=4))
+
+
+def test_pipeline_cancel_at_every_stage():
+    """Cancel works wherever the request lives: pending (pre-prefill),
+    in the transfer queue, or admitted decode-side."""
+    cfg, params = _setup("mamba-130m")
+    pipe = DisaggPipeline(cfg, params,
+                          EngineConfig(n_slots=1, max_seq=48, seed=0),
+                          DisaggConfig(queue_depth=1))
+    rng = np.random.default_rng(1)
+    items = [pipe.submit(rng.integers(1, 60, size=6), max_new=4)
+             for _ in range(4)]
+    assert pipe.cancel(items[3])          # still pending
+    pipe.step()                            # prefills one into the queue
+    # items[1] is now in the transfer queue (0 admitted decode-side)
+    done = []
+    while pipe.busy():
+        if items[1] in pipe._queue:
+            assert pipe.cancel(items[1])
+        if items[0].req is not None and not items[0].req.finished:
+            pipe.cancel(items[0])          # admitted: engine-side cancel
+        pipe.step()
+    pipe.decode.stats.stop()
+    finished = pipe.decode._finished
+    ids = {r.req_id for r in finished}
+    assert items[2].req is not None and items[2].req.req_id in ids
+    assert items[2].req.tokens and not items[2].req.cancelled
+    assert items[3].req is None            # never prefilled
+
+
+# ---------------------------------------------------------------------------
+# Infinite-stream sessions
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["mamba-130m", "xlstm-350m"])
+def test_session_state_bytes_constant_past_horizon(name):
+    """An infinite-stream session decodes >= 4x max_new tokens (well
+    past max_seq too) with the pool's cache byte-for-byte constant in
+    SHAPE: every leaf keeps its shape and nbytes at every sync."""
+    cfg, params = _setup(name)
+    ecfg = EngineConfig(n_slots=2, max_seq=16, seed=3)
+    eng = Engine(cfg, params, ecfg)
+    req = eng.submit(np.arange(1, 6), max_new=8, session=True)
+    shapes0 = [(leaf.shape, leaf.nbytes)
+               for leaf in jax.tree.leaves(eng.pool.cache)]
+    bytes0 = eng.pool.state_bytes_per_slot()
+    while len(req.tokens) < 4 * 8:
+        eng.step()
+        shapes = [(leaf.shape, leaf.nbytes)
+                  for leaf in jax.tree.leaves(eng.pool.cache)]
+        assert shapes == shapes0
+        assert eng.pool.state_bytes_per_slot() == bytes0
+    assert len(req.tokens) >= 4 * 8 > ecfg.max_seq
+    assert eng.pool.n_pinned == 1
+    eng.cancel(req.req_id)
+    eng.step()
+    assert req.finished and eng.pool.n_pinned == 0
+
+
+def test_session_refused_for_growable_cache():
+    """jamba's per-position KV strips grow with max_seq — an infinite
+    session there would exhaust the strip, so it is refused up front."""
+    cfg, params = _setup("jamba-v0.1-52b")
+    eng = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=16))
+    with pytest.raises(ValueError, match="max_seq-independent"):
+        eng.submit(np.arange(1, 5), session=True)
+
+
+def test_session_slot_pinned_against_evict():
+    """The pool refuses to evict a pinned lease directly."""
+    cfg, params = _setup("mamba-130m")
+    eng = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=16))
+    req = eng.submit(np.arange(1, 5), session=True)
+    eng.step()
+    slot = eng._slot_req.index(req)
+    with pytest.raises(RuntimeError, match="eviction-free lease"):
+        eng.pool.evict(slot)
+    eng.cancel(req.req_id)
+    eng.step()
+
+
+def test_session_coexists_with_bounded_requests():
+    """A session pins one slot while bounded requests churn through the
+    rest; the bounded streams finish normally and the session keeps
+    flowing."""
+    cfg, params = _setup("mamba-130m")
+    eng = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=32, seed=5))
+    sess = eng.submit(np.arange(1, 5), session=True)
+    rng = np.random.default_rng(2)
+    bounded = [eng.submit(rng.integers(1, 60, size=6), max_new=5)
+               for _ in range(3)]
+    while not all(r.finished for r in bounded):
+        eng.step()
+    assert all(len(r.tokens) == 5 for r in bounded)
+    assert not sess.finished and len(sess.tokens) > 0
+    eng.cancel(sess.req_id)
+    eng.step()
+
+
+def test_disagg_session_streams():
+    """Sessions compose with disaggregation: prefill remotely, decode
+    an unbounded stream locally."""
+    cfg, params = _setup("mamba-130m")
+    pipe = DisaggPipeline(cfg, params,
+                          EngineConfig(n_slots=1, max_seq=16, seed=0))
+    item = pipe.submit(np.arange(1, 6), session=True)
+    while item.req is None or len(item.req.tokens) < 40:
+        pipe.step()
+    assert pipe.decode.pool.n_pinned == 1
+    pipe.cancel(item)
+    pipe.step()
+    assert item.req.finished and pipe.decode.pool.n_pinned == 0

@@ -492,3 +492,45 @@ def test_abandoned_lease_released_when_burst_aborts(monkeypatch):
         eng.run()
     assert eng.pool.n_scratch_free == eng.pool.n_scratch, \
         "aborted burst leaked a scratch lease"
+
+
+def test_raising_stream_cb_isolated_and_auto_cancelled():
+    """A client callback that raises must not take down the scheduler
+    loop: the error is counted, the offender's stream is auto-cancelled
+    at that sync, and co-resident streams — including a SAMPLED one —
+    are bitwise untouched."""
+    cfg, params = _setup("mamba-130m")
+    pa, pb, pc, sp = _cancel_fixture(cfg)
+    # reference: the same trace with the offender never submitted
+    ref = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=64,
+                                           sched_quantum=2))
+    a0 = ref.submit(pa, params=sp)
+    c0 = ref.submit(pc, max_new=6)
+    ref.run()
+
+    eng = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=64,
+                                           sched_quantum=2))
+    a_deliveries = []
+
+    def good_cb(req, toks):
+        a_deliveries.append(list(toks))
+
+    def bad_cb(req, toks):
+        raise RuntimeError("client connection went away")
+
+    a = eng.submit(pa, params=sp, stream_cb=good_cb)
+    b = eng.submit(pb, max_new=12, stream_cb=bad_cb)
+    c = eng.submit(pc, max_new=6)          # backfills the freed slot
+    eng.run()                              # must NOT raise
+    assert eng.stats.n_callback_errors == 1
+    assert b.stream_cb is None             # offender's cb dropped
+    assert b.cancelled and b.finished
+    assert len(b.tokens) < 12              # stopped short of its budget
+    assert a.tokens == a0.tokens, \
+        "sampled survivor perturbed by a co-resident callback failure"
+    assert c.tokens == c0.tokens
+    # the healthy callback saw a's complete stream, before and after
+    # the offender was dropped
+    assert [t for batch in a_deliveries for t in batch] == a.tokens
+    assert eng.pool.n_active == 0 and eng.pool.n_free == eng.pool.n_slots
+    assert eng.stats.n_cancelled == 1

@@ -1,0 +1,211 @@
+"""Async front-end tests — every test runs under a HARD asyncio
+deadline (``asyncio.wait_for``), so a pump deadlock fails fast instead
+of hanging CI.  No pytest-asyncio dependency: each test drives its own
+``asyncio.run``.
+"""
+import asyncio
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import registry
+from repro.parallel import sharding
+from repro.runtime.engine import Engine, EngineConfig
+from repro.runtime.frontend import AsyncFrontend
+from repro.runtime.sampling import SamplingParams
+from repro.runtime.scheduler import SchedConfig, SLOClass, SLOScheduler
+
+jax.config.update("jax_platform_name", "cpu")
+
+DEADLINE_S = 120.0
+
+
+def _setup(name="mamba-130m"):
+    cfg = configs.smoke_variant(configs.get_config(name))
+    cfg = dataclasses.replace(cfg, vocab=64, dtype="float32",
+                              capacity_factor=float(max(cfg.n_experts, 1)))
+    params = sharding.tree_values(
+        registry.init_params(cfg, jax.random.key(0)))
+    return cfg, params
+
+
+def _run(coro):
+    asyncio.run(asyncio.wait_for(coro, DEADLINE_S))
+
+
+def test_stream_tokens_match_engine_run():
+    """The async iterator delivers exactly the tokens a plain
+    ``Engine.run`` of the same submissions produces (bitwise — the
+    front-end is plumbing, not math), including sampled streams."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, 60, size=6) for _ in range(4)]
+    sps = [SamplingParams(max_new=5),
+           SamplingParams(temperature=0.8, top_k=8, max_new=5, seed=3),
+           SamplingParams(max_new=5),
+           SamplingParams(temperature=1.1, top_p=0.9, max_new=5, seed=4)]
+
+    ref_eng = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=32,
+                                               seed=1))
+    for p, sp in zip(prompts, sps):
+        ref_eng.submit(p, sp)
+    ref = [r.tokens for r in sorted(ref_eng.run(),
+                                    key=lambda r: r.req_id)]
+
+    async def main():
+        eng = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=32,
+                                               seed=1))
+        async with AsyncFrontend(eng) as fe:
+            handles = [await fe.submit(p, sp)
+                       for p, sp in zip(prompts, sps)]
+            streams = []
+            for h in handles:
+                toks = [t async for t in h.tokens()]
+                req = await h.result()
+                assert req.tokens == toks
+                streams.append(toks)
+        assert streams == ref
+
+    _run(main())
+
+
+def test_concurrent_consumers_interleave():
+    """Two clients consuming their streams concurrently each see their
+    own complete stream."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(1)
+
+    async def main():
+        eng = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=32,
+                                               seed=2))
+        async with AsyncFrontend(eng) as fe:
+            ha = await fe.submit(rng.integers(1, 60, size=6), max_new=6)
+            hb = await fe.submit(rng.integers(1, 60, size=6), max_new=6)
+
+            async def consume(h):
+                return [t async for t in h.tokens()]
+
+            ta, tb = await asyncio.gather(consume(ha), consume(hb))
+            ra, rb = await ha.result(), await hb.result()
+            assert ra.tokens == ta and rb.tokens == tb
+            assert len(ta) == 6 and len(tb) == 6
+
+    _run(main())
+
+
+def test_cancel_mid_stream_ends_iterator():
+    cfg, params = _setup()
+    rng = np.random.default_rng(2)
+
+    async def main():
+        eng = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=64,
+                                               seed=0, sched_quantum=2))
+        async with AsyncFrontend(eng) as fe:
+            h = await fe.submit(rng.integers(1, 60, size=5), max_new=40)
+            got = []
+            async for tok in h.tokens():
+                got.append(tok)
+                if len(got) == 4:
+                    await fe.cancel(h)
+            req = await h.result()
+            assert req.cancelled and req.finished
+            # tokens already delivered stand; no unbounded overrun past
+            # the cancel sync
+            assert len(got) >= 4 and len(got) < 40
+
+    _run(main())
+
+
+def test_shed_handle_resolves_with_empty_stream():
+    """Admission-control rejection IS the response: the handle resolves
+    immediately, shed=True, zero tokens.  Deterministic under the
+    concurrent pump: a session pins the ONLY slot, so the projected
+    wait for the next request is inf regardless of decode progress."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(3)
+
+    async def main():
+        eng = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=16,
+                                               seed=0))
+        sched = SLOScheduler(eng, SchedConfig(
+            weights={"t": 1.0}, classes=(SLOClass(ttft_budget=20),)))
+        async with AsyncFrontend(eng, sched) as fe:
+            sess = await fe.submit(rng.integers(1, 60, size=4),
+                                   tenant="t", session=True)
+            # one token out => the session is admitted and its lease
+            # pinned; from here effective slots == 0, projection == inf
+            agen = sess.tokens()
+            await agen.__anext__()
+            await agen.aclose()
+            shed = await fe.submit(rng.integers(1, 60, size=4),
+                                   tenant="t", max_new=8)
+            assert shed.shed
+            toks = [t async for t in shed.tokens()]
+            assert toks == [] and await shed.result() is None
+            await fe.cancel(sess)
+            res = await sess.result()
+            assert res.cancelled
+        assert eng.stats.n_shed == 1
+
+    _run(main())
+
+
+def test_tenant_context_binds_labels():
+    cfg, params = _setup()
+    rng = np.random.default_rng(4)
+
+    async def main():
+        eng = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=32,
+                                               seed=0))
+        sched = SLOScheduler(eng, SchedConfig(
+            weights={"acme": 2.0}, classes=(SLOClass(ttft_budget=999),)))
+        async with AsyncFrontend(eng, sched) as fe:
+            acme = fe.tenant("acme")
+            h = await acme.submit(rng.integers(1, 60, size=5), max_new=4)
+            req = await h.result()
+            assert req.tenant == "acme"
+        assert eng.stats.summary()["per_tenant"]["acme"]["requests"] == 1
+
+    _run(main())
+
+
+def test_stop_drains_infinite_session():
+    """Context-manager exit cancels live sessions so no slot stays
+    pinned and every handle resolves — the eviction-free lease ends
+    with the connection."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(5)
+
+    async def main():
+        eng = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=16,
+                                               seed=0))
+        async with AsyncFrontend(eng) as fe:
+            h = await fe.submit(rng.integers(1, 60, size=4),
+                                session=True)
+            got = []
+            async for tok in h.tokens():
+                got.append(tok)
+                if len(got) >= 12:
+                    break                 # client walks away mid-stream
+            assert eng.pool.n_pinned == 1
+        # __aexit__ drained: session cancelled, lease released
+        assert eng.pool.n_pinned == 0
+        assert h.finished and h.req.cancelled
+        assert len(h.req.tokens) >= 12
+
+    _run(main())
+
+
+def test_submit_before_start_raises():
+    cfg, params = _setup()
+
+    async def main():
+        eng = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=32))
+        fe = AsyncFrontend(eng)
+        with pytest.raises(RuntimeError, match="not started"):
+            await fe.submit(np.arange(1, 5), max_new=4)
+
+    _run(main())

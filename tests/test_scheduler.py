@@ -1,0 +1,240 @@
+"""SLO scheduler invariants — all asserted deterministically.
+
+No wall-clock enters any assertion: WFQ order, shed counts and the
+degradation ladder are functions of (submission order, token counts,
+config) only, and the one wall-clock surface (SLO violation
+accounting) is tested under an injected fake clock.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import registry
+from repro.parallel import sharding
+from repro.runtime.engine import Engine, EngineConfig
+from repro.runtime.sampling import SamplingParams
+from repro.runtime.scheduler import SchedConfig, SLOClass, SLOScheduler
+from repro.runtime.spec_decode import DraftConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _setup(name="mamba-130m"):
+    cfg = configs.smoke_variant(configs.get_config(name))
+    cfg = dataclasses.replace(cfg, vocab=64, dtype="float32",
+                              capacity_factor=float(max(cfg.n_experts, 1)))
+    params = sharding.tree_values(
+        registry.init_params(cfg, jax.random.key(0)))
+    return cfg, params
+
+
+def _prompt(rng, n=4):
+    return rng.integers(1, 60, size=n)
+
+
+def test_wfq_no_starvation_under_adversarial_burst():
+    """Tenant 'heavy' floods 10 requests before 'light' submits 3;
+    equal weights and costs.  Start-time fair queuing interleaves them
+    1:1 — light's requests land in the first admissions instead of
+    behind the flood, and no backlogged tenant is ever passed over more
+    than twice between its own admissions."""
+    cfg, params = _setup()
+    eng = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=32, seed=0))
+    sched = SLOScheduler(eng, SchedConfig(
+        weights={"heavy": 1.0, "light": 1.0},
+        classes=(SLOClass(ttft_budget=10_000),)))
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        sched.submit(_prompt(rng), tenant="heavy", max_new=4)
+    for _ in range(3):
+        sched.submit(_prompt(rng), tenant="light", max_new=4)
+    done = sched.run()
+    assert len(done) == 13
+    order = sched.admitted_order
+    # every light request admitted within the fair-interleave window,
+    # not after the flood
+    light_pos = [i for i, t in enumerate(order) if t == "light"]
+    assert light_pos == [1, 3, 5], order
+    assert sched.starvation_bound <= 2
+    assert sched.counters()["shed"] == 0
+
+
+def test_wfq_weights_bias_admission_share():
+    """A weight-4 tenant's virtual finish advances 4x slower, so its
+    backlog admits ~4:1 against a weight-1 tenant."""
+    cfg, params = _setup()
+    eng = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=32, seed=0))
+    sched = SLOScheduler(eng, SchedConfig(
+        weights={"heavy": 1.0, "premium": 4.0},
+        classes=(SLOClass(ttft_budget=10_000),)))
+    rng = np.random.default_rng(1)
+    for _ in range(6):
+        sched.submit(_prompt(rng), tenant="heavy", max_new=4)
+    for _ in range(4):
+        sched.submit(_prompt(rng), tenant="premium", max_new=4)
+    sched.run()
+    first5 = sched.admitted_order[:5]
+    assert first5.count("premium") >= 3, sched.admitted_order
+    assert sched.starvation_bound <= 4
+
+
+def test_shed_exact_counts_before_budget_violation():
+    """1-slot pool, cost 12 per request (4 prompt + 8 decode), TTFT
+    budget 20 service steps: the third and fourth submissions project
+    24 steps of wait and are shed AT THE DOOR — deterministically, by
+    arithmetic, before any resident request is disturbed."""
+    cfg, params = _setup()
+    eng = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=32, seed=0))
+    sched = SLOScheduler(eng, SchedConfig(
+        weights={"t": 1.0}, classes=(SLOClass(ttft_budget=20),)))
+    rng = np.random.default_rng(2)
+    tickets = [sched.submit(_prompt(rng), tenant="t", max_new=8)
+               for _ in range(4)]
+    assert [t.shed for t in tickets] == [False, False, True, True]
+    done = sched.run()
+    # shed requests never reached the engine; admitted ones ran to
+    # their full budget untouched
+    assert len(done) == 2
+    assert all(len(r.tokens) == 8 for r in done)
+    assert eng.stats.n_shed == 2
+    assert eng.stats.summary()["per_tenant"]["t"]["shed"] == 2
+
+
+def test_degradation_ladder_shrinks_best_of_n_then_sheds():
+    """Between degrade_n_frac and 1.0 of the budget, a best-of-n
+    request is admitted at n=1 (branch 0 is bitwise the n=1 serve)
+    instead of shed; past the budget it sheds."""
+    cfg, params = _setup()
+    eng = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=32, seed=0))
+    sched = SLOScheduler(eng, SchedConfig(
+        weights={"t": 1.0},
+        classes=(SLOClass(ttft_budget=20),),
+        degrade_n_frac=0.5))
+    rng = np.random.default_rng(3)
+    sp_n2 = SamplingParams(temperature=1.0, n=2, max_new=8, seed=9)
+    # backlog 16/2 slots = 8 projected: over 0.5*20, under 20
+    sched.submit(_prompt(rng), tenant="t", max_new=12)
+    sched.submit(_prompt(rng), tenant="t", max_new=12)
+    t_deg = sched.submit(_prompt(rng), sp_n2, tenant="t")
+    assert t_deg.degraded and not t_deg.shed
+    # push the backlog past the budget: next one sheds
+    t_shed = sched.submit(_prompt(rng), sp_n2, tenant="t")
+    assert t_shed.shed
+    done = sched.run()
+    assert eng.stats.n_degraded == 1 and eng.stats.n_shed == 1
+    deg = t_deg.req
+    assert deg is not None and deg.params.n == 1
+    assert len(deg.tokens) == 8
+    assert len(done) == 3
+
+
+def test_spec_depth_capped_under_pressure_and_restored():
+    """Rung 1: backlog past spec_degrade_frac caps speculative depth
+    engine-wide (host-side only — no retrace); a later low-pressure
+    submit restores it."""
+    cfg, params = _setup()
+    eng = Engine(cfg, params,
+                 EngineConfig(n_slots=1, max_seq=32, seed=0,
+                              draft=DraftConfig(k=3, layers=0)))
+    sched = SLOScheduler(eng, SchedConfig(
+        weights={"t": 1.0}, classes=(SLOClass(ttft_budget=100),),
+        spec_degrade_frac=0.2))
+    rng = np.random.default_rng(4)
+    sched.submit(_prompt(rng), tenant="t", max_new=8)      # backlog 0
+    assert eng.spec_cap is None
+    for _ in range(3):
+        sched.submit(_prompt(rng), tenant="t", max_new=8)
+    assert eng.spec_cap == 1          # 12..36 projected > 0.2 * 100
+    done = sched.run()
+    assert all(len(r.tokens) == 8 for r in done)
+    sched.submit(_prompt(rng), tenant="t", max_new=8)      # backlog clear
+    assert eng.spec_cap is None
+    sched.run()
+
+
+def test_nonsheddable_class_never_rejected():
+    """sheddable=False means degrade-only: under heavy overload every
+    request is still admitted (and may violate, which is accounting's
+    problem, not admission's)."""
+    cfg, params = _setup()
+    eng = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=32, seed=0))
+    sched = SLOScheduler(eng, SchedConfig(
+        weights={"t": 1.0},
+        classes=(SLOClass(name="critical", ttft_budget=4,
+                          sheddable=False),),
+        default_class="critical"))
+    rng = np.random.default_rng(5)
+    for _ in range(6):
+        sched.submit(_prompt(rng), tenant="t", max_new=8)
+    done = sched.run()
+    assert len(done) == 6
+    assert eng.stats.n_shed == 0
+
+
+def test_session_lease_excluded_from_capacity_projection():
+    """A pinned session slot is capacity the projection must not count
+    on: with 1 of 2 slots leased, queued work projects against ONE
+    effective slot."""
+    cfg, params = _setup()
+    eng = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=16, seed=0))
+    sched = SLOScheduler(eng, SchedConfig(
+        weights={"t": 1.0}, classes=(SLOClass(ttft_budget=10_000),)))
+    rng = np.random.default_rng(6)
+    sess = sched.submit(_prompt(rng), tenant="t", session=True)
+    sched.step()                       # admit + pin the session
+    assert eng.pool.n_pinned == 1
+    sched.submit(_prompt(rng), tenant="t", max_new=8)   # cost 12 queued
+    assert sched.projected_wait() == pytest.approx(12.0)
+    eng.cancel(sess.req.req_id)
+    sched.run()
+
+
+def test_slo_violation_accounting_with_fake_clock():
+    """Wall-clock SLO budgets count violations per tenant — under an
+    injected clock (1s per reading), every request blows a 1ms TTFT
+    budget, deterministically."""
+    cfg, params = _setup()
+    t = [0.0]
+
+    def clock():
+        t[0] += 1.0
+        return t[0]
+
+    eng = Engine(cfg, params, EngineConfig(n_slots=2, max_seq=32, seed=0),
+                 clock=clock)
+    sched = SLOScheduler(eng, SchedConfig(
+        weights={"a": 1.0, "b": 1.0},
+        classes=(SLOClass(ttft_budget=10_000, ttft_slo_s=0.001,
+                          tpot_slo_s=0.001),)))
+    rng = np.random.default_rng(7)
+    for tenant in ("a", "a", "b"):
+        sched.submit(_prompt(rng), tenant=tenant, max_new=4)
+    sched.run()
+    s = eng.stats.summary()
+    assert s["slo_ttft_violations"] == 3
+    assert s["slo_tpot_violations"] == 3
+    assert s["per_tenant"]["a"]["slo_ttft_violations"] == 2
+    assert s["per_tenant"]["b"]["slo_ttft_violations"] == 1
+    # TPOT distributions populated alongside TTFT
+    assert s["tpot_p95_s"] > 0 and s["per_tenant"]["a"]["tpot_p95_s"] > 0
+
+
+def test_cancelled_requests_stay_out_of_percentiles():
+    """A cancelled request contributes to n_cancelled, never to the
+    TTFT/TPOT/latency distributions."""
+    cfg, params = _setup()
+    eng = Engine(cfg, params, EngineConfig(n_slots=1, max_seq=32, seed=0))
+    rng = np.random.default_rng(8)
+    keep = eng.submit(_prompt(rng), max_new=4, tenant="t")
+    kill = eng.submit(_prompt(rng), max_new=4, tenant="t")
+    eng.step()
+    eng.cancel(kill.req_id)
+    eng.run()
+    s = eng.stats.summary()
+    assert s["requests"] == 1 and s["cancelled"] == 1
+    assert len(eng.stats._ttft) == 1
+    assert s["per_tenant"]["t"]["requests"] == 1
+    assert keep.finished and len(keep.tokens) == 4
